@@ -1,0 +1,61 @@
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables.
+
+Usage: PYTHONPATH=src python benchmarks/roofline_report.py [results/dryrun_baseline.jsonl]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main(path: str = "results/dryrun_baseline.jsonl") -> None:
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    fails = [r for r in rows if r.get("status") != "ok"]
+
+    print("### Single-pod (16x16 = 256 chips) roofline — all 40 (arch x shape) pairs\n")
+    print("| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS | useful | HBM/dev | top collective source |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "16x16":
+            continue
+        top = max(r["wire_by_kind"], key=r["wire_by_kind"].get) if r["wire_by_kind"] else "-"
+        topv = r["wire_by_kind"].get(top, 0.0)
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{r['per_device_hbm_gb']:.1f}GB | {top} ({topv/1e9:.1f}GB) |"
+        )
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) — lowering proof\n")
+    print("| arch | shape | status | nodes | dominant | HBM/dev | collectives in HLO |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != "2x16x16":
+            continue
+        if r.get("status") == "ok":
+            kinds = ",".join(f"{k}:{v}" for k, v in sorted(r["collective_ops"].items()))
+            print(
+                f"| {r['arch']} | {r['shape']} | ok | {r['num_nodes']} | "
+                f"{r['dominant']} | {r['per_device_hbm_gb']:.1f}GB | {kinds} |"
+            )
+        else:
+            print(f"| {r['arch']} | {r['shape']} | {r['status']} | | | | |")
+
+    if fails:
+        print(f"\nFAILURES: {len(fails)}")
+    print(f"\nTotal: {len(ok)}/{len(rows)} ok")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

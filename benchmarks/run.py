@@ -1,0 +1,167 @@
+"""Benchmark harness — one entry per paper table/figure plus kernel and
+roofline benches. Prints ``name,us_per_call,derived`` CSV lines.
+
+Default mode is quick (reduced rounds/nodes, same structure) so the harness
+completes in minutes; ``--full`` reproduces the EXPERIMENTS.md configuration
+(hours — run in the background). The dry-run/roofline rows are read from
+results/dryrun_baseline.jsonl (produced by ``python -m repro.launch.dryrun
+--all``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _csv(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+# --- paper figures ---------------------------------------------------------
+
+
+def bench_fig1_3_er(full: bool) -> None:
+    from paper_experiments import ExpSettings, er_experiments
+
+    s = ExpSettings() if full else ExpSettings.quick()
+    t0 = time.time()
+    outs = er_experiments(s)
+    us = (time.time() - t0) * 1e6 / max(len(outs), 1)
+    # derived: the paper's claim — hub-focus beats edge-focus on mean accuracy
+    hub = np.mean([o["final_mean_acc"] for o, _ in outs if o["extra"]["focus"] == "hub"])
+    edge = np.mean([o["final_mean_acc"] for o, _ in outs if o["extra"]["focus"] == "edge"])
+    _csv("fig1-3_er_accuracy", us, f"hub_mean={hub:.4f};edge_mean={edge:.4f};hub>edge={hub > edge}")
+
+
+def bench_fig4_6_ba(full: bool) -> None:
+    from paper_experiments import ExpSettings, ba_experiments
+
+    s = ExpSettings() if full else ExpSettings.quick()
+    t0 = time.time()
+    outs = ba_experiments(s)
+    us = (time.time() - t0) * 1e6 / max(len(outs), 1)
+    hub = [o["final_mean_acc"] for o, _ in outs if o["extra"]["focus"] == "hub"]
+    edge = np.mean([o["final_mean_acc"] for o, _ in outs if o["extra"]["focus"] == "edge"])
+    spread = max(hub) - min(hub) if hub else 0.0
+    _csv(
+        "fig4-6_ba_accuracy", us,
+        f"hub_m_spread={spread:.4f};edge_mean={edge:.4f};hub_m_insensitive={spread < 0.05}",
+    )
+
+
+def bench_fig7_table1_sbm(full: bool) -> None:
+    from paper_experiments import ExpSettings, sbm_experiments
+
+    s = ExpSettings() if full else ExpSettings.quick()
+    t0 = time.time()
+    outs = sbm_experiments(s)
+    us = (time.time() - t0) * 1e6 / max(len(outs), 1)
+    acc = {o[0]["extra"]["p_in"]: o[0]["final_mean_acc"] for o in outs}
+    _csv(
+        "fig7_table1_sbm", us,
+        f"acc_pin0.5={acc.get(0.5, 0):.4f};acc_pin0.8={acc.get(0.8, 0):.4f};"
+        f"loose>tight={acc.get(0.5, 0) > acc.get(0.8, 0)}",
+    )
+
+
+# --- kernel + core micro-benches ------------------------------------------
+
+
+def bench_gossip_kernel(full: bool) -> None:
+    """Pallas gossip_mix (interpret on CPU) vs XLA dense mix: correctness
+    cost + per-call time. On-TPU timing is N/A in this container; the derived
+    column reports max|err| vs the oracle."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    n, d = (128, 1 << 16) if full else (128, 4096)
+    key = jax.random.PRNGKey(0)
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), -1)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n, d), jnp.float32)
+
+    out_k = ops.gossip_mix(w, p, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k - ref.gossip_mix_ref(w, p))))
+
+    f = jax.jit(lambda w, p: ref.gossip_mix_ref(w, p))
+    f(w, p).block_until_ready()
+    t0 = time.time()
+    reps = 20
+    for _ in range(reps):
+        f(w, p).block_until_ready()
+    us = (time.time() - t0) * 1e6 / reps
+    _csv("gossip_mix_kernel", us, f"max_err_vs_ref={err:.2e};timing=xla_dense_equivalent")
+
+
+def bench_decavg_round(full: bool) -> None:
+    """One full DecAvg round (local steps + gossip) wall time."""
+    from repro.core import partition as P, topology as T
+    from repro.data.loader import NodeLoader
+    from repro.data.synthetic import make_mnist_like
+    from repro.train.trainer import DecentralizedTrainer
+
+    ds = make_mnist_like(train_per_class=200, test_per_class=20, seed=0)
+    g = T.erdos_renyi(100 if full else 40, 0.05, seed=0)
+    parts = P.iid(ds.y_train, g.num_nodes, seed=1)
+    loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
+    tr = DecentralizedTrainer(g, loader)
+    tr.run(1)  # compile
+    t0 = time.time()
+    reps = 5
+    tr.run(reps)
+    us = (time.time() - t0) * 1e6 / reps
+    _csv("decavg_round", us, f"nodes={g.num_nodes};params_per_node=0.57M")
+
+
+# --- roofline/dry-run reader ------------------------------------------------
+
+
+def bench_roofline(full: bool) -> None:
+    path = os.path.join(RESULTS, "dryrun_baseline.jsonl")
+    if not os.path.exists(path):
+        _csv("roofline_table", 0.0, "missing:run `python -m repro.launch.dryrun --all` first")
+        return
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    doms: dict[str, int] = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    dom_str = "/".join(f"{k}:{v}" for k, v in sorted(doms.items()))
+    _csv("roofline_table", 0.0, f"combinations_ok={len(ok)}of{len(rows)};dominant={dom_str}")
+
+
+BENCHES = {
+    "fig1-3_er": bench_fig1_3_er,
+    "fig4-6_ba": bench_fig4_6_ba,
+    "fig7_table1_sbm": bench_fig7_table1_sbm,
+    "gossip_kernel": bench_gossip_kernel,
+    "decavg_round": bench_decavg_round,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="EXPERIMENTS.md configuration")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn(args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""End-to-end driver: decentralized training of a transformer LM cohort.
+
+Four DecAvg nodes, each with a domain-skewed token stream (the LLM analogue
+of the paper's non-IID label split), train a ~20M-param llama-family model
+for a few hundred steps on CPU, gossiping weights over a ring topology every
+step. The full-scale (1B-480B x 256/512-chip) version of this exact step
+function is what launch/dryrun.py lowers and compiles.
+
+Run:  PYTHONPATH=src python examples/decentralized_llm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import base as cfgbase
+from repro.core import mixing, topology as T
+from repro.data import tokens as tok
+from repro.launch import steps as ST
+from repro.models import transformer as TF
+from repro.optim import adamw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--ckpt", default=None, help="save final state here (.npz)")
+    args = ap.parse_args()
+
+    # ~20M-param member model: the assigned arch's family, CPU-sized.
+    cfg = dataclasses.replace(
+        cfgbase.get(args.arch),
+        num_layers=4,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=1024,
+        vocab_size=8192,
+        param_dtype="float32",
+        optimizer="adamw",
+    )
+    n = args.nodes
+
+    # Ring topology: the classic decentralized baseline.
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
+    g = T.Graph(adj=adj, name=f"ring({n})")
+    w = jnp.asarray(mixing.decavg_matrix(g, np.ones(n)), jnp.float32)
+
+    key = jax.random.PRNGKey(0)
+    per_node = TF.init_params(key, cfg)
+    params = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), per_node)
+    print(f"member model: {TF.param_count(per_node)/1e6:.1f}M params x {n} nodes ({g.name})")
+    opt = adamw.init(params)
+
+    step_fn = jax.jit(
+        ST.build_train_step(cfg, num_nodes=n, optimizer="adamw", lr=3e-4)
+    )
+
+    data = tok.token_batches(
+        n, args.batch, args.seq, cfg.vocab_size, steps=args.steps, seed=0
+    )
+    t0 = time.time()
+    loss0 = None
+    for i, (toks, labels) in enumerate(data):
+        batch = {
+            "tokens": jnp.asarray(toks)[None],   # leading microbatch axis
+            "labels": jnp.asarray(labels)[None],
+        }
+        params, opt, loss = step_fn(params, opt, w, batch)
+        if loss0 is None:
+            loss0 = float(loss)
+        if i % 25 == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:4d}  loss {float(loss):.4f}  ({dt:.0f}s)")
+
+    print(f"\nloss {loss0:.3f} -> {float(loss):.3f} over {args.steps} steps")
+    # all ring nodes stay in consensus-ish: check parameter spread
+    from repro.core.decavg import gossip_error
+
+    print(f"consensus distance across nodes: {float(gossip_error(params)):.2e}")
+    if args.ckpt:
+        ckpt.save(args.ckpt, {"params": params, "opt": opt._asdict()}, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: fully decentralized learning (DecAvg) over an ER graph.
+
+30 nodes, non-IID data (hub-focused), 30 communication rounds on CPU.
+Shows the paper's core object: per-node accuracy over rounds, and how
+knowledge about classes 5-9 (held only by 3 hub nodes) spreads.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import partition as P, topology as T
+from repro.core.mixing import decavg_matrix, spectral_gap
+from repro.data.loader import NodeLoader
+from repro.data.synthetic import make_mnist_like
+from repro.train.trainer import DecentralizedTrainer
+
+
+def main() -> None:
+    print("== data ==")
+    ds = make_mnist_like(train_per_class=600, test_per_class=60, seed=0)
+    print(f"train {ds.x_train.shape}, test {ds.x_test.shape}, {ds.num_classes} classes")
+
+    print("\n== topology ==")
+    g = T.erdos_renyi(30, 0.15, seed=0)
+    print(f"{g.name}: {g.num_edges} edges, degrees {g.degrees().min()}..{g.degrees().max()}")
+
+    parts = P.hub_focused(ds.y_train, g, seed=1)
+    summ = P.partition_summary(ds.y_train, parts)
+    holders = np.flatnonzero(summ[:, 5:].sum(axis=1) > 0)
+    print(f"hub-focused: classes 5-9 held only by nodes {holders.tolist()}")
+
+    loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
+    w = decavg_matrix(g, loader.sizes.astype(float))
+    print(f"mixing spectral gap: {spectral_gap(w):.4f}")
+
+    print("\n== decentralized training (DecAvg) ==")
+    tr = DecentralizedTrainer(g, loader, lr=0.02, momentum=0.9, seed=0)
+    tr.run(30, eval_every=5, x_test=ds.x_test, y_test=ds.y_test, verbose=True)
+
+    print("\n== knowledge spread ==")
+    accs, cms = tr._eval_jit(tr.params, ds.x_test, ds.y_test)
+    cms = np.asarray(cms)
+    non_holders = [n for n in range(30) if n not in holders]
+    g2_recall = cms[non_holders][:, 5:, :].diagonal(offset=5, axis1=1, axis2=2).mean()
+    print(f"mean recall on never-seen classes 5-9 at non-holder nodes: {g2_recall:.3f}")
+    print("(> 0 only because gossip carried the hubs' knowledge across the graph)")
+
+
+if __name__ == "__main__":
+    main()

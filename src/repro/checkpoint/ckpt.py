@@ -1,0 +1,62 @@
+"""Minimal dependency-free pytree checkpointing (npz + structure manifest).
+
+Orbax is not available offline; this covers the framework's needs: periodic
+save of (params, opt_state, step) for the decentralized trainer and the
+examples, with exact-roundtrip restore (dtypes — including bfloat16 — and
+tree structure preserved).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[key] = arr.view(np.uint16)
+            out[f"__bf16__{key}"] = np.asarray(True)
+        else:
+            out[key] = arr
+    return out
+
+
+def save(path: str, tree: PyTree, *, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {"treedef": str(treedef), "step": step}
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, int | None]:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        arr = data[key]
+        if f"__bf16__{key}" in data.files:
+            arr = arr.view(jnp.bfloat16)
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta.get("step")

@@ -1,0 +1,190 @@
+"""Architecture / run configuration system.
+
+``ArchConfig`` is the single source of truth consumed by model init/forward,
+the launcher, the dry-run, and the roofline tool. One file per assigned
+architecture lives next to this module; ``repro.configs.get(arch_id)``
+resolves them, and every config cites its source in ``source``.
+
+Layer stacking: ``pattern`` describes one *period* of layers (e.g. jamba's
+7×mamba + 1×attn); the full stack is the pattern tiled ``num_layers /
+len(pattern)`` times and executed as a ``lax.scan`` over the tiled groups —
+so HLO size is O(period), not O(depth), which keeps 88-layer × 512-device
+dry-run compiles tractable.
+
+Node counts: how many DecAvg nodes (model replicas) a mesh hosts — bounded
+by HBM, see DESIGN.md §4 for the math per architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Literal
+
+import jax.numpy as jnp
+
+from repro.models.mamba import MambaSpec
+from repro.models.moe import MoESpec
+from repro.models.rwkv import RWKVSpec
+
+Mixer = Literal["attn", "mamba", "rwkv"]
+Ffn = Literal["dense", "moe", "rwkv", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: Mixer = "attn"
+    ffn: Ffn = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: Literal["dense", "moe", "hybrid", "ssm", "audio", "vlm"]
+    source: str
+
+    num_layers: int = 12
+    d_model: int = 512
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    d_ff: int = 2048
+    vocab_size: int = 32000
+    rope_theta: float = 10000.0
+    norm: Literal["rms", "ln"] = "rms"
+    ffn_act: Literal["swiglu", "gelu"] = "swiglu"
+
+    # Layer pattern (one period; tiled). Default: uniform attn+dense.
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+
+    moe: MoESpec | None = None
+    mamba: MambaSpec | None = None
+    rwkv: RWKVSpec | None = None
+
+    # Sliding-window width used by the long-context (long_500k) variant; the
+    # dense 32k shapes use full attention unless ``always_window`` is set.
+    sliding_window: int = 4096
+    always_window: bool = False
+
+    # Encoder-decoder (whisper): encoder layers share d_model/heads/d_ff.
+    enc_dec: bool = False
+    enc_layers: int = 0
+    max_target_len: int = 448  # whisper decoder context
+
+    # Modality frontends (stubs): number of continuous prefix embeddings the
+    # LM consumes in place of that many tokens (vlm), or "all inputs are
+    # frames" (audio encoder).
+    vlm_prefix_frac: float = 0.0
+
+    # Distribution / dtype policy.
+    num_nodes_single_pod: int = 16
+    num_nodes_multi_pod: int = 32
+    param_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"
+    # Cohort optimizer: "adamw" (2 f32 moments) or "sgd" (1 f32 momentum —
+    # the paper's optimizer; used by the ≥50 B archs where AdamW state alone
+    # would blow the per-device HBM budget, DESIGN §4).
+    optimizer: str = "adamw"
+
+    # Per-node batch used by smoke tests / examples (full shapes come from
+    # repro.launch.shapes).
+    smoke_batch: int = 2
+    smoke_seq: int = 32
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.period == 0, (
+            f"{self.arch_id}: num_layers {self.num_layers} not divisible by "
+            f"pattern period {self.period}"
+        )
+        return self.num_layers // self.period
+
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: <=2 periods, d_model<=256, <=4 experts."""
+        d_model = min(self.d_model, 256)
+        hd = 32
+        heads = max(2, min(self.num_heads, d_model // hd))
+        kv = heads if self.num_kv_heads == self.num_heads else max(1, heads // 2)
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_ff=min(self.moe.d_ff, 448),
+                dense_d_ff=min(self.moe.dense_d_ff, 448) if self.moe.dense_d_ff else 0,
+            )
+        rwkv = None
+        if self.rwkv is not None:
+            rwkv = dataclasses.replace(self.rwkv, head_dim=hd, decay_lora=16, chunk=8)
+        mamba = None
+        if self.mamba is not None:
+            mamba = dataclasses.replace(self.mamba, d_state=8, chunk=8)
+        return dataclasses.replace(
+            self,
+            arch_id=self.arch_id + "-reduced",
+            num_layers=min(2 * self.period, self.num_layers),
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            enc_layers=min(self.enc_layers, 2),
+            moe=moe,
+            rwkv=rwkv,
+            mamba=mamba,
+            sliding_window=16,
+            param_dtype="float32",
+            num_nodes_single_pod=4,
+            num_nodes_multi_pod=4,
+        )
+
+
+ASSIGNED_ARCHS = (
+    "stablelm_3b",
+    "mistral_large_123b",
+    "jamba_v01_52b",
+    "dbrx_132b",
+    "arctic_480b",
+    "llama32_1b",
+    "minicpm_2b",
+    "rwkv6_3b",
+    "whisper_base",
+    "internvl2_76b",
+)
+
+_ALIASES = {name.replace("_", "-"): name for name in ASSIGNED_ARCHS} | {
+    "stablelm-3b": "stablelm_3b",
+    "mistral-large-123b": "mistral_large_123b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "dbrx-132b": "dbrx_132b",
+    "arctic-480b": "arctic_480b",
+    "llama3.2-1b": "llama32_1b",
+    "minicpm-2b": "minicpm_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "whisper-base": "whisper_base",
+    "internvl2-76b": "internvl2_76b",
+    "paper-mlp": "paper_mlp",
+}
+
+
+def get(arch_id: str) -> ArchConfig:
+    mod_name = _ALIASES.get(arch_id, arch_id.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_arch_ids() -> tuple[str, ...]:
+    return ASSIGNED_ARCHS

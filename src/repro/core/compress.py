@@ -1,0 +1,79 @@
+"""Gossip compression: top-k delta sparsification with reference tracking.
+
+The paper's related work ([8], Sun et al.) pairs decentralized averaging
+with quantization to cut communication. We implement top-k delta
+compression: each node transmits only the k largest-magnitude entries of
+``params - reference``, where ``reference`` is the model its peers
+currently hold. Error feedback is *implicit* in the reference: whatever was
+not transmitted stays in ``params - reference`` and competes again next
+round (an explicit error buffer on top of reference tracking double-counts
+the residual and diverges — found by test_error_feedback_catches_up).
+
+Composition with DecAvg: nodes gossip ``reference + sparse_delta`` instead
+of raw weights; with the sparse permute schedule (EXPERIMENTS §Perf H2) the
+wire volume multiplies: degree x k_frac x member bytes.
+
+Pure-pytree API, vmappable over the node axis like everything else.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressState(NamedTuple):
+    reference: PyTree  # what peers currently hold for this node
+
+
+def init(params: PyTree) -> CompressState:
+    return CompressState(
+        reference=jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    )
+
+
+def _topk_mask(x: jax.Array, k_frac: float) -> jax.Array:
+    """Exact top-k mask (index scatter — a >=threshold test over-selects
+    whenever magnitudes tie)."""
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(k_frac * flat.size))
+    _, idx = jax.lax.top_k(flat, k)
+    mask = jnp.zeros((flat.size,), x.dtype).at[idx].set(1.0)
+    return mask.reshape(x.shape)
+
+
+def compress(
+    params: PyTree, state: CompressState, *, k_frac: float = 0.05
+) -> tuple[PyTree, CompressState]:
+    """Returns (sparse_delta, new_state).
+
+    sparse_delta has ceil(k_frac * size) nonzeros per leaf (wire payload is
+    k indices + k values); the reference advances by what was sent, so the
+    residual automatically re-enters the next round's selection.
+    """
+    sent = jax.tree.map(
+        lambda p, r: (p.astype(jnp.float32) - r)
+        * _topk_mask(p.astype(jnp.float32) - r, k_frac),
+        params,
+        state.reference,
+    )
+    ref = jax.tree.map(lambda r, s: r + s, state.reference, sent)
+    return sent, CompressState(ref)
+
+
+def reconstruct(state: CompressState) -> PyTree:
+    """The model every peer currently holds for this node."""
+    return state.reference
+
+
+def wire_bytes(params: PyTree, *, k_frac: float) -> int:
+    """Per-round payload: k values (f32) + k indices (s32) per leaf."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        k = max(1, int(k_frac * leaf.size))
+        total += k * 8
+    return total

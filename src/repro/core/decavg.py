@@ -1,0 +1,216 @@
+"""DecAvg: one communication round of decentralized averaging (paper Eq. 1).
+
+All per-node model state is *node-stacked*: every leaf of the parameter
+pytree carries a leading ``node`` axis of size N. One communication round is
+then the linear map ``P <- W @ P`` applied leaf-wise, where W is the
+(N, N) row-stochastic mixing matrix from core/mixing.py.
+
+Three execution paths, all numerically equivalent (tests assert allclose):
+
+1. ``mix_dense``      — XLA einsum per leaf. The default on any backend.
+2. ``mix_pallas``     — Pallas blocked-matmul kernel (kernels/gossip_mix.py)
+                        per flattened leaf; MXU-tiled for TPU, validated in
+                        interpret mode on CPU.
+3. ``mix_sharded``    — explicit shard_map collective schedule for a node
+                        axis sharded across a mesh axis; two schedules:
+                        "allgather" (gather all nodes, multiply locally) and
+                        "reduce_scatter" (scatter W-weighted contributions).
+                        The RS schedule keeps peak memory at O(P·N/shards)
+                        instead of O(P·N) — this is the form used at LLM
+                        cohort scale.
+
+The mixing accumulates in float32 regardless of parameter dtype (bf16 models
+still contract toward consensus without rounding bias), then casts back.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["mix_dense", "mix_pallas", "mix_sharded", "gossip_error"]
+
+PyTree = Any
+
+
+def _mix_leaf(w: jax.Array, leaf: jax.Array) -> jax.Array:
+    """(N,N) x (N, ...) contraction over the node axis, f32 accumulation.
+
+    No reshape: flattening (N, V, d) to (N, V*d) would merge a sharded dim
+    and force GSPMD into a full rematerialization (replicating every node's
+    params on every device — observed as an 80 GB/device dry-run). The
+    dot_general below contracts the node axis in place, so inner-dim
+    shardings propagate and a sharded node axis lowers to collectives only
+    on the node dimension.
+    """
+    n = w.shape[0]
+    if leaf.shape[0] != n:
+        raise ValueError(f"leaf leading axis {leaf.shape[0]} != num_nodes {n}")
+    # Output in the leaf dtype: an f32 preferred_element_type materializes a
+    # param-sized f32 temporary per leaf (GBs/device at 100B+ scale). The
+    # MXU accumulates bf16 dots in f32 internally regardless; for very wide
+    # graphs (N=100 paper sims run in f32 anyway) precision is preserved by
+    # the f32 leaf dtype itself.
+    out = jax.lax.dot_general(
+        w.astype(jnp.float32).astype(leaf.dtype),
+        leaf,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=leaf.dtype,
+    )
+    return out
+
+
+def mix_dense(w: jax.Array, params: PyTree) -> PyTree:
+    """DecAvg round via per-leaf einsum (paper-faithful reference path)."""
+    return jax.tree.map(functools.partial(_mix_leaf, w), params)
+
+
+def mix_pallas(w: jax.Array, params: PyTree, *, interpret: bool | None = None) -> PyTree:
+    """DecAvg round via the Pallas gossip_mix kernel (per flattened leaf)."""
+    from repro.kernels import ops  # local import: kernels are optional at import time
+
+    def mix(leaf: jax.Array) -> jax.Array:
+        n = w.shape[0]
+        flat = leaf.reshape(n, -1)
+        out = ops.gossip_mix(w, flat, interpret=interpret)
+        return out.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(mix, params)
+
+
+def mix_sharded(
+    w: jax.Array,
+    params: PyTree,
+    *,
+    mesh: jax.sharding.Mesh,
+    node_axis: str | tuple[str, ...] = "data",
+    schedule: Literal["allgather", "reduce_scatter"] = "reduce_scatter",
+) -> PyTree:
+    """DecAvg round with the node axis sharded over ``node_axis`` of ``mesh``.
+
+    W is replicated (it is tiny: N^2 floats). Per-leaf inner sharding is
+    preserved by passing everything through shard_map with generic specs on
+    the trailing dims (we only touch axis 0).
+
+    - allgather:      gather the full node axis, multiply my W-row-block.
+      Moves P·(S-1)/S bytes in, peak memory O(P·N).
+    - reduce_scatter: multiply my W-column-block by my params (my nodes'
+      contributions to everyone), then reduce-scatter over the node axis.
+      Moves the same bytes out, peak memory O(P·N/S). Preferred at scale.
+    """
+    axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
+    n = w.shape[0]
+    if n % shards:
+        raise ValueError(f"num_nodes {n} not divisible by node shards {shards}")
+
+    def body(w_full: jax.Array, leaf: jax.Array) -> jax.Array:
+        # leaf: (n/shards, ...) local block of the node axis.
+        idx = jax.lax.axis_index(axes)
+        blk = n // shards
+        flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        wf = w_full.astype(jnp.float32)
+        if schedule == "allgather":
+            full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)  # (n, p)
+            rows = jax.lax.dynamic_slice_in_dim(wf, idx * blk, blk, axis=0)
+            out = rows @ full
+        else:
+            cols = jax.lax.dynamic_slice_in_dim(wf, idx * blk, blk, axis=1)  # (n, blk)
+            contrib = cols @ flat  # (n, p): my nodes' contribution to everyone
+            out = jax.lax.psum_scatter(contrib, axes, scatter_dimension=0, tiled=True)
+        return out.reshape(leaf.shape).astype(leaf.dtype)
+
+    def mix_one(leaf: jax.Array) -> jax.Array:
+        spec = P(axes, *([None] * (leaf.ndim - 1)))
+        return jax.shard_map(
+            functools.partial(body),
+            mesh=mesh,
+            in_specs=(P(), spec),
+            out_specs=spec,
+        )(w, leaf)
+
+    return jax.tree.map(mix_one, params)
+
+
+def mix_permute(
+    w: jax.Array | Any,
+    params: PyTree,
+    colors: list[list[tuple[int, int]]],
+    *,
+    mesh: jax.sharding.Mesh,
+    node_axis: str = "data",
+) -> PyTree:
+    """Sparse topology-aware DecAvg round via edge-colored ppermutes.
+
+    Requires num_nodes == mesh.shape[node_axis] (one node per device row).
+    Each color class (a matching, from mixing.edge_coloring) becomes ONE
+    ``ppermute``; wire volume per device is O(degree) member-shards instead
+    of the dense einsum's O(N) all-gather — the paper's sparse topology IS
+    the collective schedule. Numerically identical to ``mix_dense`` with the
+    same W (tests assert allclose); W entries off the graph support are
+    ignored by construction.
+    """
+    import numpy as np
+
+    k = mesh.shape[node_axis]
+    if w.shape[0] != k:
+        raise ValueError(
+            f"mix_permute needs num_nodes == |{node_axis}| ({k}), got {w.shape[0]}"
+        )
+    # W may be a tracer (it is a train_step input): build the per-color
+    # coefficient vectors with jnp gathers, not host numpy.
+    wf = jnp.asarray(w, jnp.float32)
+    self_coef = jnp.diagonal(wf)  # (K,)
+    color_coefs = []
+    for pairs in colors:
+        srcs = np.array([s for s, _ in pairs], np.int32)
+        dsts = np.array([d for _, d in pairs], np.int32)
+        vec = jnp.zeros((k,), jnp.float32).at[dsts].set(wf[dsts, srcs])
+        color_coefs.append(vec)
+
+    other_axes = frozenset(a for a in mesh.axis_names if a != node_axis)
+
+    def body(leaf: jax.Array) -> jax.Array:
+        # leaf: (1, ...) — this device row's node shard.
+        i = jax.lax.axis_index(node_axis)
+        xf = leaf.astype(jnp.float32)
+        acc = xf * self_coef[i]
+        for pairs, vec in zip(colors, color_coefs):
+            y = jax.lax.ppermute(xf, node_axis, pairs)
+            acc = acc + y * vec[i]
+        return acc.astype(leaf.dtype)
+
+    def mix_one(leaf: jax.Array) -> jax.Array:
+        spec = P(node_axis, *([None] * (leaf.ndim - 1)))
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=spec,
+            out_specs=spec,
+            axis_names=frozenset({node_axis}),
+        )(leaf)
+
+    return jax.tree.map(mix_one, params)
+
+
+def gossip_error(params: PyTree) -> jax.Array:
+    """Consensus distance: mean over leaves of ||w_i - mean_i w_i||^2 / ||mean||^2.
+
+    The quantity the spectral gap contracts per round; benchmarks report it to
+    connect topology properties to knowledge-spread speed.
+    """
+    def leaf_err(leaf: jax.Array) -> jax.Array:
+        f = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        mean = f.mean(axis=0, keepdims=True)
+        num = jnp.sum((f - mean) ** 2)
+        den = jnp.sum(mean**2) * f.shape[0] + 1e-12
+        return num / den
+
+    errs = [leaf_err(l) for l in jax.tree.leaves(params)]
+    return jnp.mean(jnp.stack(errs))

@@ -1,0 +1,202 @@
+"""Network-topology generators and graph metrics.
+
+Implements the three families studied in the paper (§4): Erdős–Rényi (ER),
+Barabási–Albert (BA) and the Stochastic Block Model (SBM), plus the metrics
+the paper's analysis relies on (degree distribution, connectivity threshold
+p*, modularity, per-community external-edge counts).
+
+Everything is pure numpy (seeded, deterministic); graphs are returned as a
+small `Graph` dataclass holding a dense boolean adjacency matrix — at the
+paper's scale (N=100) dense is both simpler and faster on accelerators, and
+the mixing matrix downstream (core/mixing.py) is dense anyway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "erdos_renyi",
+    "barabasi_albert",
+    "stochastic_block_model",
+    "er_critical_p",
+    "degree",
+    "connected_components",
+    "modularity",
+    "external_edge_counts",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected, unweighted graph as a dense symmetric adjacency matrix.
+
+    Attributes:
+      adj: (N, N) bool ndarray, symmetric, zero diagonal.
+      blocks: optional (N,) int ndarray of community labels (SBM only).
+      name: human-readable description of the generator + params.
+    """
+
+    adj: np.ndarray
+    blocks: np.ndarray | None = None
+    name: str = "graph"
+
+    def __post_init__(self):
+        a = self.adj
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if a.dtype != np.bool_:
+            raise ValueError("adjacency must be boolean")
+        if not np.array_equal(a, a.T):
+            raise ValueError("adjacency must be symmetric (undirected graph)")
+        if np.any(np.diag(a)):
+            raise ValueError("adjacency must have a zero diagonal")
+
+    @property
+    def num_nodes(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+    def degrees(self) -> np.ndarray:
+        return degree(self.adj)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.flatnonzero(self.adj[i])
+
+
+def er_critical_p(n: int) -> float:
+    """Sharp connectivity threshold p* = ln(N)/N for ER graphs [Erdős–Rényi 1960]."""
+    return math.log(n) / n
+
+
+def erdos_renyi(n: int, p: float, *, seed: int) -> Graph:
+    """ER random graph: each of the C(n,2) edges exists i.i.d. w.p. ``p``."""
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"p must be in [0,1], got {p}")
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < p
+    adj = np.triu(upper, k=1)
+    adj = adj | adj.T
+    return Graph(adj=adj, name=f"er(n={n},p={p})")
+
+
+def barabasi_albert(n: int, m: int, *, seed: int) -> Graph:
+    """BA preferential-attachment graph.
+
+    Starts from a star over the first ``m + 1`` nodes, then each new node
+    attaches to ``m`` distinct existing nodes sampled proportionally to their
+    current degree (the classic repeated-nodes urn construction).
+    """
+    if m < 1 or m >= n:
+        raise ValueError(f"need 1 <= m < n, got m={m}, n={n}")
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n), dtype=np.bool_)
+    # Seed graph: star over nodes [0, m] — every node has degree >= 1 so the
+    # preferential urn is well defined from the first attachment step.
+    for i in range(1, m + 1):
+        adj[0, i] = adj[i, 0] = True
+    # Urn of endpoints: one entry per half-edge, so sampling uniformly from it
+    # is sampling proportionally to degree.
+    urn: list[int] = []
+    for i in range(m + 1):
+        urn.extend([i] * int(adj[i].sum()))
+    for new in range(m + 1, n):
+        targets: set[int] = set()
+        while len(targets) < m:
+            targets.add(int(urn[rng.integers(len(urn))]))
+        for t in targets:
+            adj[new, t] = adj[t, new] = True
+            urn.extend([new, t])
+    return Graph(adj=adj, name=f"ba(n={n},m={m})")
+
+
+def stochastic_block_model(
+    block_sizes: Sequence[int],
+    p_in: float | Sequence[float],
+    p_out: float,
+    *,
+    seed: int,
+) -> Graph:
+    """SBM with within-block prob ``p_in`` (scalar or per-block) and
+    cross-block prob ``p_out``."""
+    sizes = np.asarray(block_sizes, dtype=np.int64)
+    n = int(sizes.sum())
+    b = len(sizes)
+    p_in_vec = np.full(b, p_in, dtype=np.float64) if np.isscalar(p_in) else np.asarray(p_in, dtype=np.float64)
+    if p_in_vec.shape != (b,):
+        raise ValueError("p_in must be scalar or one value per block")
+    labels = np.repeat(np.arange(b), sizes)
+    # Edge probability matrix P[i, j] by block membership.
+    pmat = np.full((n, n), p_out, dtype=np.float64)
+    same = labels[:, None] == labels[None, :]
+    pmat[same] = p_in_vec[labels[np.nonzero(same)[0]]]
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < pmat
+    adj = np.triu(upper, k=1)
+    adj = adj | adj.T
+    return Graph(
+        adj=adj,
+        blocks=labels,
+        name=f"sbm(sizes={list(block_sizes)},p_in={p_in},p_out={p_out})",
+    )
+
+
+def degree(adj: np.ndarray) -> np.ndarray:
+    return adj.sum(axis=1).astype(np.int64)
+
+
+def connected_components(adj: np.ndarray) -> np.ndarray:
+    """Label connected components via BFS. Returns (N,) int labels."""
+    n = adj.shape[0]
+    labels = np.full(n, -1, dtype=np.int64)
+    cur = 0
+    for start in range(n):
+        if labels[start] >= 0:
+            continue
+        frontier = [start]
+        labels[start] = cur
+        while frontier:
+            nxt: list[int] = []
+            for u in frontier:
+                for v in np.flatnonzero(adj[u]):
+                    if labels[v] < 0:
+                        labels[v] = cur
+                        nxt.append(int(v))
+            frontier = nxt
+        cur += 1
+    return labels
+
+
+def modularity(adj: np.ndarray, communities: np.ndarray) -> float:
+    """Newman modularity Q for a hard partition."""
+    m2 = adj.sum()  # 2 * |E|
+    if m2 == 0:
+        return 0.0
+    k = degree(adj).astype(np.float64)
+    same = communities[:, None] == communities[None, :]
+    q = (adj.astype(np.float64) - np.outer(k, k) / m2) * same
+    return float(q.sum() / m2)
+
+
+def external_edge_counts(g: Graph) -> np.ndarray:
+    """Per-community counts of edges pointing to each other community
+    (paper Table 1's bracketed numbers). Returns (B, B) with zero diagonal."""
+    if g.blocks is None:
+        raise ValueError("graph has no community labels")
+    b = int(g.blocks.max()) + 1
+    counts = np.zeros((b, b), dtype=np.int64)
+    ii, jj = np.nonzero(np.triu(g.adj, k=1))
+    for u, v in zip(ii, jj):
+        bu, bv = g.blocks[u], g.blocks[v]
+        if bu != bv:
+            counts[bu, bv] += 1
+            counts[bv, bu] += 1
+    return counts

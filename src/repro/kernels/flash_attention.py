@@ -1,0 +1,119 @@
+"""Pallas TPU flash-attention kernel (causal / sliding-window, GQA).
+
+The model zoo's pure-JAX 2D-tiled attention (models/layers.py) is the
+portable implementation; this kernel is the TPU-native hot path: one
+(q_block, kv_block) online-softmax tile pipelined through VMEM with the
+running (m, l, acc) statistics in scratch, MXU-aligned block shapes.
+
+Layout: q (B*H, S, hd), k/v (B*Hkv, T, hd) — the wrapper (ops.py) folds
+batch and heads so the grid is (BH, S/bq, T/bk) with the KV index innermost
+(statistics stay resident across the kv loop). GQA is handled by an
+explicit head map (BH -> B*Hkv) baked into the index_map.
+
+Causality/window: blocks fully in the future are masked by position; blocks
+fully in the past of the window are zero contribution — both are still
+visited (grid is static) but their tiles are masked; the block-skip
+refinement is a recorded future optimization.
+
+Validated against kernels/ref.py::flash_attention_ref in interpret mode
+(tests/test_kernels.py sweeps shapes, GQA ratios, windows and dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, nk,
+            scale, causal, window):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale      # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "window", "interpret", "group"),
+)
+def flash_attention_pallas(
+    q: jax.Array,   # (BH, S, hd)
+    k: jax.Array,   # (BHkv, T, hd)
+    v: jax.Array,
+    *,
+    group: int,     # BH / BHkv (GQA ratio)
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, hd = q.shape
+    bhkv, t, _ = k.shape
+    assert bh == bhkv * group
+    if s % bq or t % bk:
+        raise ValueError(f"S={s} % bq={bq} or T={t} % bk={bk} != 0 (pad in ops.py)")
+    nq, nk = s // bq, t // bk
+    scale = hd**-0.5
+
+    grid = (bh, nq, nk)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, nk=nk, scale=scale, causal=causal, window=window
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel for the DecAvg gossip mixing step ``C = W @ P``.
+
+W is the (N, N) row-stochastic mixing matrix (f32, tiny — N is the node
+count, 100 in the paper), P is the (N, D) node-stacked flattened parameter
+matrix (bf16 or f32, D = parameter count, up to hundreds of millions).
+
+TPU adaptation (vs the paper's per-edge Python message loop): the mixing is
+a *matmul*, so we feed the MXU with 128-aligned tiles. The working set per
+grid step is one (bm, bk) W tile + one (bk, bd) P tile + one (bm, bd) f32
+accumulator — sized to sit comfortably in VMEM (~16 MB on v5e):
+
+    bm = bk = 128, bd = 512  ->  128*128*4 + 128*512*2 + 128*512*4 ≈ 0.45 MB
+
+Grid is (M/bm, D/bd, N/bk) with the contraction axis innermost so the
+accumulator scratch stays resident across the k-loop. Accumulation is always
+f32, independent of P's dtype — consensus averaging in bf16 would bias the
+contraction.
+
+The topology is also *sparse* (an ER graph at p=0.05 has ~5% density); the
+kernel takes a (M/bm, N/bk) int32 block-mask and skips fully-zero W tiles
+(`block_sparse=True`) — a beyond-paper optimization recorded in
+EXPERIMENTS.md §Perf. For the paper's N=100 (a single 128-tile) this is
+moot, but at cohort scale (N up to 4096 federated silos) an ER topology at
+p* has ~0.2% block density and the skip is a ~100x FLOP reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gossip_mix_kernel", "gossip_mix_pallas", "DEFAULT_BLOCKS"]
+
+DEFAULT_BLOCKS = dict(bm=128, bk=128, bd=512)
+
+
+def gossip_mix_kernel(mask_ref, w_ref, p_ref, out_ref, acc_ref, *, nk: int):
+    """One (i, j, k) grid step: acc += W[i,k] @ P[k,j]; flush at k == nk-1.
+
+    Refs:
+      mask_ref: (nm, nk) int32 block-support map (SMEM, whole array).
+      w_ref:    (bm, bk) f32 mixing tile (VMEM).
+      p_ref:    (bk, bd) params tile (VMEM, any float dtype).
+      out_ref:  (bm, bd) output tile, written once per (i, j).
+      acc_ref:  (bm, bd) f32 VMEM scratch accumulator.
+    """
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[i, k] != 0)
+    def _accum():
+        w = w_ref[...]
+        p = p_ref[...].astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            w, p, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bd", "interpret", "block_sparse")
+)
+def gossip_mix_pallas(
+    w: jax.Array,
+    p: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bd: int = 512,
+    interpret: bool = False,
+    block_sparse: bool = True,
+) -> jax.Array:
+    """``W @ P`` with f32 accumulation. Shapes must be pre-padded to block
+    multiples (the ops.py wrapper handles padding/unpadding)."""
+    m, n = w.shape
+    n2, d = p.shape
+    if n != n2:
+        raise ValueError(f"contraction mismatch: W {w.shape} vs P {p.shape}")
+    if m % bm or n % bk or d % bd:
+        raise ValueError(
+            f"shapes must be padded to blocks: ({m},{n},{d}) vs ({bm},{bk},{bd})"
+        )
+    nm, nk, nd = m // bm, n // bk, d // bd
+    w = w.astype(jnp.float32)
+
+    if block_sparse:
+        # Support map over W tiles; zero tiles contribute nothing and are
+        # skipped inside the kernel (the tile is still prefetched by the
+        # pipeline, so the win is MXU issue + accumulator traffic, not HBM).
+        tiles = w.reshape(nm, bm, nk, bk)
+        mask = (jnp.abs(tiles).sum(axis=(1, 3)) > 0).astype(jnp.int32)
+    else:
+        mask = jnp.ones((nm, nk), dtype=jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(gossip_mix_kernel, nk=nk),
+        grid=(nm, nd, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # mask: whole array in SMEM
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), p.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bd), jnp.float32)],
+        interpret=interpret,
+    )(mask, w, p)

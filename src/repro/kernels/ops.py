@@ -1,0 +1,103 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to MXU-aligned block multiples, interpret-mode selection
+(interpret=True whenever we are not actually on TPU — this container is
+CPU-only, so kernels execute through the Pallas interpreter for
+correctness validation), and unpadding of results.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gossip_mix import DEFAULT_BLOCKS, gossip_mix_pallas
+
+__all__ = ["gossip_mix", "flash_attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bd", "interpret", "block_sparse")
+)
+def gossip_mix(
+    w: jax.Array,
+    p: jax.Array,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    bd: int | None = None,
+    interpret: bool | None = None,
+    block_sparse: bool = True,
+) -> jax.Array:
+    """DecAvg mixing ``W @ P`` via the Pallas kernel.
+
+    w: (N, N) mixing matrix; p: (N, D) node-stacked flat params.
+    Pads to block multiples with zeros (zero W rows/cols contribute nothing;
+    padded rows of the output are sliced away).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    bm = bm or DEFAULT_BLOCKS["bm"]
+    bk = bk or DEFAULT_BLOCKS["bk"]
+    bd = bd or DEFAULT_BLOCKS["bd"]
+    n, d = p.shape
+    wp = _pad_to(w.astype(jnp.float32), (bm, bk))
+    # W must also be padded consistently on the contraction axis.
+    rem_k = (-n) % bk
+    pp = _pad_to(p, (bk, bd))
+    out = gossip_mix_pallas(
+        wp, pp, bm=bm, bk=bk, bd=bd, interpret=interpret, block_sparse=block_sparse
+    )
+    return out[:n, :d]
+
+
+def flash_attention(
+    q: jax.Array,   # (B, S, H, hd)
+    k: jax.Array,   # (B, T, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention via the Pallas kernel. Pads S/T to block multiples
+    (padded key positions are masked by causality: they sit in the future)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    pad_s = (-s) % bq
+    pad_t = (-t) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    # fold batch x heads
+    qf = qp.transpose(0, 2, 1, 3).reshape(b * h, s + pad_s, hd)
+    kf = kp.transpose(0, 2, 1, 3).reshape(b * hkv, t + pad_t, hd)
+    vf = vp.transpose(0, 2, 1, 3).reshape(b * hkv, t + pad_t, hd)
+    out = flash_attention_pallas(
+        qf, kf, vf, group=group, causal=causal, window=window,
+        bq=bq, bk=bk, interpret=interpret,
+    )
+    out = out.reshape(b, h, s + pad_s, hd).transpose(0, 2, 1, 3)
+    return out[:, :s]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gossip_mix_ref", "flash_attention_ref"]
+
+
+def gossip_mix_ref(w: jax.Array, p: jax.Array) -> jax.Array:
+    """f32-accumulated ``W @ P`` cast back to P's dtype."""
+    out = w.astype(jnp.float32) @ p.astype(jnp.float32)
+    return out.astype(p.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Plain softmax attention oracle.
+
+    q: (S, H, D); k, v: (T, Hkv, D) with H a multiple of Hkv (GQA).
+    ``window``: sliding-window width (each query attends to the last
+    ``window`` keys, inclusive of itself).
+    """
+    s, h, d = q.shape
+    t, hkv, _ = k.shape
+    group = h // hkv
+    scale = scale if scale is not None else d**-0.5
+    qf = q.astype(jnp.float32).reshape(s, hkv, group, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("shgd,thd->hgst", qf, kf) * scale  # (hkv, g, s, t)
+    qpos = jnp.arange(s)[:, None] + (t - s)  # queries sit at the cache tail
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hgst,thd->shgd", probs, vf)
+    return out.reshape(s, h, d).astype(q.dtype)

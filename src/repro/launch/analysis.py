@@ -1,0 +1,500 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+- ``compiled.cost_analysis()``: HLO FLOPs + bytes accessed (per partition —
+  SPMD modules are per-device programs).
+- collective bytes: NOT in cost_analysis; parsed from the post-SPMD HLO text
+  by summing operand/result sizes of every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, converted to per-device
+  *wire bytes*:
+      all-gather:        out - in          (received from peers)
+      reduce-scatter:    in - out          (sent to peers)
+      all-reduce:        2 * (in - in/S)   (ring RS+AG)  ~ 2 * in
+      all-to-all:        in * (S-1)/S      ~ in
+      collective-permute: in
+- model FLOPs: 6·N·D with N = active params (MoE: top-k experts + shared).
+
+Hardware constants (v5e) live in launch/mesh.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch import mesh as M
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}:#* ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_wire_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device wire bytes by collective kind, from post-SPMD HLO text."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_type, kind, _ = m.groups()
+        # operands: everything inside the call parens
+        call = line[m.end() - 1 :]
+        depth = 0
+        end = 0
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[1:end]
+        in_b = _array_bytes(operands)
+        out_b = _array_bytes(result_type)
+        if kind == "all-gather":
+            wire = max(out_b - in_b, 0)
+        elif kind == "reduce-scatter":
+            wire = max(in_b - out_b, 0)
+        elif kind == "all-reduce":
+            wire = 2 * in_b
+        elif kind == "all-to-all":
+            wire = in_b
+        else:  # collective-permute
+            wire = in_b
+        out[kind] = out.get(kind, 0.0) + wire
+    return out
+
+
+def model_flops_per_step(cfg: ArchConfig, tokens: int) -> float:
+    """6 · N_active · tokens (the §Roofline MODEL_FLOPS convention)."""
+    n_active = active_param_count(cfg)
+    return 6.0 * n_active * tokens
+
+
+def _attn_layer_count(cfg: ArchConfig) -> int:
+    reps = cfg.num_layers // cfg.period
+    return reps * sum(1 for s in cfg.pattern if s.mixer == "attn")
+
+
+def analytic_step_flops(cfg: ArchConfig, *, kind: str, batch: int, seq: int,
+                        cache_len: int = 0, window: int | None = None) -> float:
+    """Whole-step FLOPs across all chips, from the workload math.
+
+    Why analytic: XLA-CPU ``cost_analysis`` counts loop bodies ONCE (no trip
+    counts), undercounting scanned/chunked models by up to ~500x. The
+    matmul-dominated FLOPs of this system are exactly computable:
+      param term      mult * 2 * N_active * tokens   (mult=3 for fwd+bwd)
+      attention term  mult * 4 * B * S * T_eff * H * hd per attn layer
+                      (QK^T + PV; causal halves T_eff)
+      MoE dispatch    mult * 3 einsums * 2 * T * E * Cg * d per MoE layer
+      rwkv/mamba scan small elementwise terms (included approximately)
+    """
+    mult = 3.0 if kind == "train" else 1.0
+    if kind == "decode":
+        tokens = batch  # one token per sequence
+    else:
+        tokens = batch * seq
+    total = mult * 2.0 * active_param_count(cfg) * tokens
+
+    # attention quadratic term
+    la = _attn_layer_count(cfg)
+    h, hd = cfg.num_heads, cfg.hd
+    if la:
+        if kind == "decode":
+            t_eff = min(cache_len, window) if window else cache_len
+            total += mult * 4.0 * batch * t_eff * h * hd * la
+        else:
+            t_eff = min(seq, window) if window else seq
+            # causal: average attended length ~ t_eff/2
+            total += mult * 4.0 * batch * seq * (t_eff / 2.0) * h * hd * la
+
+    # MoE dispatch/combine overhead (as implemented: dense one-hot einsums)
+    if cfg.moe is not None:
+        reps = cfg.num_layers // cfg.period
+        lm = reps * sum(1 for s in cfg.pattern if s.ffn == "moe")
+        tg = min(cfg.moe.group_size, tokens)
+        cg = max(int(cfg.moe.capacity_factor * cfg.moe.top_k * tg / cfg.moe.num_experts), 1)
+        d = cfg.d_model
+        # 3 one-hot einsums (dispatch-in, combine, expert-out gather), each
+        # 2 * Tg * E * Cg * d per group -> 2 * T * E * Cg * d in total.
+        total += mult * lm * 3.0 * 2.0 * tokens * cfg.moe.num_experts * cg * d
+
+    # rwkv WKV chunked recurrence (D=head_dim): ~4*T*H*D^2 inter/state +
+    # 4*T*C*H*D intra per layer
+    if cfg.rwkv is not None:
+        reps = cfg.num_layers // cfg.period
+        lr = reps * sum(1 for s in cfg.pattern if s.mixer == "rwkv")
+        hd_r = cfg.rwkv.head_dim
+        heads = cfg.d_model // hd_r
+        c = cfg.rwkv.chunk
+        total += mult * lr * tokens * heads * (4.0 * hd_r * hd_r + 4.0 * c * hd_r)
+
+    # mamba selective scan: ~10 elementwise ops per (t, di, n) element
+    if cfg.mamba is not None:
+        reps = cfg.num_layers // cfg.period
+        lm_ = reps * sum(1 for s in cfg.pattern if s.mixer == "mamba")
+        di = cfg.mamba.inner(cfg.d_model)
+        total += mult * lm_ * 10.0 * tokens * di * cfg.mamba.d_state
+    return total
+
+
+def analytic_hbm_bytes_per_device(
+    cfg: ArchConfig,
+    *,
+    kind: str,
+    num_nodes: int,
+    microbatches: int,
+    arg_bytes: float,
+    temp_bytes: float,
+) -> float:
+    """Per-device HBM traffic estimate for one step.
+
+    Weights are re-streamed from HBM once per microbatch in fwd and once in
+    bwd (scan over layer groups reads every group's shard); optimizer state
+    is read+written once; transients (activations, attention tiles) are
+    written and read back ~once. arg/temp sizes come from the compiled
+    buffer assignment (per-device truth, modulo XLA-CPU's f32 legalization
+    of bf16 GEMMs, which inflates temp — noted in EXPERIMENTS.md).
+    """
+    if kind == "train":
+        weight_passes = 2 * microbatches + 2  # fwd+bwd reads, grad+opt write
+    else:
+        weight_passes = 1
+    return weight_passes * arg_bytes + 2.0 * temp_bytes
+
+
+def active_param_count(cfg: ArchConfig) -> float:
+    """Active params per token: full count minus non-selected experts."""
+    total = 0.0
+    d = cfg.d_model
+    # embeddings + head (counted: embedding lookups are cheap but the head
+    # matmul is real compute; follow the 6ND convention of counting both).
+    total += 2.0 * cfg.vocab_size * d
+    for spec in cfg.pattern:
+        reps = cfg.num_layers // cfg.period
+        if spec.mixer == "attn":
+            mix = d * cfg.num_heads * cfg.hd * 2 + d * cfg.num_kv_heads * cfg.hd * 2
+        elif spec.mixer == "mamba":
+            di = cfg.mamba.inner(d)
+            dr = cfg.mamba.rank(d)
+            mix = d * 2 * di + di * (dr + 2 * cfg.mamba.d_state) + dr * di + di * d
+        else:  # rwkv
+            mix = 6 * d * d
+        if spec.ffn == "dense":
+            ffn = 3.0 * d * cfg.d_ff
+        elif spec.ffn == "moe":
+            ffn = 3.0 * d * cfg.moe.d_ff * cfg.moe.top_k + d * cfg.moe.num_experts
+            if cfg.moe.dense_residual:
+                ffn += 3.0 * d * (cfg.moe.dense_d_ff or cfg.moe.d_ff)
+        elif spec.ffn == "rwkv":
+            ffn = 2.0 * d * cfg.d_ff + d * d
+        else:
+            ffn = 0.0
+        total += reps * (mix + ffn)
+    if cfg.enc_dec:
+        total += cfg.enc_layers * (4 * d * d + 2.0 * d * cfg.d_ff)
+        total += cfg.num_layers * 4 * d * d  # cross-attention
+    return total
+
+
+def total_param_count(cfg: ArchConfig) -> float:
+    """Full parameter count (MoE: all experts)."""
+    d = cfg.d_model
+    total = 2.0 * cfg.vocab_size * d
+    for spec in cfg.pattern:
+        reps = cfg.num_layers // cfg.period
+        if spec.mixer == "attn":
+            mix = d * cfg.num_heads * cfg.hd * 2 + d * cfg.num_kv_heads * cfg.hd * 2
+        elif spec.mixer == "mamba":
+            di = cfg.mamba.inner(d)
+            dr = cfg.mamba.rank(d)
+            mix = d * 2 * di + di * (dr + 2 * cfg.mamba.d_state) + dr * di + di * d
+        else:
+            mix = 6 * d * d
+        if spec.ffn == "dense":
+            ffn = 3.0 * d * cfg.d_ff
+        elif spec.ffn == "moe":
+            ffn = 3.0 * d * cfg.moe.d_ff * cfg.moe.num_experts + d * cfg.moe.num_experts
+            if cfg.moe.dense_residual:
+                ffn += 3.0 * d * (cfg.moe.dense_d_ff or cfg.moe.d_ff)
+        elif spec.ffn == "rwkv":
+            ffn = 2.0 * d * cfg.d_ff + d * d
+        else:
+            ffn = 0.0
+        total += reps * (mix + ffn)
+    if cfg.enc_dec:
+        total += cfg.enc_layers * (4 * d * d + 2.0 * d * cfg.d_ff)
+        total += cfg.num_layers * 4 * d * d
+    return total
+
+
+def analytic_collective_bytes(
+    cfg: ArchConfig,
+    *,
+    kind: str,
+    batch: int,
+    seq: int,
+    num_nodes: int,
+    microbatches: int,
+    mesh_shape: dict[str, int],
+    node_sharded: bool,
+    layout: str = "tp",
+    gossip: str = "dense",
+    serve_layout: str = "sharded",
+) -> dict[str, float]:
+    """Per-device wire bytes per step, by source, from the sharding design.
+
+    Why analytic: the compiled HLO's loops are rewritten by XLA (peeling,
+    double-buffer "wide" clones), so textual trip-count multiplication over-
+    counts by ~10x, while count-once parsing undercounts by ~100x. The
+    collective SCHEDULE (which kinds appear, where) is taken from the HLO
+    (hlo_walk inventory, reported alongside); the byte volumes below follow
+    from the sharding rules, which we control:
+
+      fsdp_ag   weight all-gathers over `data` (node-replicated archs only):
+                one full re-gather per microbatch in fwd and again in bwd
+                (remat), (Dd-1)/Dd of the TP-sharded member bytes.
+      grad_rs   gradient reduce-scatter over `data`, once per microbatch.
+      gossip    DecAvg mixing over a sharded node axis: all-gather of the
+                other nodes' TP shards ((K-1)/K x K x member-TP bytes).
+                Node-replicated archs mix locally: 0.
+      tp_ar     Megatron-style activation all-reduces: ~6 per layer per
+                microbatch (2 fwd, 2 remat re-fwd, 2 bwd), 2x payload each.
+      moe_a2a   dispatch+combine all-to-alls: 2 x cf x k x token-bytes per
+                MoE layer (x3 for train fwd+bwd).
+      serve_ag  decode/prefill weight gathers (weights `data`-sharded in the
+                serving layout): one full pass per step.
+    """
+    dm = mesh_shape.get("model", 1)
+    dd = mesh_shape.get("data", 1)
+    pods = mesh_shape.get("pod", 1)
+    devices = dm * dd * pods
+    bpp = 2.0 if cfg.param_dtype == "bfloat16" else 4.0
+    p_total = total_param_count(cfg)
+    member_tp = p_total * bpp / dm  # one member model after TP sharding
+    d = cfg.d_model
+    la = cfg.num_layers
+    out: dict[str, float] = {}
+    mult_train = 3.0 if kind == "train" else 1.0
+
+    if kind == "train":
+        tokens = batch * seq
+        tokens_dev = tokens / max(devices / dm, 1)  # per device column
+        if node_sharded and layout == "fsdp_model":
+            # Optimized small-arch layout (§Perf H1): weights FSDP over
+            # `model`, batch-parallel over `model` within each node. Weights
+            # are re-gathered per microbatch (fwd + bwd), grads reduce-
+            # scattered; no activation all-reduces at all.
+            frac_m = (dm - 1) / dm if dm > 1 else 0.0
+            member_full = p_total * bpp
+            out["fsdp_ag"] = 2.0 * microbatches * member_full * frac_m
+            out["grad_rs"] = microbatches * member_full * frac_m
+            if gossip == "sparse":
+                # edge-colored permutes: mean-degree neighbor shards move,
+                # not (K-1) of them (ER at 2*p*: mean degree ~ 2 ln K)
+                import math
+
+                mean_deg = 2.0 * math.log(max(num_nodes, 2))
+                out["gossip"] = mean_deg * member_full / dm
+            else:
+                out["gossip"] = (num_nodes - 1) * member_full / dm / max(num_nodes / dd, 1)
+            out["tp_ar"] = 0.0
+        elif node_sharded:
+            # Node axis occupies `data`: weights are TP-resident (no FSDP
+            # gathers) and grads are node-local (no cross-node reduction);
+            # the gossip all-gather over the node axis moves the params.
+            out["fsdp_ag"] = 0.0
+            out["grad_rs"] = 0.0
+            out["gossip"] = (num_nodes - 1) * member_tp / max(num_nodes / dd, 1)
+            out["tp_ar"] = 6.0 * la * 2.0 * tokens_dev * d * bpp
+        else:
+            frac = (dd - 1) / dd if dd > 1 else 0.0
+            out["fsdp_ag"] = 2.0 * microbatches * num_nodes * member_tp * frac
+            out["grad_rs"] = microbatches * num_nodes * member_tp * frac
+            out["gossip"] = 0.0
+            out["tp_ar"] = 6.0 * la * 2.0 * tokens_dev * d * bpp
+    else:
+        tokens = batch if kind == "decode" else batch * seq
+        tokens_dev = tokens / max(devices / dm, 1)
+        frac = (dd - 1) / dd if dd > 1 else 0.0
+        if kind == "decode" and serve_layout == "pipeline":
+            # §Perf H3: weights/cache stay on their stage; (2S-1) activation
+            # hops of one microgroup + the final logits psum.
+            stages = dd
+            mbb = max(batch // stages, 1)
+            out["pipeline_permute"] = (2 * stages - 1) * mbb * d * bpp
+            out["logits_psum"] = 2.0 * batch * d * bpp
+            out["serve_ag"] = 0.0
+        else:
+            out["serve_ag"] = member_tp * frac  # weights re-streamed once
+        out["tp_ar"] = 2.0 * la * 2.0 * tokens_dev * d * bpp
+
+    if cfg.moe is not None:
+        reps = cfg.num_layers // cfg.period
+        lm = reps * sum(1 for s in cfg.pattern if s.ffn == "moe")
+        k_eff = cfg.moe.capacity_factor * cfg.moe.top_k
+        tokens_dev_m = (batch * (seq if kind != "decode" else 1)) / max(devices / dm, 1)
+        out["moe_a2a"] = mult_train * lm * 2.0 * k_eff * tokens_dev_m * d * bpp
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh_name: str
+    chips: int
+    step_flops: float           # whole step, all chips (analytic — see
+                                # analytic_step_flops for why not cost_analysis)
+    hbm_bytes_dev: float        # per-device HBM traffic estimate
+    wire_bytes: float           # per device, analytic model (see
+                                # analytic_collective_bytes for why not HLO)
+    wire_by_kind: dict[str, float]
+    hlo_collectives: dict[str, float]  # HLO inventory: per-kind count-once bytes
+    collective_ops: dict[str, int]
+    model_flops: float          # 6·N_active·D convention, whole step
+    per_device_hbm: int         # peak bytes, from memory_analysis
+    raw_cost_flops: float       # cost_analysis() raw value (per-iteration
+                                # undercount on CPU; kept for transparency)
+    unknown_loops: int = 0
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.step_flops / (self.chips * M.PEAK_FLOPS_BF16)
+        self.memory_s = self.hbm_bytes_dev / M.HBM_BW
+        self.collective_s = self.wire_bytes / M.ICI_BW
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / step FLOPs: how much of the executed compute is the
+        6·N·D 'useful' part (the rest: attention quadratic, MoE dispatch,
+        remat recompute folded into mult)."""
+        return self.model_flops / self.step_flops if self.step_flops else 0.0
+
+    def row(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh_name,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "step_flops": self.step_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "per_device_hbm_gb": self.per_device_hbm / 1e9,
+            "wire_by_kind": self.wire_by_kind,
+            "hlo_collectives": self.hlo_collectives,
+            "collective_ops": self.collective_ops,
+            "raw_cost_flops": self.raw_cost_flops,
+            "unknown_loops": self.unknown_loops,
+        }
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cfg: ArchConfig,
+    kind: str,
+    batch: int,
+    seq: int,
+    cache_len: int,
+    window: int | None,
+    num_nodes: int,
+    microbatches: int,
+    cost: dict,
+    hlo_text: str,
+    memory_analysis,
+    model_flops: float,
+    layout: str = "tp",
+    gossip: str = "dense",
+    serve_layout: str = "sharded",
+) -> Roofline:
+    from repro.launch.hlo_walk import collective_wire_bytes_looped
+    from repro.launch.mesh import node_axes_for
+
+    rep = collective_wire_bytes_looped(hlo_text)
+    arg_b = temp_b = 0.0
+    if memory_analysis is not None:
+        arg_b = float(getattr(memory_analysis, "argument_size_in_bytes", 0))
+        temp_b = float(getattr(memory_analysis, "temp_size_in_bytes", 0))
+    # Outputs are donated (alias inputs): peak ~ args + temps.
+    per_dev_hbm = int(arg_b + temp_b)
+    step_flops = analytic_step_flops(
+        cfg, kind=kind, batch=batch, seq=seq, cache_len=cache_len, window=window
+    )
+    hbm_dev = analytic_hbm_bytes_per_device(
+        cfg, kind=kind, num_nodes=num_nodes, microbatches=microbatches,
+        arg_bytes=arg_b, temp_bytes=temp_b,
+    )
+    mesh_shape = (
+        {"pod": 2, "data": 16, "model": 16} if chips == 512 else {"data": 16, "model": 16}
+    )
+    node_sharded = kind == "train" and num_nodes % mesh_shape["data"] == 0
+    wire = analytic_collective_bytes(
+        cfg, kind=kind, batch=batch, seq=seq, num_nodes=num_nodes,
+        microbatches=microbatches, mesh_shape=mesh_shape,
+        node_sharded=node_sharded, layout=layout, gossip=gossip,
+        serve_layout=serve_layout,
+    )
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh_name=mesh_name,
+        chips=chips,
+        step_flops=step_flops,
+        hbm_bytes_dev=hbm_dev,
+        wire_bytes=float(sum(wire.values())),
+        wire_by_kind=wire,
+        # HLO evidence: count-once per-kind bytes (lower bound; loops run the
+        # same op many times — see analytic_collective_bytes docstring).
+        hlo_collectives={k: round(v) for k, v in collective_wire_bytes(hlo_text).items()},
+        collective_ops=rep.op_counts,
+        model_flops=model_flops,
+        per_device_hbm=per_dev_hbm,
+        raw_cost_flops=float(cost.get("flops", 0.0)),
+        unknown_loops=rep.unknown_loops,
+    ).finalize()

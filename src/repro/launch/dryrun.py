@@ -1,0 +1,314 @@
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers, compiles, and fits — without TPU hardware.
+
+MUST be the very first two lines (before any other import, including repro.*,
+since jax locks the device count on first init):
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+# ---------------------------------------------------------------------------
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.launch import analysis, shapes as SH, sharding as SR, steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as TF
+from repro.optim import adamw
+
+# Per-arch gradient-accumulation factor for train_4k: bounds activation
+# memory (DESIGN §5). Keys are config module names; default 1.
+MICROBATCHES = {
+    "mistral-large-123b": 8,
+    "internvl2-76b": 8,
+    "dbrx-132b": 8,
+    "arctic-480b": 16,
+    "jamba-v0.1-52b": 4,
+    "stablelm-3b": 2,
+    "minicpm-2b": 2,
+    "rwkv6-3b": 2,
+    "llama3.2-1b": 2,
+}
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_train(cfg, mesh, shape, *, num_nodes, microbatches, layout="tp", gossip="dense"):
+    """Returns (fn, args_specs, in_shardings, out_shardings, donate)."""
+    from repro.optim import sgd
+
+    per_node = jax.eval_shape(
+        lambda: TF.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((num_nodes,) + s.shape, s.dtype), per_node
+    )
+    opt_dtype = jnp.dtype(cfg.opt_dtype)
+    if cfg.optimizer == "adamw":
+        opt = jax.eval_shape(lambda p: adamw.init(p, dtype=opt_dtype), params)
+    else:
+        opt = jax.eval_shape(lambda p: sgd.init(p, dtype=opt_dtype), params)
+    w_mix = jax.ShapeDtypeStruct((num_nodes, num_nodes), jnp.float32)
+    batch = SH.train_inputs(cfg, shape, num_nodes, microbatches=microbatches)
+
+    p_sh = SR.param_shardings(params, cfg, mesh, num_nodes=num_nodes)
+    if cfg.optimizer == "adamw":
+        opt_sh = adamw.AdamWState(mu=p_sh, nu=p_sh, count=NamedSharding(mesh, P()))
+    else:
+        opt_sh = sgd.SGDState(momentum=p_sh)
+    b_sh = SR.batch_shardings(batch, mesh, num_nodes=num_nodes, layout=layout)
+    w_sh = NamedSharding(mesh, P())
+
+    # Residual-stream constraint (B, S, d) inside the node vmap: batch over
+    # whatever of ("pod","data") the node axis left free, d_model over TP.
+    from repro.launch.mesh import node_axes_for
+
+    naxes = node_axes_for(num_nodes, mesh)
+    free = tuple(a for a in ("pod", "data") if a in mesh.shape and a not in naxes)
+    if layout == "fsdp_model":
+        free = free + ("model",)
+    per_node_b = shape.global_batch // num_nodes // microbatches
+    bdims = []
+    prod = 1
+    for a in free:
+        if per_node_b % (prod * mesh.shape[a]) == 0:
+            bdims.append(a)
+            prod *= mesh.shape[a]
+    # Residual layout: batch over its axes; d_model over "model" only in the
+    # TP layout (fsdp_model keeps d local and gathers weights instead).
+    dspec = None if layout == "fsdp_model" else "model"
+    act_sh = NamedSharding(mesh, P(tuple(bdims) if bdims else None, None, dspec))
+
+    mix_fn = None
+    if gossip == "sparse":
+        # Topology-aware gossip (§Perf H2): the DecAvg graph is an ER graph
+        # at 2*p* over the cohort; only neighbor shards move (edge-colored
+        # ppermute schedule) instead of the dense node-axis all-gather.
+        import functools
+
+        from repro.core import decavg, mixing as MX, topology as TO
+
+        if num_nodes != mesh.shape.get("data", 0):
+            raise ValueError("sparse gossip requires num_nodes == |data|")
+        g = TO.erdos_renyi(num_nodes, 2.0 * TO.er_critical_p(num_nodes), seed=0)
+        colors = MX.edge_coloring(g)
+        mix_fn = lambda w, p: decavg.mix_permute(
+            w, p, colors, mesh=mesh, node_axis="data"
+        )
+
+    fn = ST.build_train_step(
+        cfg,
+        num_nodes=num_nodes,
+        microbatches=microbatches,
+        optimizer=cfg.optimizer,
+        act_sharding=act_sh,
+        acc_dtype=opt_dtype,  # grad accumulator follows the optimizer dtype
+        mix_fn=mix_fn,
+    )
+    args = (params, opt, w_mix, batch)
+    shardings = (p_sh, opt_sh, w_sh, b_sh)
+    out_shardings = (p_sh, opt_sh, NamedSharding(mesh, P()))
+    return fn, args, shardings, out_shardings, (0, 1)
+
+
+def build_prefill(cfg, mesh, shape):
+    params = jax.eval_shape(lambda: TF.init_params(jax.random.PRNGKey(0), cfg))
+    batch = SH.prefill_inputs(cfg, shape)
+    p_sh = SR.param_shardings(params, cfg, mesh, num_nodes=None)
+    b_sh = SR.prefill_shardings(batch, mesh)
+    fn = ST.build_prefill_step(cfg)
+    data = mesh.shape.get("data", 1)
+    out_sh = NamedSharding(mesh, P("data" if shape.global_batch % data == 0 else None))
+    return fn, (params, batch), (p_sh, b_sh), out_sh, ()
+
+
+def build_decode(cfg, mesh, shape):
+    params = jax.eval_shape(lambda: TF.init_params(jax.random.PRNGKey(0), cfg))
+    inputs = SH.decode_inputs(cfg, shape)
+    p_sh = SR.param_shardings(params, cfg, mesh, num_nodes=None)
+    in_sh = SR.decode_shardings(inputs, cfg, mesh)
+    window = cfg.sliding_window if shape.name == "long_500k" else None
+    fn = ST.build_serve_step(cfg, window=window)
+    args = [params, inputs["token"], inputs["cache"]]
+    shardings = [p_sh, in_sh["token"], in_sh["cache"]]
+    if cfg.enc_dec:
+        args.append(inputs["memory"])
+        shardings.append(in_sh["memory"])
+    out_shardings = (in_sh["token"], in_sh["cache"])
+    donate = (2,)
+    return fn, tuple(args), tuple(shardings), out_shardings, donate
+
+
+def build_decode_pipeline(cfg, mesh, shape):
+    """§Perf H3 serving layout: `data` axis = pipeline stages (weights and
+    cache stay put; activations rotate via ppermute), manual megatron TP
+    over `model`, per-rank int8 KV-head cache. See serve/pipeline_manual.py
+    for why the auto-partitioned variant (serve/pipeline.py) cannot be used
+    at 256 devices."""
+    from repro.serve import pipeline_manual as PM
+
+    clen = SH.decode_cache_len(cfg, shape)
+    tp = mesh.shape["model"]
+    params = jax.eval_shape(lambda: TF.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = PM.param_shardings(cfg, mesh, params)
+    cache = jax.eval_shape(
+        lambda: PM.init_kv_cache(cfg, shape.global_batch, clen, tp=tp)
+    )
+    c_sh = PM.cache_shardings(mesh)
+    token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    window = cfg.sliding_window if shape.name == "long_500k" else None
+    fn = PM.build_manual_pipeline_step(cfg, mesh, window=window)
+    args = (params, token, cache)
+    tok_sh = NamedSharding(mesh, P("pod") if "pod" in mesh.shape else P())
+    shardings = (p_sh, tok_sh, c_sh)
+    out_shardings = (tok_sh, c_sh)
+    return fn, args, shardings, out_shardings, (2,)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, layout: str = "tp", microbatches: int | None = None, gossip: str = "dense", serve_layout: str = "sharded") -> dict[str, Any]:
+    cfg = cfgbase.get(arch)
+    shape = SH.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    num_nodes = cfg.num_nodes_multi_pod if multi_pod else cfg.num_nodes_single_pod
+
+    t0 = time.time()
+    mb = 1
+    window = None
+    cache_len = 0
+    eff_seq = SH.WHISPER_DEC_LEN if cfg.enc_dec else shape.seq_len
+    if shape.kind == "train":
+        mb = microbatches or MICROBATCHES.get(cfg.arch_id, 1)
+        fn, args, in_sh, out_sh, donate = build_train(
+            cfg, mesh, shape, num_nodes=num_nodes, microbatches=mb,
+            layout=layout, gossip=gossip,
+        )
+        model_flops = 6.0 * analysis.active_param_count(cfg) * shape.global_batch * eff_seq
+    elif shape.kind == "prefill":
+        fn, args, in_sh, out_sh, donate = build_prefill(cfg, mesh, shape)
+        model_flops = 2.0 * analysis.active_param_count(cfg) * shape.global_batch * eff_seq
+    else:
+        if serve_layout == "pipeline":
+            fn, args, in_sh, out_sh, donate = build_decode_pipeline(cfg, mesh, shape)
+        else:
+            fn, args, in_sh, out_sh, donate = build_decode(cfg, mesh, shape)
+        window = cfg.sliding_window if shape.name == "long_500k" else None
+        cache_len = SH.decode_cache_len(cfg, shape)
+        model_flops = 2.0 * analysis.active_param_count(cfg) * shape.global_batch
+
+    jitted = jax.jit(
+        fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+    )
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost_raw = compiled.cost_analysis()
+    cost = cost_raw[0] if isinstance(cost_raw, (list, tuple)) else cost_raw
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+
+    roof = analysis.analyze(
+        arch=cfg.arch_id,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=chips,
+        cfg=cfg,
+        kind=shape.kind,
+        batch=shape.global_batch,
+        seq=eff_seq,
+        cache_len=cache_len,
+        window=window,
+        num_nodes=num_nodes,
+        microbatches=mb,
+        cost=dict(cost) if cost else {},
+        hlo_text=hlo,
+        memory_analysis=mem,
+        model_flops=model_flops,
+        layout=layout,
+        gossip=gossip,
+        serve_layout=serve_layout,
+    )
+    row = roof.row()
+    row["layout"] = layout
+    row.update(
+        num_nodes=num_nodes,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        status="ok",
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SH.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every arch x shape")
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp_model"])
+    ap.add_argument("--microbatches", type=int, default=None, help="override per-arch default")
+    ap.add_argument("--gossip", default="dense", choices=["dense", "sparse"])
+    ap.add_argument("--serve-layout", default="sharded", choices=["sharded", "pipeline"])
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    archs = list(cfgbase.ASSIGNED_ARCHS) if args.all or not args.arch else [args.arch]
+    shape_names = list(SH.SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape_name in shape_names:
+            for mp in meshes:
+                tag = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    row = run_one(arch, shape_name, multi_pod=mp, layout=args.layout, microbatches=args.microbatches, gossip=args.gossip, serve_layout=args.serve_layout)
+                    print(
+                        f"[ok] {tag}: dominant={row['dominant']} "
+                        f"compute={row['compute_s']:.3e}s memory={row['memory_s']:.3e}s "
+                        f"collective={row['collective_s']:.3e}s "
+                        f"hbm/dev={row['per_device_hbm_gb']:.2f}GB "
+                        f"(lower {row['lower_s']}s compile {row['compile_s']}s)"
+                    )
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    row = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": f"FAIL: {type(e).__name__}: {e}",
+                    }
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+                results.append(row)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(row) + "\n")
+
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{ok}/{len(results)} combinations lowered+compiled successfully")
+    if ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Post-SPMD HLO walker: attribute collective ops to their enclosing loops
+and multiply by trip counts.
+
+Why: XLA's ``compiled.cost_analysis()`` (and naive text scans) count each op
+ONCE, but our step functions nest everything in loops — the layer scan
+(num_groups), the grad-accumulation scan (microbatches), attention q/kv
+chunk loops, MoE group maps. A collective inside the 88-layer scan moves
+88x the bytes a single-occurrence count reports (observed: useful-FLOPs
+"ratios" of 454 before correction).
+
+Approach: parse computations from the HLO text, build the call graph
+(while/body+condition, fusion/calls, call/to_apply, conditional branches),
+read each while's trip count from the loop-condition's comparison constant,
+then DFS from ENTRY propagating a multiplier. Collective wire bytes are
+summed as bytes x multiplier.
+
+Trip-count parsing is heuristic (largest integer compared in the condition);
+unknown conditions default to 1 and are reported in ``unknown_loops``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# Header params may contain nested parens (tuple types): match lazily up to
+# ") -> " and require a trailing "{".
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALLED = re.compile(r"(condition|body|calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_COLLECTIVE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_WHILE = re.compile(r"\bwhile\(")
+_COMPARE_CONST = re.compile(r"compare\([^)]*\)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: list[str]
+    is_entry: bool = False
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1), [], is_entry=line.startswith("ENTRY"))
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(line)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int | None:
+    """Largest integer constant in the loop condition — counter-style loops
+    compare the induction variable against the trip count."""
+    best: int | None = None
+    for line in cond.lines:
+        for m in _CONST_INT.finditer(line):
+            v = int(m.group(1))
+            if best is None or v > best:
+                best = v
+    return best
+
+
+@dataclasses.dataclass
+class CollectiveReport:
+    wire_by_kind: dict[str, float]
+    op_counts: dict[str, int]
+    unknown_loops: int = 0
+
+    @property
+    def total(self) -> float:
+        return float(sum(self.wire_by_kind.values()))
+
+
+def _line_wire_bytes(line: str) -> tuple[str, float] | None:
+    m = _COLLECTIVE.search(line)
+    if not m:
+        return None
+    result_type, kind, start = m.groups()
+    if "-done" in line.split("=")[1][:40]:
+        return None
+    call = line[m.end() - 1 :]
+    depth = 0
+    end = 0
+    for i, ch in enumerate(call):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    in_b = _array_bytes(call[1:end])
+    out_b = _array_bytes(result_type)
+    if start:  # async start: result tuple contains (in, out, ...) — take diff of halves
+        out_b = max(out_b - in_b, in_b)
+    # HLO call sites don't always annotate operand types; fall back to the
+    # result size (AG: counts the full gathered buffer — an upper bound).
+    if kind == "all-gather":
+        wire = max(out_b - in_b, 0) if in_b else out_b
+    elif kind == "reduce-scatter":
+        wire = max(in_b - out_b, 0) if in_b else out_b
+    elif kind == "all-reduce":
+        wire = 2 * (in_b or out_b)
+    elif kind == "all-to-all":
+        wire = in_b or out_b
+    else:  # collective-permute
+        wire = in_b or out_b
+    return kind, float(wire)
+
+
+def collective_wire_bytes_looped(hlo: str) -> CollectiveReport:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    report = CollectiveReport(wire_by_kind={}, op_counts={})
+    if entry is None:
+        return report
+
+    # multiplier per computation, propagated from ENTRY
+    mult: dict[str, float] = {}
+
+    def visit(comp: Computation, m: float) -> None:
+        if mult.get(comp.name, 0) >= m:
+            return
+        mult[comp.name] = m
+        for line in comp.lines:
+            called = []
+            for cm in _CALLED.finditer(line):
+                role, name = cm.groups()
+                if name in comps:
+                    called.append((role, name))
+            for bm in _BRANCHES.finditer(line):
+                for name in re.split(r"[, ]+", bm.group(1)):
+                    name = name.strip().lstrip("%")
+                    if name in comps:
+                        called.append(("branch", name))
+            is_while = bool(_WHILE.search(line))
+            trip = None
+            if is_while:
+                for role, name in called:
+                    if role.startswith("condition"):
+                        trip = _trip_count(comps[name])
+                if trip is None:
+                    report.unknown_loops += 1
+                    trip = 1
+            for role, name in called:
+                child_m = m * trip if (is_while and role.startswith("body")) else m
+                visit(comps[name], child_m)
+
+    visit(entry, 1.0)
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        for line in comp.lines:
+            res = _line_wire_bytes(line)
+            if res is None:
+                continue
+            kind, wire = res
+            report.wire_by_kind[kind] = report.wire_by_kind.get(kind, 0.0) + wire * m
+            report.op_counts[kind] = report.op_counts.get(kind, 0) + 1
+    return report

@@ -1,0 +1,59 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod = 256 chips as (16, 16) ("data", "model"); multi-pod = 2 pods =
+512 chips as (2, 16, 16) ("pod", "data", "model"). Functions (not module
+constants) so importing never touches jax device state — the dry-run forces
+512 fake host devices *before* any jax init (see dryrun.py), while tests and
+benches see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD_SHAPE = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+# v5e hardware constants for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by tests that exercise the sharded gossip paths."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def node_axes_for(num_nodes: int, mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Longest prefix of ("pod","data") mesh axes the node axis shards over.
+
+    Small archs: num_nodes == pod*data -> fully sharded gossip (the einsum
+    lowers to cross-`data` collectives). Big archs: num_nodes == pods (or 1)
+    -> gossip over the `pod` axis only (cross-silo), params FSDP elsewhere.
+    """
+    out: list[str] = []
+    prod = 1
+    for a in ("pod", "data"):
+        if a not in mesh.shape:
+            continue
+        nxt = prod * mesh.shape[a]
+        if num_nodes % nxt == 0:
+            out.append(a)
+            prod = nxt
+        else:
+            break
+    return tuple(out)

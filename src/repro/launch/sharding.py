@@ -1,0 +1,250 @@
+"""Sharding rules: map every leaf of params / optimizer state / batch /
+cache pytrees to a PartitionSpec on the production mesh.
+
+Policy (DESIGN.md §5):
+- node axis (leading, training only): sharded over the longest prefix of
+  ("pod", "data") that divides num_nodes (mesh.node_axes_for); replicated
+  otherwise (big archs, FSDP carries the memory instead).
+- tensor parallel ("model"): the conventional TP dim of each matrix — the
+  fused-head / ffn / expert dim on in-projections, the contraction dim on
+  out-projections (megatron column/row split). MoE experts use expert
+  parallelism (E -> "model") so dispatch/combine lower to all-to-alls.
+- FSDP ("data", only when the node axis leaves it free): the d_model dim of
+  each large matrix; gathered per-layer by XLA during the scan.
+
+Implemented as a generic heuristic over trailing dims + explicit overrides,
+with divisibility checks (e.g. minicpm's vocab 122753 falls back to
+replicating the vocab dim and sharding d_model).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import node_axes_for
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _divides(dim: int, size: int) -> bool:
+    return dim % size == 0
+
+
+def leaf_spec(
+    path: str,
+    shape: tuple[int, ...],
+    cfg: ArchConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    node_axes: tuple[str, ...] = (),
+    has_node_axis: bool = False,
+) -> P:
+    """PartitionSpec for one parameter leaf."""
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+    data_free = "data" not in node_axes
+    ndim = len(shape)
+    specs: list = [None] * ndim
+    start = 0
+    if has_node_axis:
+        specs[0] = node_axes if node_axes else None
+        start = 1
+
+    body = shape[start:]
+    if not body:
+        return P(*specs)
+    off = start  # index offset of body dim 0 in the full shape
+
+    def try_set(rel_idx: int, axis: str, size: int) -> bool:
+        i = off + (rel_idx % len(body))
+        if specs[i] is None and _divides(shape[i], size):
+            specs[i] = axis
+            return True
+        return False
+
+    # Leading scan axis (layer groups) is never sharded: treat dims after it.
+    # Identify by path: blocks/cross/encoder leaves have the group axis first.
+    is_stacked = any(seg in path for seg in ("blocks/", "cross/", "encoder/blocks"))
+    if is_stacked and len(body) >= 1:
+        off += 1
+        body = body[1:]
+        if not body:
+            return P(*specs)
+
+    if len(body) == 1:
+        return P(*specs)  # norms / biases / small vectors: replicate
+
+    # --- explicit family rules -------------------------------------------
+    if path.endswith("embed"):
+        # Token-gather tables: shard d_model only. A vocab-sharded table
+        # turns every embedding lookup into an SPMD full-rematerialization
+        # (observed: multi-GB replicated gather transients); the table itself
+        # is small next to layer weights.
+        try_set(-1, "model", model)
+        return P(*specs)
+
+    if "/moe/" in path:
+        name = path.rsplit("/", 1)[-1]
+        if name == "router":  # (d, E)
+            try_set(-1, "model", model)
+            if data_free:
+                try_set(0, "data", data)
+            return P(*specs)
+        if name in ("w_gate", "w_in", "w_out") and len(body) == 3:  # (E, d|ff, ff|d)
+            try_set(0, "model", model)  # expert parallelism
+            if data_free:
+                # FSDP the larger of the two non-expert dims.
+                rel = 1 if shape[off + 1] >= shape[off + 2] else 2
+                try_set(rel, "data", data)
+            return P(*specs)
+        # dense-residual ffn inside moe falls through to the generic rule.
+
+    # --- generic megatron-style rule -------------------------------------
+    last = body[-1]
+    if last == cfg.d_model and len(body) >= 2:
+        # out-projection (X, d): TP on X (row-parallel), FSDP on d.
+        try_set(-2, "model", model)
+        if data_free:
+            try_set(-1, "data", data)
+    else:
+        # in-projection (d, X) or embedding (V, d-like): TP on the last dim.
+        try_set(-1, "model", model)
+        if data_free:
+            try_set(-2, "data", data)
+    return P(*specs)
+
+
+def param_shardings(
+    shapes_tree: PyTree,
+    cfg: ArchConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    num_nodes: int | None = None,
+) -> PyTree:
+    """NamedSharding tree for a param (or optimizer-state) shape tree.
+
+    num_nodes=None -> serving layout (no node axis).
+    """
+    has_node = num_nodes is not None
+    naxes = node_axes_for(num_nodes, mesh) if has_node else ()
+
+    def one(path, leaf):
+        spec = leaf_spec(
+            _path_str(path),
+            tuple(leaf.shape),
+            cfg,
+            mesh,
+            node_axes=naxes,
+            has_node_axis=has_node,
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def batch_shardings(
+    shapes_tree: PyTree,
+    mesh: jax.sharding.Mesh,
+    *,
+    num_nodes: int,
+    layout: str = "tp",
+) -> PyTree:
+    """Train inputs (M, N, B, ...): microbatch axis unsharded, node axis over
+    its mesh axes, per-node batch over whatever of ("pod","data") the node
+    axis left unused — plus "model" in the fsdp_model layout (small archs:
+    batch-parallel over the model axis, weights gathered ZeRO-3 style,
+    instead of 16-way tensor parallelism)."""
+    naxes = node_axes_for(num_nodes, mesh)
+    free = tuple(a for a in ("pod", "data") if a in mesh.shape and a not in naxes)
+    if layout == "fsdp_model":
+        free = free + ("model",)
+
+    def one(leaf):
+        b = leaf.shape[2]
+        bspec = None
+        if free:
+            prod = 1
+            used = []
+            for a in free:
+                if b % (prod * mesh.shape[a]) == 0:
+                    used.append(a)
+                    prod *= mesh.shape[a]
+            bspec = tuple(used) if used else None
+        spec = [None, naxes if naxes else None, bspec] + [None] * (leaf.ndim - 3)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, shapes_tree)
+
+
+def decode_shardings(
+    inputs: dict,
+    cfg: ArchConfig,
+    mesh: jax.sharding.Mesh,
+) -> dict:
+    """Serve-step inputs.
+
+    - token (B,): batch over "data" when divisible.
+    - attention caches (B, T, hkv, hd): batch over "data", cache seq over
+      "model" (flash-decoding: XLA partial-softmaxes over the sharded T and
+      combines with a small collective).
+    - recurrent states: batch over "data", inner (d-like) dim over "model".
+    - memory (B, T, d): batch over "data".
+    """
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+
+    def bspec(b):
+        return "data" if b % data == 0 else None
+
+    def cache_leaf(path, leaf):
+        pstr = _path_str(path)
+        shp = leaf.shape
+        if pstr.endswith("index") or leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        # leading group-stack axis then (B, ...) body
+        specs: list = [None] * leaf.ndim
+        specs[1] = bspec(shp[1])
+        if pstr.endswith("/k") or pstr.endswith("/v"):
+            if shp[2] % model == 0:
+                specs[2] = "model"  # cache seq dim -> flash-decoding split
+        elif pstr.endswith("ssm") or pstr.endswith("conv"):
+            # (G, B, di, n) or (G, B, K-1, di): shard the di dim.
+            di_idx = 2 if pstr.endswith("ssm") else 3
+            if shp[di_idx] % model == 0:
+                specs[di_idx] = "model"
+        elif pstr.endswith("wkv"):
+            if shp[2] % model == 0:
+                specs[2] = "model"  # heads
+        elif pstr.endswith("shift"):
+            if shp[2] % model == 0:
+                specs[2] = "model"  # d_model
+        return NamedSharding(mesh, P(*specs))
+
+    out: dict = {}
+    for k, v in inputs.items():
+        if k == "cache":
+            out[k] = jax.tree_util.tree_map_with_path(cache_leaf, v)
+        elif k == "token":
+            out[k] = NamedSharding(mesh, P(bspec(v.shape[0])))
+        else:  # memory / frames: (B, T, d)
+            out[k] = NamedSharding(mesh, P(bspec(v.shape[0]), None, None))
+    return out
+
+
+def prefill_shardings(inputs: dict, mesh: jax.sharding.Mesh) -> dict:
+    data = mesh.shape.get("data", 1)
+
+    def one(leaf):
+        b = leaf.shape[0]
+        spec = ["data" if b % data == 0 else None] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return {k: jax.tree.map(one, v) for k, v in inputs.items()}

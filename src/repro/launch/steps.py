@@ -1,0 +1,129 @@
+"""Step-function builders: the decentralized train step (local grad step +
+DecAvg gossip), the prefill step, and the serve (decode) step.
+
+These are what the dry-run lowers and what launch/train.py / launch/serve.py
+drive for real. Everything is a pure function of (params, opt_state, mixing
+matrix, batch) so jit + in_shardings fully describes the distribution.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import decavg
+from repro.models import transformer as TF
+from repro.optim import adamw, sgd
+from repro.train.losses import lm_loss
+
+PyTree = Any
+
+
+def node_loss_fn(
+    cfg: ArchConfig,
+    *,
+    aux_coef: float = 0.01,
+    remat: bool = True,
+    act_sharding=None,
+):
+    """Per-node LM loss over one (B, S) batch dict."""
+
+    def loss(params: PyTree, batch: dict) -> jax.Array:
+        kw = {}
+        if cfg.enc_dec:
+            kw["memory"] = TF.encode(params, cfg, batch["frames"])
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        logits, aux = TF.forward(
+            params, cfg, batch["tokens"], remat=remat, act_sharding=act_sharding, **kw
+        )
+        return lm_loss(logits, batch["labels"]) + aux_coef * aux
+
+    return loss
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    *,
+    num_nodes: int,
+    microbatches: int = 1,
+    optimizer: str = "adamw",
+    lr: float = 3e-4,
+    aux_coef: float = 0.01,
+    mix_fn: Callable | None = None,
+    act_sharding=None,
+    acc_dtype=jnp.float32,
+) -> Callable:
+    """One DecAvg communication round at LLM-cohort scale.
+
+    Signature: (params, opt_state, w_mix, batch) -> (params, opt_state, loss)
+    with every batch leaf shaped (num_nodes, B, ...) and every param leaf
+    node-stacked. The gossip is a mixing-matrix einsum on the node axis —
+    sharded node axes make XLA lower it to the cross-pod/data collectives
+    (DESIGN.md §5).
+    """
+    loss_fn = node_loss_fn(cfg, aux_coef=aux_coef, act_sharding=act_sharding)
+    opt_update = adamw.update if optimizer == "adamw" else sgd.update
+    mix = mix_fn or decavg.mix_dense
+
+    # Batch leaves arrive as (microbatches, N, B/mb, ...): the microbatch
+    # axis is a *leading input axis*, not an in-step reshape — splitting a
+    # data-sharded batch dim inside the step defeats GSPMD's sharding
+    # propagation (observed: activations silently replicated, 17 GB/device).
+    def all_node_grads(params: PyTree, batch: dict) -> tuple[PyTree, jax.Array]:
+        def one_mb(carry, b):
+            g_acc, l_acc = carry
+            losses, grads = jax.vmap(jax.value_and_grad(loss_fn, argnums=0))(params, b)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+            return (g_acc, l_acc + losses.mean()), None
+
+        if microbatches == 1:
+            b = jax.tree.map(lambda x: x[0], batch)
+            losses, grads = jax.vmap(jax.value_and_grad(loss_fn, argnums=0))(params, b)
+            return grads, losses.mean()
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        (g, l), _ = jax.lax.scan(one_mb, (g0, jnp.zeros((), jnp.float32)), batch)
+        inv = 1.0 / microbatches
+        return jax.tree.map(lambda x: x * inv, g), l * inv
+
+    def train_step(params, opt_state, w_mix, batch):
+        grads, loss = all_node_grads(params, batch)
+        params, opt_state = opt_update(grads, opt_state, params, lr=lr)
+        params = mix(w_mix, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig) -> Callable:
+    """Inference prefill: full-sequence forward -> last-token logits.
+    (KV-cache materialization is exercised by the decode shapes; see
+    EXPERIMENTS.md §Dry-run notes.)"""
+
+    def prefill_step(params, batch: dict):
+        kw = {}
+        if cfg.enc_dec:
+            kw["memory"] = TF.encode(params, cfg, batch["frames"])
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        logits, _ = TF.forward(params, cfg, batch["tokens"], last_only=True, **kw)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig, *, window: int | None = None) -> Callable:
+    """Single-token decode against an existing cache (decode_32k/long_500k)."""
+
+    def serve_step(params, token, cache, memory=None):
+        logits, cache = TF.decode_step(
+            params, cfg, token, cache, memory=memory, window=window
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step

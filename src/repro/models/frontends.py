@@ -1,0 +1,42 @@
+"""STUB modality frontends (the one sanctioned carve-out, see DESIGN.md §4).
+
+We do not implement a mel-spectrogram conv codec or a ViT: the assigned
+[audio]/[vlm] entries specify the *transformer backbone* only. These helpers
+produce (a) deterministic synthetic embeddings for smoke tests / examples and
+(b) ShapeDtypeStruct stand-ins for the dry-run, with the right shapes:
+
+- audio (whisper): (B, T_frames, d_model) frame embeddings, the output the
+  conv1d×2 + GELU frontend would produce.
+- vlm (internvl2): (B, P, d_model) projected patch embeddings, the output of
+  InternViT + MLP projector; the LM consumes them as a prefix to the token
+  embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def audio_frames(key, cfg: ArchConfig, batch: int, num_frames: int) -> jax.Array:
+    """Synthetic encoder-input frame embeddings (stub for mel+conv)."""
+    return (
+        jax.random.normal(key, (batch, num_frames, cfg.d_model)) * cfg.d_model**-0.5
+    ).astype(cfg.dtype())
+
+
+def patch_embeddings(key, cfg: ArchConfig, batch: int, num_patches: int) -> jax.Array:
+    """Synthetic projected vision-patch embeddings (stub for ViT+projector)."""
+    return (
+        jax.random.normal(key, (batch, num_patches, cfg.d_model)) * cfg.d_model**-0.5
+    ).astype(cfg.dtype())
+
+
+def audio_frames_spec(cfg: ArchConfig, batch: int, num_frames: int):
+    return jax.ShapeDtypeStruct((batch, num_frames, cfg.d_model), cfg.dtype())
+
+
+def patch_embeddings_spec(cfg: ArchConfig, batch: int, num_patches: int):
+    return jax.ShapeDtypeStruct((batch, num_patches, cfg.d_model), cfg.dtype())

@@ -1,0 +1,378 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full / chunked /
+sliding-window / cached-decode), SwiGLU FFN.
+
+Conventions:
+- Pure functions over explicit param dicts; no framework objects.
+- Params live in ``param_dtype`` (bf16 at scale); matmuls run in the param
+  dtype with f32 accumulation where it matters (norm stats, softmax, RoPE).
+- Shapes: activations (B, S, d); attention weights are (d, H*hd) etc. so the
+  head axis is a trailing reshape — this keeps every matmul 128-aligned for
+  the MXU and lets the `model` mesh axis shard the fused head dim.
+- Long sequences: `attention` switches to an online-softmax scan over KV
+  chunks (flash-attention recurrence in pure JAX) so the (S, S) logits
+  matrix is never materialized — required for prefill_32k to fit HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Norms & embeddings
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x: jax.Array, p: PyTree, kind: str = "rms") -> jax.Array:
+    if kind == "rms":
+        return rms_norm(x, p["w"])
+    return layer_norm(x, p["w"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,). Rotates pairs (even, odd)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(qpos: jax.Array, kpos: jax.Array, *, causal: bool, window: int | None) -> jax.Array:
+    """(..., S, T) additive bias: 0 where attendable, -inf where masked."""
+    ok = jnp.ones(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]), dtype=bool)
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= k > q - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    qpos: jax.Array,
+    kpos: jax.Array,
+    *,
+    causal: bool,
+    window: int | None,
+) -> jax.Array:
+    """Materialized-logits attention. q: (B,S,H,hd), k/v: (B,T,Hkv,hd)."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = hd**-0.5
+    qf = q.astype(jnp.float32).reshape(b, s, hkv, g, hd)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qf, k.astype(jnp.float32)) * scale
+    bias = _mask_bias(qpos, kpos, causal=causal, window=window)  # (B,S,T) or (S,T)
+    while bias.ndim < logits.ndim:
+        bias = bias[:, None] if bias.ndim >= 3 else bias[None]
+    probs = jax.nn.softmax(logits + bias, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    qpos: jax.Array,
+    kpos: jax.Array,
+    *,
+    causal: bool,
+    window: int | None,
+    kv_chunk: int = 1024,
+    q_chunk: int = 1024,
+) -> jax.Array:
+    """2D-tiled online-softmax attention (flash recurrence in pure JAX).
+
+    Outer scan over query chunks, inner scan over KV chunks — peak extra
+    memory is one (B, q_chunk, H, kv_chunk) logits tile, never (S, T).
+    Required for prefill_32k to fit HBM (a KV-only tiling still materializes
+    an S-long tile per chunk: 67 GB/device at 32 k, observed).
+    """
+    b, s, h, hd = q.shape
+    if s > q_chunk:
+        pad_q = (-s) % q_chunk
+        if pad_q:
+            q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+            qpos = jnp.pad(qpos, (0, pad_q), constant_values=jnp.iinfo(jnp.int32).max - 1)
+        nq = (s + pad_q) // q_chunk
+        qs = q.reshape(b, nq, q_chunk, h, hd).swapaxes(0, 1)
+        qps = qpos.reshape(nq, q_chunk)
+
+        def do_chunk(args):
+            qc, qp = args
+            return chunked_attention(
+                qc, k, v, qp, kpos,
+                causal=causal, window=window,
+                kv_chunk=kv_chunk, q_chunk=q_chunk,
+            )
+
+        out = jax.lax.map(do_chunk, (qs, qps))
+        out = out.swapaxes(0, 1).reshape(b, nq * q_chunk, h, hd)[:, :s]
+        return out
+    t, hkv = k.shape[1], k.shape[2]
+    if t % kv_chunk:
+        pad = (-t) % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        t += pad
+    g = h // hkv
+    scale = hd**-0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, s, hkv, g, hd)
+    nchunks = t // kv_chunk
+    kc = k.reshape(b, nchunks, kv_chunk, hkv, hd)
+    vc = v.reshape(b, nchunks, kv_chunk, hkv, hd)
+    pc = kpos.reshape(nchunks, kv_chunk)
+
+    def step(carry, inputs):
+        m, l, acc = carry  # (B,S,hkv,g,1), (B,S,hkv,g,1), (B,S,hkv,g,hd)
+        kb, vb, pb = inputs  # (B,C,hkv,hd), (B,C,hkv,hd), (C,)
+        logits = jnp.einsum("bshgd,bchd->bshgc", qf, kb.astype(jnp.float32))
+        bias = _mask_bias(qpos, pb, causal=causal, window=window)  # (S, C)
+        # Finite mask value: a fully-masked chunk must not poison the online
+        # max with -inf (exp(-inf - -inf) = nan); bogus contributions from
+        # all-masked chunks are wiped by `corr` once a real chunk arrives
+        # (every causal query attends at least itself, so one always does).
+        bias = jnp.maximum(bias, -1e9)
+        logits = logits + bias[None, :, None, None, :]
+        m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum("bshgc,bchd->bshgd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, s, hkv, g, 1), -jnp.inf, jnp.float32),
+        jnp.zeros((b, s, hkv, g, 1), jnp.float32),
+        jnp.zeros((b, s, hkv, g, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        init,
+        (jnp.swapaxes(kc, 0, 1), jnp.swapaxes(vc, 0, 1), pc),
+    )
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    qpos: jax.Array,
+    kpos: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_chunk: int = 1024,
+    dense_threshold: int = 2048 * 2048,
+) -> jax.Array:
+    """Dispatch between materialized and chunked attention by S*T size.
+
+    The threshold is deliberately small: a materialized (B, H, S, T) f32
+    logits tensor at S=T=4096 and production batch is a TB-scale transient
+    (~100 GB/device at mistral-123b train_4k, observed); the 2D-tiled path
+    keeps the tile at O(q_chunk * kv_chunk)."""
+    s, t = q.shape[1], k.shape[1]
+    if s * t <= dense_threshold or s == 1:
+        return dense_attention(q, k, v, qpos, kpos, causal=causal, window=window)
+    return chunked_attention(
+        q, k, v, qpos, kpos, causal=causal, window=window, kv_chunk=kv_chunk
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: int | None = None
+    use_rope: bool = True
+
+
+def init_attention(key, d_model: int, spec: AttnSpec, dtype) -> PyTree:
+    h, hkv, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = d_model**-0.5
+    s_out = (h * hd) ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d_model, h * hd)) * s_in).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, hkv * hd)) * s_in).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, hkv * hd)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * hd, d_model)) * s_out).astype(dtype),
+    }
+
+
+def attention_layer(
+    p: PyTree,
+    x: jax.Array,
+    spec: AttnSpec,
+    *,
+    positions: jax.Array | None = None,
+    cache: PyTree | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, PyTree | None]:
+    """GQA attention over (B, S, d).
+
+    Modes:
+    - full-sequence (cache=None): self-attention over x.
+    - decode (cache={'k','v','index'}): S==1 query against the cache; the
+      cache is a ring buffer of length T (sliding-window archs size it to
+      the window), updated functionally and returned.
+    - cross (cross_kv=(k, v)): encoder-decoder cross-attention; no rope on
+      k/v (they carry encoder positions already), cache unused.
+    """
+    b, s, d = x.shape
+    h, hkv, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        t = k.shape[1]
+        qpos = jnp.arange(s)
+        kpos = jnp.arange(t)
+        out = attention(q, k, v, qpos, kpos, causal=False, window=None)
+        return (out.reshape(b, s, h * hd) @ p["wo"]).astype(x.dtype), None
+
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+
+    if cache is None:
+        pos = jnp.arange(s) if positions is None else positions
+        if spec.use_rope:
+            q = apply_rope(q, pos, spec.rope_theta)
+            k = apply_rope(k, pos, spec.rope_theta)
+        out = attention(
+            q, k, v, jnp.asarray(pos), jnp.asarray(pos),
+            causal=spec.causal, window=spec.window,
+        )
+        return (out.reshape(b, s, h * hd) @ p["wo"]).astype(x.dtype), None
+
+    # --- decode: single new token against a (possibly ring) cache ---------
+    assert s == 1, "decode mode expects a single query token"
+    index = cache["index"]  # scalar int32: absolute position of the new token
+    t = cache["k"].shape[1]
+    if spec.use_rope:
+        q = apply_rope(q, index[None], spec.rope_theta)
+        k = apply_rope(k, index[None], spec.rope_theta)
+    slot = jnp.mod(index, t)  # ring-buffer slot (t == window for SWA archs)
+    quantized = cache["k"].dtype == jnp.int8
+    new_cache = {"index": index + 1}
+    if quantized:
+        # int8 KV cache: per-(token, head) absmax scales — halves decode HBM
+        # and keeps 32k-cache serving under the v5e budget (EXPERIMENTS §Perf
+        # H3). Error is bounded by 1/127 of the per-head absmax.
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=1)
+        new_cache.update(k=ck, v=cv, k_scale=cks, v_scale=cvs)
+        ck_f = ck.astype(jnp.float32) * cks
+        cv_f = cv.astype(jnp.float32) * cvs
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        new_cache.update(k=ck, v=cv)
+        ck_f, cv_f = ck, cv
+    # Absolute positions of each ring slot, given `index` was just written.
+    slots = jnp.arange(t)
+    kpos = index + slots - slot - jnp.where(slots > slot, t, 0)
+    kpos = jnp.where(kpos < 0, jnp.iinfo(jnp.int32).max, kpos)  # unwritten slots
+    out = attention(
+        q, ck_f, cv_f, index[None], kpos, causal=True, window=spec.window
+    )
+    y = (out.reshape(b, 1, h * hd) @ p["wo"]).astype(x.dtype)
+    return y, new_cache
+
+
+def _quant_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization over the head_dim axis.
+    x: (B, S, Hkv, hd) -> (int8 values, f32 scales (B, S, Hkv, 1))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model**-0.5
+    s_out = d_ff**-0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_in": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def swiglu_ffn(p: PyTree, x: jax.Array) -> jax.Array:
+    return ((jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]).astype(x.dtype)
+
+
+def gelu_ffn(p: PyTree, x: jax.Array) -> jax.Array:
+    """2-matrix GELU FFN (whisper-style); reuses w_in/w_out."""
+    return (jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]).astype(x.dtype)

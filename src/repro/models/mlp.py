@@ -1,0 +1,44 @@
+"""The paper's local model: a 3-hidden-layer MLP (512, 256, 128) with ReLU.
+
+Used by the faithful reproduction (100-node MNIST-scale experiments) and as
+the `paper-mlp` architecture config.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+HIDDEN = (512, 256, 128)
+
+
+def init_mlp(
+    key,
+    in_dim: int = 784,
+    hidden: Sequence[int] = HIDDEN,
+    num_classes: int = 10,
+    dtype=jnp.float32,
+) -> PyTree:
+    dims = [in_dim, *hidden, num_classes]
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        # He init for ReLU nets.
+        w = jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((b,), dtype)})
+    return {"layers": tuple(params)}
+
+
+def mlp_forward(params: PyTree, x: jax.Array) -> jax.Array:
+    """x: (..., in_dim) -> logits (..., num_classes)."""
+    h = x
+    layers = params["layers"]
+    for i, p in enumerate(layers):
+        h = h @ p["w"] + p["b"]
+        if i < len(layers) - 1:
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based dispatch/combine.
+
+TPU-native (GShard/Switch) formulation: routing produces one-hot dispatch
+tensors and expert compute is a dense batched einsum over an explicit
+``expert`` axis — no gather/scatter, fully shardable. The expert axis is
+sharded over the `model` mesh axis (expert parallelism); the dispatch einsum
+``(T,E,C),(T,d)->(E,C,d)`` lowers to the all-to-all the MoE literature
+expects.
+
+FLOPs honesty for the roofline: with capacity factor f, expert FLOPs are
+``2 * E * C * d * ff * 3`` where ``E*C = f * k * T`` — i.e. proportional to
+*active* (top-k) compute, not total experts. Router + dispatch overhead is
+``O(T*E*C)`` and is reported separately by the roofline notes.
+
+Load-balancing: standard switch auxiliary loss (mean_prob * mean_assignment
+per expert, scaled by E) is returned alongside the output so the trainer can
+add it — router collapse is the classic decentralized-MoE failure mode and
+the DecAvg gossip *averages router weights across nodes*, which the
+EXPERIMENTS §Perf notes discuss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import swiglu_ffn
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    dense_d_ff: int = 0
+    # Routing-group size: dispatch/combine one-hots are materialized per
+    # group, never for the full token stream. The (Tg, E, Cg) tensor is
+    # O(Tg^2 * cf * k) bytes *independent of E*; ungrouped 32k-prefill
+    # dispatch is a multi-TB tensor (observed 8 TB/device at dbrx).
+    group_size: int = 2048
+
+
+def init_moe(key, d_model: int, spec: MoESpec, dtype) -> PyTree:
+    e, ff = spec.num_experts, spec.d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in = d_model**-0.5
+    s_out = ff**-0.5
+    p = {
+        "router": (jax.random.normal(k1, (d_model, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (e, d_model, ff)) * s_in).astype(dtype),
+        "w_in": (jax.random.normal(k3, (e, d_model, ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k4, (e, ff, d_model)) * s_out).astype(dtype),
+    }
+    if spec.dense_residual:
+        from repro.models.layers import init_ffn
+
+        p["dense"] = init_ffn(k5, d_model, spec.dense_d_ff or spec.d_ff, dtype)
+    return p
+
+
+def _capacity(tokens: int, spec: MoESpec) -> int:
+    c = int(spec.capacity_factor * spec.top_k * tokens / spec.num_experts)
+    return max(c, 1)
+
+
+def _moe_group(p: PyTree, xt: jax.Array, spec: MoESpec) -> tuple[jax.Array, jax.Array]:
+    """Route + dispatch + expert FFN + combine for ONE token group.
+
+    xt: (Tg, d). Returns (out (Tg, d), aux scalar). The expert axis is the
+    EP-sharded one; the dispatch einsum lowers to the all-to-all.
+    """
+    t, d = xt.shape
+    e, k = spec.num_experts, spec.top_k
+    c = _capacity(t, spec)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (Tg, k)
+    gate_vals = gate_vals / (gate_vals.sum(axis=-1, keepdims=True) + 1e-9)
+
+    # Position of each (token, choice) within its expert's capacity buffer:
+    # cumulative count of prior assignments to the same expert.
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (Tg, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, k, e)
+    pos = (pos_in_expert * onehot).sum(-1)  # (Tg, k)
+    keep = pos < c  # overflow tokens are dropped (standard capacity behavior)
+
+    # Dispatch (Tg, E, C) and combine (gate-weighted) tensors.
+    pos_oh = jax.nn.one_hot(pos, c, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(jnp.float32), pos_oh)
+    comb = jnp.einsum("tk,tke,tkc->tec", gate_vals, onehot.astype(jnp.float32), pos_oh)
+
+    ex_in = jnp.einsum("tec,td->ecd", disp, xt.astype(jnp.float32)).astype(xt.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", ex_in, p["w_in"]
+    )
+    ex_out = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    out = jnp.einsum("tec,ecd->td", comb, ex_out.astype(jnp.float32)).astype(xt.dtype)
+
+    # Switch aux loss: E * sum_e fraction_tokens_e * mean_prob_e.
+    frac = onehot[:, 0, :].astype(jnp.float32).mean(axis=0)  # top-1 assignment share
+    mean_prob = probs.mean(axis=0)
+    aux = e * jnp.sum(frac * mean_prob)
+    return out, aux
+
+
+def moe_ffn(p: PyTree, x: jax.Array, spec: MoESpec) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Tokens are flattened to T = B*S and processed in routing groups of
+    ``spec.group_size`` via a checkpointed ``lax.map`` — capacity (and token
+    dropping) is per-group, the GShard convention, and peak dispatch memory
+    is one group's (Tg, E, Cg) tensor instead of the full stream's.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    g = min(spec.group_size, t)
+    pad = (-t) % g
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    ngroups = (t + pad) // g
+    xg = xt.reshape(ngroups, g, d)
+
+    if ngroups == 1:
+        out, aux = _moe_group(p, xg[0], spec)
+    else:
+        body = jax.checkpoint(
+            lambda xs: _moe_group(p, xs, spec), prevent_cse=False
+        )
+        out, auxes = jax.lax.map(body, xg)
+        out = out.reshape(ngroups * g, d)
+        aux = auxes.mean()
+    out = out.reshape(-1, d)[:t].reshape(b, s, d)
+
+    if spec.dense_residual:
+        out = out + swiglu_ffn(p["dense"], x)
+    return out, aux

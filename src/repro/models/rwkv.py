@@ -1,0 +1,227 @@
+"""RWKV-6 ("Finch") block: token-shift mixing + data-dependent-decay WKV.
+
+Attention-free: per head h of size D, the time-mixing state is a (D, D)
+matrix S updated per token with a *data-dependent* diagonal decay w_t
+(the Finch contribution vs RWKV-5's static decay):
+
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t
+    o_t = r_t @ (diag(u) k_t^T v_t + S_{t-1})
+
+TPU adaptation: like mamba.py, the recurrence runs as a chunked scan —
+within a chunk we materialize per-step decays and use the classic
+"chunked linear attention" decomposition (intra-chunk pairwise term with a
+decay-ratio mask + inter-chunk state term), so the bulk of the compute is
+MXU matmuls; a short lax.scan carries S across chunks. Decode is the exact
+single-step update.
+
+The decay LoRA (w = base + tanh(x A) B) and the token-shift interpolation
+factors follow the RWKV-6 paper's structure; channel-mixing is the standard
+RWKV squared-relu FFN (d_ff from the config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVSpec:
+    head_dim: int = 64
+    decay_lora: int = 64
+    # chunk * |log w|_max must stay < ~80 so the intra-chunk exp(-cum) factor
+    # cannot overflow f32 (see the clamp in rwkv_block): 32 * 2 = 64 < 80.
+    chunk: int = 32
+
+    def heads(self, d_model: int) -> int:
+        assert d_model % self.head_dim == 0
+        return d_model // self.head_dim
+
+
+def init_rwkv(key, d_model: int, spec: RWKVSpec, dtype) -> PyTree:
+    h = spec.heads(d_model)
+    hd = spec.head_dim
+    ks = jax.random.split(key, 10)
+    s = d_model**-0.5
+    lin = lambda k, i, o, sc: (jax.random.normal(k, (i, o)) * sc).astype(dtype)
+    return {
+        # token-shift interpolation factors per channel, one per projection
+        "mu": (0.5 * jnp.ones((5, d_model))).astype(dtype),  # r,k,v,g,w
+        "wr": lin(ks[0], d_model, d_model, s),
+        "wk": lin(ks[1], d_model, d_model, s),
+        "wv": lin(ks[2], d_model, d_model, s),
+        "wg": lin(ks[3], d_model, d_model, s),
+        "w_base": jnp.full((d_model,), -6.0, jnp.float32),
+        "w_lora_a": lin(ks[4], d_model, spec.decay_lora, s),
+        "w_lora_b": lin(ks[5], spec.decay_lora, d_model, spec.decay_lora**-0.5),
+        "u_bonus": (jax.random.normal(ks[6], (h, hd)) * 0.1).astype(jnp.float32),
+        "wo": lin(ks[7], d_model, d_model, s),
+        "ln_w": jnp.ones((d_model,), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Return x_{t-1} (zero / cache for the first position)."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk):
+    """Chunked WKV recurrence.
+
+    r,k,v,w: (B, S, H, D) with w the per-step decay in (0,1); u: (H, D).
+    s0: (B, H, D, D) initial state. Returns (out (B,S,H,D), s_last).
+    """
+    b, s, h, d = r.shape
+    pad = (-s) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)
+    nc = (s + pad) // chunk
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, h, d).swapaxes(0, 1)
+
+    rc, kc, vc, wc = map(resh, (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-12))
+    cum = jnp.cumsum(logw, axis=2)  # (nc, B, C, H, D) cumulative log-decay incl. t
+
+    def outer2(state, inputs):
+        rb, kb, vb, cumb, logwb = inputs  # (B,C,H,D)
+        cum_prev = cumb - logwb  # prod_{i<t} within chunk (log)
+        # inter-chunk term: o_inter[t] = (r_t * exp(cum_prev_t)) @ S
+        r_in = (rb * jnp.exp(cum_prev)).astype(jnp.float32)
+        o_inter = jnp.einsum("bchd,bhde->bche", r_in, state)
+        # intra-chunk pairwise: A[t,s] = sum_d r_t[d] exp(cum_prev_t - cum_s)[d] k_s[d] for s < t
+        # plus the bonus diagonal term u for s == t.
+        q_dec = rb * jnp.exp(cum_prev)
+        k_dec = kb * jnp.exp(-cumb)
+        att = jnp.einsum("bchd,bghd->bhcg", q_dec, k_dec)  # (B,H,C,C) over positions c>g
+        c_idx = jnp.arange(rb.shape[1])
+        mask = (c_idx[:, None] > c_idx[None, :]).astype(att.dtype)
+        att = att * mask[None, None]
+        diag = jnp.einsum("bchd,hd,bchd->bch", rb, u, kb)  # bonus at s == t
+        o_intra = jnp.einsum("bhcg,bghe->bche", att, vb) + diag[..., None] * vb
+        # state update: S' = diag(prod_chunk w) S + sum_s exp(cum_last - cum_s) k_s v_s
+        total = cumb[:, -1:]  # (B,1,H,D)
+        k_tail = kb * jnp.exp(total - cumb)
+        s_new = jnp.exp(total[:, 0])[..., None] * state + jnp.einsum(
+            "bchd,bche->bhde", k_tail, vb
+        )
+        return s_new, o_inter + o_intra
+
+    s_last, outs = jax.lax.scan(
+        outer2,
+        s0.astype(jnp.float32),
+        (
+            rc.astype(jnp.float32),
+            kc.astype(jnp.float32),
+            vc.astype(jnp.float32),
+            cum.astype(jnp.float32),
+            logw.astype(jnp.float32),
+        ),
+    )
+    out = outs.swapaxes(0, 1).reshape(b, nc * chunk, h, d)[:, :s]
+    return out, s_last
+
+
+def rwkv_block(
+    p: PyTree,
+    x: jax.Array,
+    spec: RWKVSpec,
+    *,
+    cache: PyTree | None = None,
+) -> tuple[jax.Array, PyTree | None]:
+    """Time-mixing RWKV-6 block. cache = {"shift": (B,d), "wkv": (B,H,D,D)}."""
+    b, s, d = x.shape
+    h, hd = spec.heads(d), spec.head_dim
+    prev = cache["shift"] if cache is not None else None
+    xp = _token_shift(x, prev)
+
+    def mix(i):
+        mu = p["mu"][i][None, None]
+        return x * mu + xp * (1.0 - mu)
+
+    r = (mix(0) @ p["wr"]).reshape(b, s, h, hd)
+    k = (mix(1) @ p["wk"]).reshape(b, s, h, hd)
+    v = (mix(2) @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(mix(3) @ p["wg"])
+    wx = mix(4).astype(jnp.float32)
+    dec = p["w_base"] + jnp.tanh(wx @ p["w_lora_a"].astype(jnp.float32)) @ p[
+        "w_lora_b"
+    ].astype(jnp.float32)
+    # Clamp the per-step log-decay to [-2, 0) so the chunked formulation's
+    # exp(-cumsum) factor stays within f32 range (chunk=32 -> exp(64) max).
+    dec = jnp.clip(dec, -20.0, jnp.log(2.0))
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, s, h, hd)  # data-dependent decay in (0,1)
+
+    s0 = (
+        cache["wkv"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((b, h, hd, hd), jnp.float32)
+    )
+    if s == 1 and cache is not None:
+        rf, kf, vf, wf = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+        o = jnp.einsum("bhd,bhde->bhe", rf, s0) + jnp.einsum(
+            "bhd,hd,bhd,bhe->bhe", rf, p["u_bonus"], kf, vf
+        )
+        s_new = wf[..., None] * s0 + jnp.einsum("bhd,bhe->bhde", kf, vf)
+        out = o[:, None]
+    else:
+        out, s_new = _wkv_chunked(r, k, v, w, p["u_bonus"], s0, spec.chunk)
+
+    from repro.models.layers import rms_norm
+
+    out = rms_norm(out.reshape(b, s, d).astype(x.dtype), p["ln_w"])
+    y = (out * g) @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": x[:, -1], "wkv": s_new}
+    return y.astype(x.dtype), new_cache
+
+
+def init_rwkv_cache(batch: int, d_model: int, spec: RWKVSpec, dtype) -> PyTree:
+    h, hd = spec.heads(d_model), spec.head_dim
+    return {
+        "shift": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }
+
+
+# --- RWKV channel mixing (squared-relu FFN with token shift) ---------------
+
+
+def init_rwkv_ffn(key, d_model: int, d_ff: int, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d_model**-0.5
+    return {
+        "mu": (0.5 * jnp.ones((2, d_model))).astype(dtype),
+        "wk": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dtype),
+        "wv": (jax.random.normal(k2, (d_ff, d_model)) * d_ff**-0.5).astype(dtype),
+        "wr": (jax.random.normal(k3, (d_model, d_model)) * s).astype(dtype),
+    }
+
+
+def rwkv_ffn(
+    p: PyTree, x: jax.Array, *, cache: PyTree | None = None
+) -> tuple[jax.Array, PyTree | None]:
+    """cache = {"shift": (B, d)}."""
+    prev = cache["shift"] if cache is not None else None
+    xp = _token_shift(x, prev)
+    mu_k, mu_r = p["mu"][0][None, None], p["mu"][1][None, None]
+    xk = x * mu_k + xp * (1 - mu_k)
+    xr = x * mu_r + xp * (1 - mu_r)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    y = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    new_cache = {"shift": x[:, -1]} if cache is not None else None
+    return y.astype(x.dtype), new_cache

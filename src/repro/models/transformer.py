@@ -1,0 +1,394 @@
+"""Model assembly: decoder-only LMs (dense / MoE / SSM / hybrid), the
+whisper-style encoder-decoder, and VLM-backbone variants — all built from one
+``ArchConfig`` and executed as a ``lax.scan`` over layer *groups* (one
+pattern period per scan step; see configs/base.py).
+
+Public API (all pure functions over param pytrees):
+  init_params(key, cfg)                      -> params
+  forward(params, cfg, tokens, ...)          -> logits (full sequence)
+  init_cache(cfg, batch, cache_len, dtype)   -> stacked per-layer caches
+  decode_step(params, cfg, token, cache)     -> (logits, new_cache)
+  encode(params, cfg, frames)                -> encoder memory (enc-dec only)
+
+Caches are node-free (serving is per-deployment); training state carries the
+extra leading ``node`` axis added by repro.train.trainer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import layers as L
+from repro.models import mamba as Mb
+from repro.models import moe as Moe
+from repro.models import rwkv as Rk
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg: ArchConfig, *, window: int | None) -> L.AttnSpec:
+    return L.AttnSpec(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta,
+        causal=True,
+        window=window,
+    )
+
+
+def _init_norm(cfg: ArchConfig, dtype) -> PyTree:
+    p = {"w": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "ln":
+        p["b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _init_layer(key, cfg: ArchConfig, spec: LayerSpec, dtype) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    p: PyTree = {"norm1": _init_norm(cfg, dtype), "norm2": _init_norm(cfg, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(k1, cfg.d_model, _attn_spec(cfg, window=None), dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = Mb.init_mamba(k1, cfg.d_model, cfg.mamba, dtype)
+    elif spec.mixer == "rwkv":
+        p["rwkv"] = Rk.init_rwkv(k1, cfg.d_model, cfg.rwkv, dtype)
+    if spec.ffn == "dense":
+        p["ffn"] = L.init_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif spec.ffn == "moe":
+        p["moe"] = Moe.init_moe(k2, cfg.d_model, cfg.moe, dtype)
+    elif spec.ffn == "rwkv":
+        p["ffn"] = Rk.init_rwkv_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_group(key, cfg: ArchConfig, dtype) -> PyTree:
+    keys = jax.random.split(key, cfg.period)
+    return {
+        f"layer{i}": _init_layer(keys[i], cfg, spec, dtype)
+        for i, spec in enumerate(cfg.pattern)
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    """Full parameter pytree; layer groups stacked on a leading scan axis."""
+    dtype = cfg.dtype()
+    k_emb, k_blocks, k_head, k_enc = jax.random.split(key, 4)
+    group_keys = jax.random.split(k_blocks, cfg.num_groups)
+    blocks = jax.vmap(lambda k: _init_group(k, cfg, dtype))(group_keys)
+    params: PyTree = {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * cfg.d_model**-0.5
+        ).astype(dtype),
+        "blocks": blocks,
+        "final_norm": _init_norm(cfg, dtype),
+        "lm_head": (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size)) * cfg.d_model**-0.5
+        ).astype(dtype),
+    }
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(k_enc, cfg.enc_layers + cfg.num_layers + 1)
+        enc_blocks = jax.vmap(
+            lambda k: {
+                "attn": L.init_attention(k, cfg.d_model, _attn_spec(cfg, window=None), dtype),
+                "ffn": L.init_ffn(jax.random.fold_in(k, 1), cfg.d_model, cfg.d_ff, dtype),
+                "norm1": _init_norm(cfg, dtype),
+                "norm2": _init_norm(cfg, dtype),
+            }
+        )(enc_keys[: cfg.enc_layers])
+        # cross-attention params for each decoder group
+        cross = jax.vmap(
+            lambda k: {
+                f"layer{i}": {
+                    "attn": L.init_attention(
+                        jax.random.fold_in(k, i), cfg.d_model, _attn_spec(cfg, window=None), dtype
+                    ),
+                    "norm": _init_norm(cfg, dtype),
+                }
+                for i in range(cfg.period)
+            }
+        )(jax.random.split(enc_keys[-1], cfg.num_groups))
+        params["encoder"] = {"blocks": enc_blocks, "final_norm": _init_norm(cfg, dtype)}
+        params["cross"] = cross
+    return params
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    p: PyTree,
+    x: jax.Array,
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    *,
+    window: int | None,
+    cache: PyTree | None,
+    cross: PyTree | None,
+    memory: jax.Array | None,
+    positions: jax.Array | None,
+) -> tuple[jax.Array, PyTree | None, jax.Array]:
+    """Pre-norm residual layer. Returns (x, new_cache, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.norm(x, p["norm1"], cfg.norm)
+    new_cache: PyTree = {}
+    if spec.mixer == "attn":
+        aspec = _attn_spec(cfg, window=window)
+        y, c = L.attention_layer(
+            p["attn"], h, aspec,
+            positions=positions,
+            cache=None if cache is None else cache["mixer"],
+        )
+        new_cache["mixer"] = c
+    elif spec.mixer == "mamba":
+        y, c = Mb.mamba_block(
+            p["mamba"], h, cfg.mamba, cache=None if cache is None else cache["mixer"]
+        )
+        new_cache["mixer"] = c
+    else:  # rwkv
+        y, c = Rk.rwkv_block(
+            p["rwkv"], h, cfg.rwkv, cache=None if cache is None else cache["mixer"]
+        )
+        new_cache["mixer"] = c
+    x = x + y
+
+    if cross is not None and memory is not None:
+        h = L.norm(x, cross["norm"], cfg.norm)
+        aspec = _attn_spec(cfg, window=None)
+        hkv, hd = cfg.num_kv_heads, cfg.hd
+        b, t, _ = memory.shape
+        mk = (memory @ cross["attn"]["wk"]).reshape(b, t, hkv, hd)
+        mv = (memory @ cross["attn"]["wv"]).reshape(b, t, hkv, hd)
+        y, _ = L.attention_layer(cross["attn"], h, aspec, cross_kv=(mk, mv))
+        x = x + y
+
+    h = L.norm(x, p["norm2"], cfg.norm)
+    if spec.ffn == "dense":
+        y = L.swiglu_ffn(p["ffn"], h) if cfg.ffn_act == "swiglu" else L.gelu_ffn(p["ffn"], h)
+        new_cache["ffn"] = None
+    elif spec.ffn == "moe":
+        y, aux = Moe.moe_ffn(p["moe"], h, cfg.moe)
+        new_cache["ffn"] = None
+    elif spec.ffn == "rwkv":
+        y, c = Rk.rwkv_ffn(p["ffn"], h, cache=None if cache is None else cache["ffn"])
+        new_cache["ffn"] = c
+    else:
+        y = jnp.zeros_like(x)
+        new_cache["ffn"] = None
+    return x + y, new_cache, aux
+
+
+def _apply_group(
+    gp: PyTree,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    window: int | None,
+    cache: PyTree | None,
+    cross: PyTree | None,
+    memory: jax.Array | None,
+    positions: jax.Array | None,
+) -> tuple[jax.Array, PyTree | None, jax.Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: PyTree = {}
+    for i, spec in enumerate(cfg.pattern):
+        name = f"layer{i}"
+        x, c, aux = _apply_layer(
+            gp[name], x, cfg, spec,
+            window=window,
+            cache=None if cache is None else cache[name],
+            cross=None if cross is None else cross[name],
+            memory=memory,
+            positions=positions,
+        )
+        new_cache[name] = c
+        aux_total = aux_total + aux
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "window", "remat", "last_only", "act_sharding"),
+)
+def forward(
+    params: PyTree,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    *,
+    prefix_embeds: jax.Array | None = None,
+    memory: jax.Array | None = None,
+    window: int | None = None,
+    remat: bool = False,
+    last_only: bool = False,
+    act_sharding=None,
+) -> tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) int32 -> (logits (B, S_total, V), moe_aux).
+
+    prefix_embeds: (B, P, d) continuous embeddings prepended to the token
+    embeddings (VLM patch stub). memory: (B, T, d) encoder output (enc-dec).
+    remat: activation-checkpoint each layer group (training memory policy).
+    """
+    x = params["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    window = window if window is not None else (cfg.sliding_window if cfg.always_window else None)
+
+    cross_stack = params.get("cross")
+
+    def group_body(carry, scanned):
+        x, aux = carry
+        gp = scanned["gp"]
+        cross = scanned.get("cross")
+        x, _, a = _apply_group(
+            gp, x, cfg, window=window, cache=None,
+            cross=cross, memory=memory, positions=positions,
+        )
+        return (x, aux + a), None
+
+    def body(carry, scanned):
+        inner = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
+        (x, aux), ys = inner(carry, scanned)
+        if act_sharding is not None:
+            # Pin the residual-stream layout (the scan carry saved per step):
+            # left to itself GSPMD picks a batch-replicated layout for the
+            # carry, costing L x full-batch activations per device. Applied
+            # OUTSIDE the checkpointed region so the saved stack is the bf16
+            # carry, not an f32 remat residual.
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        return (x, aux), ys
+
+    scanned = {"gp": params["blocks"]}
+    if cross_stack is not None:
+        scanned["cross"] = cross_stack
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), scanned)
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    if last_only:
+        # Prefill: slice BEFORE the head matmul — XLA does not reliably push
+        # the slice through it, and full 32k-seq logits are ~34 GB/device.
+        return x[:, -1] @ params["lm_head"], aux
+    logits = x @ params["lm_head"]
+    return logits, aux
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode(params: PyTree, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (B, T, d)."""
+    x = frames.astype(cfg.dtype())
+    spec = L.AttnSpec(
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+        causal=False, use_rope=True, rope_theta=cfg.rope_theta,
+    )
+
+    def body(x, lp):
+        h = L.norm(x, lp["norm1"], cfg.norm)
+        y, _ = L.attention_layer(lp["attn"], h, spec)
+        x = x + y
+        h = L.norm(x, lp["norm2"], cfg.norm)
+        return x + L.gelu_ffn(lp["ffn"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return L.norm(x, params["encoder"]["final_norm"], cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, cache_len: int, dtype=None, *, kv_quant: bool = False
+) -> PyTree:
+    """Stacked per-group caches. For attention the cache is a ring buffer of
+    ``cache_len`` (callers pass window size for sliding-window archs).
+    kv_quant=True stores int8 values + per-(token, head) f32 scales."""
+    dtype = dtype or cfg.dtype()
+
+    def one_layer(spec: LayerSpec) -> PyTree:
+        c: PyTree = {}
+        if spec.mixer == "attn":
+            kv_shape = (batch, cache_len, cfg.num_kv_heads, cfg.hd)
+            if kv_quant:
+                c["mixer"] = {
+                    "k": jnp.zeros(kv_shape, jnp.int8),
+                    "v": jnp.zeros(kv_shape, jnp.int8),
+                    "k_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
+                    "v_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
+                    "index": jnp.zeros((), jnp.int32),
+                }
+            else:
+                c["mixer"] = {
+                    "k": jnp.zeros(kv_shape, dtype),
+                    "v": jnp.zeros(kv_shape, dtype),
+                    "index": jnp.zeros((), jnp.int32),
+                }
+        elif spec.mixer == "mamba":
+            c["mixer"] = Mb.init_mamba_cache(batch, cfg.d_model, cfg.mamba, dtype)
+        else:
+            c["mixer"] = Rk.init_rwkv_cache(batch, cfg.d_model, cfg.rwkv, dtype)
+        c["ffn"] = (
+            {"shift": jnp.zeros((batch, cfg.d_model), dtype)}
+            if spec.ffn == "rwkv"
+            else None
+        )
+        return c
+
+    one_group = {f"layer{i}": one_layer(s) for i, s in enumerate(cfg.pattern)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_groups,) + x.shape), one_group
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "window"))
+def decode_step(
+    params: PyTree,
+    cfg: ArchConfig,
+    token: jax.Array,
+    cache: PyTree,
+    *,
+    memory: jax.Array | None = None,
+    window: int | None = None,
+) -> tuple[jax.Array, PyTree]:
+    """One-token decode. token: (B,) int32. Returns (logits (B, V), cache)."""
+    x = params["embed"][token][:, None, :]  # (B, 1, d)
+    window = window if window is not None else (cfg.sliding_window if cfg.always_window else None)
+    cross_stack = params.get("cross")
+
+    def body(x, scanned):
+        gp, gc = scanned["gp"], scanned["cache"]
+        cross = scanned.get("cross")
+        x, new_c, _ = _apply_group(
+            gp, x, cfg, window=window, cache=gc,
+            cross=cross, memory=memory, positions=None,
+        )
+        return x, new_c
+
+    scanned = {"gp": params["blocks"], "cache": cache}
+    if cross_stack is not None:
+        scanned["cross"] = cross_stack
+    x, new_cache = jax.lax.scan(body, x, scanned)
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    logits = (x[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache

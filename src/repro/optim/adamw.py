@@ -1,0 +1,63 @@
+"""AdamW for the LLM-cohort training path. State dtype follows the config's
+``opt_dtype`` (bf16 moments for the 480B arch, DESIGN §4)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def init(params: PyTree, *, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    *,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[PyTree, AdamWState]:
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    new_mu = jax.tree.map(
+        lambda g, m: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+        grads,
+        state.mu,
+    )
+    new_nu = jax.tree.map(
+        lambda g, v: (
+            b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))
+        ).astype(v.dtype),
+        grads,
+        state.nu,
+    )
+
+    def new_p(p, m, v):
+        step = lr * (m.astype(jnp.float32) / c1) / (
+            jnp.sqrt(v.astype(jnp.float32) / c2) + eps
+        )
+        return (p.astype(jnp.float32) * (1.0 - lr * weight_decay) - step).astype(p.dtype)
+
+    return jax.tree.map(new_p, params, new_mu, new_nu), AdamWState(new_mu, new_nu, count)

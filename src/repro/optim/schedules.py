@@ -1,0 +1,48 @@
+"""LR schedules: constant, cosine, and WSD (warmup-stable-decay — the
+minicpm-2b schedule, [arXiv:2404.06395])."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, *, warmup: int = 0, final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+
+    return fn
+
+
+def wsd(lr: float, total_steps: int, *, warmup_frac: float = 0.01, decay_frac: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, long flat stage, short exponential
+    decay tail (the last ``decay_frac`` of training) — per MiniCPM."""
+    warmup = max(1, int(warmup_frac * total_steps))
+    decay_start = int((1.0 - decay_frac) * total_steps)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / warmup, 1.0)
+        in_decay = jnp.maximum(step - decay_start, 0.0)
+        span = jnp.maximum(total_steps - decay_start, 1)
+        decay = jnp.power(10.0, -2.0 * in_decay / span)  # 100x down over the tail
+        return lr * warm * decay
+
+    return fn
+
+
+def get(name: str, lr: float, total_steps: int):
+    if name == "const":
+        return constant(lr)
+    if name == "cosine":
+        return cosine(lr, total_steps)
+    if name == "wsd":
+        return wsd(lr, total_steps)
+    raise ValueError(f"unknown schedule {name!r}")

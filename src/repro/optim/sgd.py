@@ -1,0 +1,51 @@
+"""SGD with momentum (the paper's optimizer: lr=1e-3, mu=0.5) — pure pytree
+functions so state vmaps/shards over the node axis like params do."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+
+
+def init(params: PyTree, *, dtype=None) -> SGDState:
+    return SGDState(
+        momentum=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, dtype or jnp.float32), params
+        )
+    )
+
+
+def update(
+    grads: PyTree,
+    state: SGDState,
+    params: PyTree,
+    *,
+    lr: float | jax.Array,
+    mu: float = 0.5,
+    weight_decay: float = 0.0,
+) -> tuple[PyTree, SGDState]:
+    def new_m(g, m, p):
+        gf = g.astype(m.dtype)
+        if weight_decay:
+            gf = gf + weight_decay * p.astype(m.dtype)
+        return mu * m + gf
+
+    new_mom = jax.tree.map(new_m, grads, state.momentum, params)
+
+    def step(p, m):
+        # Update math in the momentum dtype: with bf16 optimizer state
+        # (>=100B archs) an f32 round-trip would allocate param-sized f32
+        # temporaries — several GB/device at mistral-123b scale.
+        ct = m.dtype
+        return (p.astype(ct) - jnp.asarray(lr, ct) * m).astype(p.dtype)
+
+    new_params = jax.tree.map(step, params, new_mom)
+    return new_params, SGDState(new_mom)

@@ -1,0 +1,80 @@
+"""Batched serving: prefill + autoregressive decode loops over the model
+zoo's ``decode_step``, plus greedy/temperature sampling.
+
+``serve_step`` (one token for the whole batch) is what the decode_32k /
+long_500k dry-run shapes lower; ``generate`` is the runnable CPU-scale loop
+used by examples and tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as TF
+
+PyTree = Any
+
+
+def cache_len_for(cfg: ArchConfig, seq_len: int, *, long_context: bool) -> int:
+    """Ring-buffer length: full seq for exact attention, window for SWA."""
+    if long_context or cfg.always_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def prefill(
+    params: PyTree,
+    cfg: ArchConfig,
+    prompt: jax.Array,
+    cache: PyTree,
+    *,
+    memory: jax.Array | None = None,
+    window: int | None = None,
+) -> tuple[jax.Array, PyTree]:
+    """Feed the prompt token-by-token through decode_step (exactly matches
+    incremental decoding; examples use short prompts so this is fine on CPU)."""
+
+    def body(cache, tok):
+        logits, cache = TF.decode_step(
+            params, cfg, tok, cache, memory=memory, window=window
+        )
+        return cache, logits
+
+    cache, logits = jax.lax.scan(body, cache, prompt.T)  # scan over seq
+    return logits[-1], cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "steps", "temperature"))
+def generate(
+    params: PyTree,
+    cfg: ArchConfig,
+    prompt: jax.Array,
+    cache: PyTree,
+    *,
+    steps: int,
+    key: jax.Array,
+    temperature: float = 0.0,
+    memory: jax.Array | None = None,
+) -> jax.Array:
+    """Greedy (temperature=0) or sampled generation. prompt: (B, S0)."""
+    logits, cache = prefill(params, cfg, prompt, cache, memory=memory)
+
+    def sample(logits, k):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+
+    def body(carry, k):
+        logits, cache = carry
+        tok = sample(logits, k)
+        logits, cache = TF.decode_step(params, cfg, tok, cache, memory=memory)
+        return (logits, cache), tok
+
+    keys = jax.random.split(key, steps)
+    (_, _), toks = jax.lax.scan(body, (logits, cache), keys)
+    return toks.T  # (B, steps)

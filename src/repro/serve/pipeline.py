@@ -1,0 +1,208 @@
+"""Pipeline-parallel decode (EXPERIMENTS §Perf H3).
+
+The baseline serving layout shards weights over BOTH mesh axes (they must
+coexist with the 32k KV cache), so every decoded token re-gathers the full
+model over `data` — 8-14 GB of wire per step, 30-60x the compute term.
+
+This module removes that traffic entirely: the `data` axis becomes a
+PIPELINE axis. Stage s owns layer groups [s*G/S, (s+1)*G/S) — weights and
+cache shards STAY PUT — and activations rotate through stages via
+``jax.lax.ppermute`` (a few hundred KB per hop). The batch is split into S
+microgroups rotated GPipe-style, so at steady state every stage computes
+every tick; one call advances every sequence in the batch by one token.
+
+Constraints: uniform layer pattern (period tiles the stack), num_groups %
+stages == 0, decoder-only (no cross-attention), batch % stages == 0.
+Weights within a stage stay tensor-parallel over `model`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as TF
+
+PyTree = Any
+
+
+def stage_shardings(cfg: ArchConfig, mesh, *, batch: int, kv_quant: bool):
+    """NamedShardings: blocks' group axis over `data` (pipeline stages), TP
+    dims over `model`; cache group axis over `data`, seq over `model`."""
+    from repro.launch import sharding as SR
+
+    params = jax.eval_shape(lambda: TF.init_params(jax.random.PRNGKey(0), cfg))
+
+    def param_sh(path, leaf):
+        pstr = SR._path_str(path)
+        base = SR.leaf_spec(pstr, tuple(leaf.shape), cfg, mesh, has_node_axis=False)
+        spec = list(base)
+        if pstr.startswith("blocks/"):
+            # kill any `data` FSDP the generic rule chose; stage axis owns it
+            spec = [s if s not in ("data", ("data",)) else None for s in spec]
+            spec[0] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    p_sh = jax.tree_util.tree_map_with_path(param_sh, params)
+
+    cache = jax.eval_shape(
+        lambda: TF.init_cache(cfg, batch, 0 or 1, kv_quant=kv_quant)
+    )
+
+    def cache_sh(path, leaf):
+        pstr = SR._path_str(path)
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 1 and not pstr.endswith("index"):
+            spec[0] = "data"  # group-stack axis = pipeline stage
+        if (pstr.endswith("/k") or pstr.endswith("/v")) and leaf.ndim >= 3:
+            if leaf.shape[2] % mesh.shape.get("model", 1) == 0:
+                spec[2] = "model"  # cache seq dim
+        return NamedSharding(mesh, P(*spec))
+
+    c_sh = jax.tree_util.tree_map_with_path(cache_sh, cache)
+    return params, p_sh, c_sh
+
+
+def build_pipeline_serve_step(
+    cfg: ArchConfig,
+    mesh,
+    *,
+    stages: int | None = None,
+    window: int | None = None,
+):
+    """Returns serve_step(params, token (B,), cache) -> (next_token, cache).
+
+    Must be jit'ed with the shardings from ``stage_shardings`` so the
+    shard_map receives stage-local blocks.
+    """
+    stages = stages or mesh.shape["data"]
+    if cfg.num_groups % stages:
+        raise ValueError(f"{cfg.arch_id}: {cfg.num_groups} groups % {stages} stages != 0")
+    if cfg.enc_dec:
+        raise ValueError("pipeline decode supports decoder-only models")
+    local_groups = cfg.num_groups // stages
+    other_axes = tuple(a for a in mesh.axis_names if a != "data")
+
+    def _is_index(path) -> bool:
+        last = path[-1]
+        return str(getattr(last, "key", last)) == "index"
+
+    def stage_fn(blocks, cache, embed, token):
+        """Runs on one stage. blocks/cache: stage-local (G/S, ...) shards;
+        embed/final_norm/lm_head replicated over `data` (TP over model
+        handled automatically); token: full (B,)."""
+        s_idx = jax.lax.axis_index("data")
+        b = token.shape[0]
+        mb = b // stages
+
+        # Stage 0 embeds its rotation of microgroups; others start with zeros.
+        x_groups = embed[token].reshape(stages, mb, 1, -1)  # (S, mb, 1, d)
+
+        tmap = jax.tree_util.tree_map_with_path
+
+        def slice_mb(cache, m):
+            """Batch rows [m*mb, (m+1)*mb) of every (G/S, B, ...) leaf;
+            index leaves pass through (shared across microgroups)."""
+            return tmap(
+                lambda p, l: l
+                if _is_index(p)
+                else jax.lax.dynamic_slice_in_dim(l, m * mb, mb, axis=1),
+                cache,
+            )
+
+        def write_mb(cache, sub_new, m, active):
+            """Write the microgroup's updated KV rows back (only if active);
+            index leaves are NOT advanced here — every microgroup decodes the
+            same position, so the shared index bumps once after all ticks."""
+
+            def upd(p, full, new):
+                if _is_index(p):
+                    return full
+                old = jax.lax.dynamic_slice_in_dim(full, m * mb, mb, axis=1)
+                val = jnp.where(active, new, old)
+                return jax.lax.dynamic_update_slice_in_dim(full, val, m * mb, axis=1)
+
+            return tmap(upd, cache, sub_new)
+
+        def apply_local(x, sub):
+            def body(x, scanned):
+                x, new_c, _ = TF._apply_group(
+                    scanned["gp"], x, cfg, window=window, cache=scanned["cache"],
+                    cross=None, memory=None, positions=None,
+                )
+                return x, new_c
+
+            return jax.lax.scan(body, x, {"gp": blocks, "cache": sub})
+
+        def tick(carry, t):
+            x_cur, cache = carry
+            # microgroup handled by this stage at tick t (GPipe rotation)
+            m = t - s_idx
+            active = jnp.logical_and(m >= 0, m < stages)
+            m_c = jnp.clip(m, 0, stages - 1)
+            # stage 0 injects microgroup t from the embedding at tick t
+            inject = jnp.logical_and(s_idx == 0, jnp.logical_and(t >= 0, t < stages))
+            x_in = jax.lax.dynamic_index_in_dim(
+                x_groups, jnp.clip(t, 0, stages - 1), axis=0, keepdims=False
+            )
+            x_cur = jnp.where(inject, x_in, x_cur)
+            sub = slice_mb(cache, m_c)
+            y, sub_new = apply_local(x_cur, sub)
+            keep = active.astype(x_cur.dtype)
+            x_out = y * keep + x_cur * (1 - keep)
+            cache = write_mb(cache, sub_new, m_c, active)
+            # collect finished microgroups at the last stage BEFORE permuting
+            done = jnp.logical_and(s_idx == stages - 1, active)
+            emit = jnp.where(done, x_out, jnp.zeros_like(x_out))
+            x_next = jax.lax.ppermute(
+                x_out, "data", [(i, (i + 1) % stages) for i in range(stages)]
+            )
+            return (x_next, cache), emit
+
+        # carry becomes stage-varying after the first ppermute: mark it so
+        x0 = jax.lax.pcast(jnp.zeros_like(x_groups[0]), ("data",), to="varying")
+        (_, cache), emits = jax.lax.scan(
+            tick, (x0, cache), jnp.arange(2 * stages - 1)
+        )
+        # shared position advances once per serve_step
+        cache = tmap(lambda p, l: l + 1 if _is_index(p) else l, cache)
+        # emits: (2S-1, mb, 1, d); microgroup m finished at tick m + (S-1) on
+        # the last stage. Gather them into (S, mb, d) order.
+        idx = jnp.arange(stages) + stages - 1
+        xs = emits[idx, :, 0, :]  # (S, mb, d)
+        # only the last stage emitted nonzero values: psum replicates them.
+        # (final norm + head run OUTSIDE the manual region: a model-sharded
+        # matmul inside a partially-manual shard_map trips an XLA partitioner
+        # CHECK at 256 devices.)
+        xs = jax.lax.psum(xs, "data")
+        return xs.reshape(b, -1), cache
+
+    def serve_step(params, token, cache):
+        in_specs = (
+            P("data"),  # blocks: group axis
+            P("data"),  # cache: group axis
+            P(),        # embed
+            P(),        # token
+        )
+        # shard_map with per-leaf prefix specs: group axis manual over data,
+        # everything else (model axis) stays automatic.
+        fn = jax.shard_map(
+            functools.partial(stage_fn),
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(P(), P("data")),
+            axis_names=frozenset({"data"}),
+        )
+        xs, cache = fn(params["blocks"], cache, params["embed"], token)
+        from repro.models import layers as L
+
+        h = L.norm(xs, params["final_norm"], cfg.norm)
+        logits = (h @ params["lm_head"]).astype(jnp.float32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step

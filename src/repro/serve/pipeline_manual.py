@@ -1,0 +1,273 @@
+"""Fully-manual pipeline-parallel decode (EXPERIMENTS §Perf H3).
+
+Like serve/pipeline.py but with hand-written tensor parallelism inside a
+fully-manual ``shard_map`` over BOTH mesh axes — XLA's partial-manual GSPMD
+mode CHECK-crashes at 256 devices (spmd_partitioner_util.cc:504), so nothing
+is left to the auto-partitioner:
+
+- `data` axis  = pipeline stages. Stage s owns layer groups
+  [s*G/S, (s+1)*G/S); weights and KV cache never move; activation
+  microgroups rotate via ``ppermute`` (GPipe rotation, all stages busy).
+- `model` axis = megatron TP, manually: each rank owns H/16 query heads +
+  its ffn column shard, contributes partial outputs, ``psum("model")`` after
+  the attention out-projection and the FFN down-projection.
+- KV cache: per-rank layout (G/S, B, T, 1, hd) — each TP rank stores exactly
+  the one GQA KV head its query heads attend to (ranks_per_kv = 16/hkv
+  duplicates; with int8 values + f32 scales this is what fits a 32k cache on
+  v5e). Requires H % 16 == 0 and hkv <= 16.
+
+Supported: decoder-only, uniform attention+dense pattern, num_groups %
+stages == 0 (llama3.2-1b: 16/16, internvl2-76b: 80/16, stablelm-3b: 32/16,
+minicpm-2b: 40/... 40 % 16 != 0 -> excluded, mistral 88 % 16 != 0 ->
+excluded; see EXPERIMENTS §Perf H3 notes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as TF
+
+PyTree = Any
+
+
+def _check(cfg: ArchConfig, tp: int) -> None:
+    if cfg.enc_dec or cfg.family in ("ssm", "hybrid", "moe"):
+        raise ValueError(f"{cfg.arch_id}: manual pipeline supports dense decoder-only")
+    if cfg.num_heads % tp:
+        raise ValueError(f"{cfg.arch_id}: H={cfg.num_heads} % tp={tp} != 0")
+    if tp % cfg.num_kv_heads and cfg.num_kv_heads % tp:
+        raise ValueError(f"{cfg.arch_id}: kv heads {cfg.num_kv_heads} vs tp {tp}")
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, cache_len: int, tp: int) -> PyTree:
+    """Global-view cache: (G, B, T, tp, hd) int8 + f32 scales; dim 3 shards
+    over `model` so each rank holds its own KV-head slice."""
+    shape = (cfg.num_groups, batch, cache_len, tp, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, jnp.int8),
+        "v": jnp.zeros(shape, jnp.int8),
+        "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+        "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+        "index": jnp.zeros((cfg.num_groups,), jnp.int32),
+    }
+
+
+def cache_shardings(mesh) -> PyTree:
+    kv = NamedSharding(mesh, P("data", None, None, "model", None))
+    return {
+        "k": kv, "v": kv,
+        "k_scale": NamedSharding(mesh, P("data", None, None, "model", None)),
+        "v_scale": NamedSharding(mesh, P("data", None, None, "model", None)),
+        "index": NamedSharding(mesh, P("data")),
+    }
+
+
+def param_shardings(cfg: ArchConfig, mesh, params_shapes: PyTree) -> PyTree:
+    """Pipeline layout: blocks' group axis over `data`; wq/wo + ffn over
+    `model`; wk/wv REPLICATED (each rank computes all kv heads for one new
+    token, then keeps its head — cheaper than half-head sharding)."""
+
+    def one(path, leaf):
+        parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        pstr = "/".join(parts)
+        name = parts[-1]
+        if pstr.startswith("blocks/"):
+            spec = [None] * leaf.ndim
+            spec[0] = "data"
+            if name in ("wq", "w_gate", "w_in"):
+                spec[-1] = "model"
+            elif name in ("wo", "w_out"):
+                spec[-2] = "model"
+            # wk, wv, norms: replicated within the stage
+            return NamedSharding(mesh, P(*spec))
+        if name in ("embed", "lm_head"):
+            spec = [None] * leaf.ndim
+            spec[-1] = "model"  # d (embed) / V (head)
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def build_manual_pipeline_step(
+    cfg: ArchConfig,
+    mesh,
+    *,
+    window: int | None = None,
+):
+    """serve_step(params, token (B,), cache) -> (next_token (B,), cache)."""
+    stages = mesh.shape["data"]
+    tp = mesh.shape["model"]
+    pods = mesh.shape.get("pod", 1)
+    _check(cfg, tp)
+    if cfg.num_groups % stages:
+        raise ValueError(f"{cfg.arch_id}: {cfg.num_groups} groups % {stages} stages")
+    qh = cfg.num_heads // tp  # query heads per rank
+    hd = cfg.hd
+    theta = cfg.rope_theta
+    group = cfg.num_heads // cfg.num_kv_heads
+
+    def layer_local(lp, x, kv, pos):
+        """One manually-TP'd decoder layer on (mb, 1, d) for one group.
+        kv: dict of local (B_sub, T, 1, hd)-squeezed slices for this rank."""
+        r = jax.lax.axis_index("model")
+        h = L.norm(x, lp["norm1"], cfg.norm)
+        mb = x.shape[0]
+        q = (h @ lp["attn"]["wq"]).reshape(mb, 1, qh, hd)  # local q heads
+        k_full = (h @ lp["attn"]["wk"]).reshape(mb, 1, cfg.num_kv_heads, hd)
+        v_full = (h @ lp["attn"]["wv"]).reshape(mb, 1, cfg.num_kv_heads, hd)
+        my_kv = (r * qh) // group  # the kv head this rank's q heads use
+        k_new = jax.lax.dynamic_index_in_dim(k_full, my_kv, axis=2, keepdims=True)
+        v_new = jax.lax.dynamic_index_in_dim(v_full, my_kv, axis=2, keepdims=True)
+        q = L.apply_rope(q, pos[None], theta)
+        k_new = L.apply_rope(k_new, pos[None], theta)
+
+        t = kv["k"].shape[1]
+        slot = jnp.mod(pos, t)
+        kq, ks = L._quant_kv(k_new)
+        vq, vs = L._quant_kv(v_new)
+        ck = jax.lax.dynamic_update_slice_in_dim(kv["k"], kq[:, :, 0], slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv["v"], vq[:, :, 0], slot, axis=1)
+        cks = jax.lax.dynamic_update_slice_in_dim(kv["k_scale"], ks[:, :, 0], slot, axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(kv["v_scale"], vs[:, :, 0], slot, axis=1)
+        new_kv = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+
+        keys = ck.astype(jnp.float32) * cks  # (mb, T, hd)
+        vals = cv.astype(jnp.float32) * cvs
+        slots = jnp.arange(t)
+        kpos = pos + slots - slot - jnp.where(slots > slot, t, 0)
+        kpos = jnp.where(kpos < 0, jnp.iinfo(jnp.int32).max, kpos)
+        logits = jnp.einsum("mqhd,mtd->mhqt", q.astype(jnp.float32), keys) * hd**-0.5
+        ok = kpos[None, None, None, :] <= pos
+        if window is not None:
+            ok &= kpos[None, None, None, :] > pos - window
+        logits = jnp.where(ok, logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("mhqt,mtd->mqhd", probs, vals)  # (mb,1,qh,hd)
+        partial = attn.reshape(mb, 1, qh * hd).astype(x.dtype) @ lp["attn"]["wo"]
+        y = jax.lax.psum(partial, "model")
+        x = x + y
+
+        h = L.norm(x, lp["norm2"], cfg.norm)
+        if cfg.ffn_act == "swiglu":
+            f = (jax.nn.silu(h @ lp["ffn"]["w_gate"]) * (h @ lp["ffn"]["w_in"])) @ lp["ffn"]["w_out"]
+        else:
+            f = jax.nn.gelu(h @ lp["ffn"]["w_in"]) @ lp["ffn"]["w_out"]
+        x = x + jax.lax.psum(f, "model")
+        return x, new_kv
+
+    def stage_fn(blocks, cache, embed_local, token):
+        """Fully manual: blocks/cache local shards, embed_local (V, d/tp),
+        token full (B_pod,)."""
+        s_idx = jax.lax.axis_index("data")
+        b = token.shape[0]
+        mb = b // stages
+        pos = cache["index"][0]  # shared absolute position
+
+        # embed: d sharded over model -> all-gather the feature dim
+        x_local = embed_local[token]  # (B, d/tp)
+        x_all = jax.lax.all_gather(x_local, "model", axis=1, tiled=True)  # (B, d)
+        x_groups = x_all.reshape(stages, mb, 1, -1).astype(cfg.dtype())
+
+        def apply_stage(x, kv_stage):
+            """Scan this stage's local groups. kv_stage: (G/S, mb, T, hd)..."""
+
+            def body(x, scanned):
+                lp = scanned["lp"]
+                kv = scanned["kv"]
+                x, new_kv = layer_local(lp["layer0"], x, kv, pos)
+                return x, new_kv
+
+            return jax.lax.scan(body, x, {"lp": blocks, "kv": kv_stage})
+
+        tmap = jax.tree_util.tree_map
+
+        def tick(carry, t):
+            x_cur, kvc = carry  # kvc: local cache {k,v,scales}: (G/S,B,T,hd)
+            m = t - s_idx
+            active = jnp.logical_and(m >= 0, m < stages)
+            m_c = jnp.clip(m, 0, stages - 1)
+            inject = jnp.logical_and(s_idx == 0, t < stages)
+            x_in = jax.lax.dynamic_index_in_dim(x_groups, jnp.clip(t, 0, stages - 1), 0, keepdims=False)
+            x_cur = jnp.where(inject, x_in, x_cur)
+            sub = tmap(lambda l: jax.lax.dynamic_slice_in_dim(l, m_c * mb, mb, axis=1), kvc)
+            y, sub_new = apply_stage(x_cur, sub)
+            keep = active.astype(x_cur.dtype)
+            x_out = y * keep + x_cur * (1 - keep)
+
+            def wb(full, new):
+                old = jax.lax.dynamic_slice_in_dim(full, m_c * mb, mb, axis=1)
+                val = jnp.where(active, new, old)
+                return jax.lax.dynamic_update_slice_in_dim(full, val, m_c * mb, axis=1)
+
+            kvc = tmap(wb, kvc, sub_new)
+            done = jnp.logical_and(s_idx == stages - 1, active)
+            emit = jnp.where(done, x_out, jnp.zeros_like(x_out))
+            x_next = jax.lax.ppermute(
+                x_out, "data", [(i, (i + 1) % stages) for i in range(stages)]
+            )
+            return (x_next, kvc), emit
+
+        kv_local = {
+            k: cache[k][:, :, :, 0] for k in ("k", "v", "k_scale", "v_scale")
+        }
+        x0 = jax.lax.pcast(
+            jnp.zeros_like(x_groups[0]), ("data",), to="varying"
+        )
+        (_, kv_local), emits = jax.lax.scan(
+            tick, (x0, kv_local), jnp.arange(2 * stages - 1)
+        )
+        idx = jnp.arange(stages) + stages - 1
+        xs = emits[idx, :, 0, :]  # (S, mb, d)
+        xs = jax.lax.psum(xs, "data").reshape(b, -1)
+        new_cache = {k: kv_local[k][:, :, :, None] for k in kv_local}
+        new_cache["index"] = cache["index"] + 1
+        return xs, new_cache
+
+    def serve_step(params, token, cache):
+        token_spec = P("pod") if pods > 1 else P()
+
+        # per-leaf specs for the manual region
+        def blk_spec(path, leaf):
+            parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+            name = parts[-1]
+            spec = [None] * leaf.ndim
+            spec[0] = "data"
+            if name in ("wq", "w_gate", "w_in"):
+                spec[-1] = "model"
+            elif name in ("wo", "w_out"):
+                spec[-2] = "model"
+            return P(*spec)
+
+        blocks_specs = jax.tree_util.tree_map_with_path(blk_spec, params["blocks"])
+        cache_specs = {
+            "k": P("data", None, None, "model", None),
+            "v": P("data", None, None, "model", None),
+            "k_scale": P("data", None, None, "model", None),
+            "v_scale": P("data", None, None, "model", None),
+            "index": P("data"),
+        }
+        fn = jax.shard_map(
+            stage_fn,
+            mesh=mesh,
+            in_specs=(blocks_specs, cache_specs, P(None, "model"), token_spec),
+            out_specs=(token_spec if pods > 1 else P(), cache_specs),
+            axis_names=frozenset(mesh.axis_names),
+            # xs IS model-invariant (it follows two psum("model")s per layer)
+            # but the conservative VMA inference cannot prove it.
+            check_vma=False,
+        )
+        xs, new_cache = fn(params["blocks"], cache, params["embed"], token)
+        h = L.norm(xs, params["final_norm"], cfg.norm)
+        logits = (h @ params["lm_head"]).astype(jnp.float32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    return serve_step

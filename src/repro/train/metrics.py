@@ -1,0 +1,35 @@
+"""Evaluation metrics: per-node accuracy and confusion matrices (the paper's
+two performance figures, §5.1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def confusion_matrix(logits: jax.Array, labels: jax.Array, num_classes: int) -> jax.Array:
+    """Row-normalized confusion matrix: row = true class, col = prediction.
+    Rows with no examples are zero."""
+    preds = jnp.argmax(logits, axis=-1)
+    idx = labels * num_classes + preds
+    counts = jnp.bincount(idx.reshape(-1), length=num_classes * num_classes)
+    cm = counts.reshape(num_classes, num_classes).astype(jnp.float32)
+    row = cm.sum(axis=1, keepdims=True)
+    return cm / jnp.maximum(row, 1.0)
+
+
+def community_confusion(
+    per_node_cm: jax.Array, blocks: jax.Array, num_comms: int
+) -> jax.Array:
+    """Average per-node confusion matrices within each community
+    (paper Table 1). per_node_cm: (N, C, C); blocks: (N,) int."""
+    out = []
+    for c in range(num_comms):
+        mask = (blocks == c).astype(jnp.float32)
+        w = mask / jnp.maximum(mask.sum(), 1.0)
+        out.append(jnp.einsum("n,nij->ij", w, per_node_cm))
+    return jnp.stack(out)

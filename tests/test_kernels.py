@@ -1,0 +1,146 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracle
+(interpret mode executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.gossip_mix import gossip_mix_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+SHAPES = [
+    (4, 100),       # tiny, unpadded
+    (100, 700),     # the paper's N=100
+    (128, 512),     # exactly one block
+    (130, 513),     # just over block boundaries
+    (256, 1536),    # multi-block everywhere
+    (1, 1),         # degenerate
+]
+
+
+@pytest.mark.parametrize("n,d", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix_matches_ref(n, d, dtype):
+    key = jax.random.PRNGKey(n * 1000 + d)
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), axis=-1)  # row-stochastic
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n, d)).astype(dtype)
+    got = ops.gossip_mix(w, p, interpret=True)
+    want = ref.gossip_mix_ref(w, p)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("block_sparse", [False, True])
+def test_block_sparse_path(block_sparse):
+    """A mixing matrix with whole zero blocks gives identical results with
+    the block-skip optimization on and off."""
+    n, d = 256, 1024
+    key = jax.random.PRNGKey(0)
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), axis=-1)
+    w = w.at[:128, 128:].set(0.0)  # kill an off-diagonal block
+    w = w / w.sum(axis=1, keepdims=True)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    got = ops.gossip_mix(w, p, interpret=True, block_sparse=block_sparse)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.gossip_mix_ref(w, p)), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_custom_block_shapes():
+    n, d = 128, 1024
+    key = jax.random.PRNGKey(3)
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), axis=-1)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    want = ref.gossip_mix_ref(w, p)
+    for bm, bk, bd in [(64, 64, 256), (128, 128, 512), (32, 128, 128)]:
+        got = ops.gossip_mix(w, p, bm=bm, bk=bk, bd=bd, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_padded_kernel_rejects_unpadded():
+    w = jnp.ones((100, 100))
+    p = jnp.ones((100, 300))
+    with pytest.raises(ValueError):
+        gossip_mix_pallas(w, p, interpret=True)  # raw kernel requires padding
+
+
+@given(
+    n=st.integers(2, 64),
+    d=st.integers(1, 300),
+    seed=st.integers(0, 10**6),
+)
+@settings(max_examples=15, deadline=None)
+def test_gossip_mix_property(n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), axis=-1)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    got = ops.gossip_mix(w, p, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.gossip_mix_ref(w, p)), rtol=5e-5, atol=5e-5
+    )
+
+
+def test_flash_attention_ref_self_consistency():
+    """Oracle sanity: full attention == windowed attention with full window."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (24, 8, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (24, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (24, 2, 32))
+    a = ref.flash_attention_ref(q, k, v, causal=True)
+    b = ref.flash_attention_ref(q, k, v, causal=True, window=24)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+class TestFlashAttentionKernel:
+    """Pallas flash-attention kernel vs the pure-jnp oracle (interpret)."""
+
+    @pytest.mark.parametrize(
+        "b,s,h,hkv,hd,window",
+        [
+            (1, 64, 4, 2, 32, None),
+            (2, 100, 8, 2, 32, None),   # unpadded seq -> wrapper pads
+            (1, 128, 4, 4, 64, 48),     # MHA + sliding window
+            (1, 96, 8, 1, 32, 16),      # MQA + tight window
+        ],
+    )
+    def test_matches_oracle(self, b, s, h, hkv, hd, window):
+        from repro.kernels import ops
+
+        key = jax.random.PRNGKey(s * 7 + h)
+        q = jax.random.normal(key, (b, s, h, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, hd))
+        got = ops.flash_attention(
+            q, k, v, causal=True, window=window, bq=32, bk=32, interpret=True
+        )
+        want = jnp.stack(
+            [
+                ref.flash_attention_ref(q[i], k[i], v[i], causal=True, window=window)
+                for i in range(b)
+            ]
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+    def test_bf16(self):
+        from repro.kernels import ops
+
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (1, 64, 4, 32)).astype(jnp.bfloat16)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 2, 32)).astype(jnp.bfloat16)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 2, 32)).astype(jnp.bfloat16)
+        got = ops.flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+        want = ref.flash_attention_ref(q[0], k[0], v[0], causal=True)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got[0], np.float32), np.asarray(want, np.float32),
+            rtol=3e-2, atol=3e-2,
+        )

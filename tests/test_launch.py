@@ -1,0 +1,203 @@
+"""Launch-layer logic tests (no devices needed): mesh node-axis assignment,
+input-shape specs, analytic roofline terms, HLO collective parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.launch import analysis as AN, hlo_walk as HW, shapes as SH
+from repro.launch.mesh import node_axes_for
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class TestNodeAxes:
+    def test_single_pod(self):
+        m = FakeMesh({"data": 16, "model": 16})
+        assert node_axes_for(16, m) == ("data",)
+        assert node_axes_for(2, m) == ()
+        assert node_axes_for(1, m) == ()
+
+    def test_multi_pod(self):
+        m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+        assert node_axes_for(32, m) == ("pod", "data")
+        assert node_axes_for(4, m) == ("pod",)
+        assert node_axes_for(2, m) == ("pod",)
+        assert node_axes_for(1, m) == ()
+
+
+class TestShapes:
+    def test_four_shapes_registered(self):
+        assert set(SH.SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+        assert SH.SHAPES["long_500k"].seq_len == 524288
+        assert SH.SHAPES["train_4k"].global_batch == 256
+
+    @pytest.mark.parametrize("arch", cfgbase.ASSIGNED_ARCHS)
+    def test_train_inputs_divide(self, arch):
+        cfg = cfgbase.get(arch)
+        shape = SH.SHAPES["train_4k"]
+        n = cfg.num_nodes_single_pod
+        specs = SH.train_inputs(cfg, shape, n, microbatches=1)
+        tok = specs["tokens"]
+        assert tok.shape[0] == 1 and tok.shape[1] == n
+        assert tok.shape[2] * n == shape.global_batch
+
+    @pytest.mark.parametrize("arch", cfgbase.ASSIGNED_ARCHS)
+    def test_decode_inputs_build(self, arch):
+        cfg = cfgbase.get(arch)
+        for name in ("decode_32k", "long_500k"):
+            specs = SH.decode_inputs(cfg, SH.SHAPES[name])
+            assert specs["token"].shape == (SH.SHAPES[name].global_batch,)
+            # long_500k must be sub-quadratic: attention caches bounded by window
+            if name == "long_500k":
+                for path, leaf in jax.tree_util.tree_flatten_with_path(specs["cache"])[0]:
+                    pstr = "/".join(str(getattr(p, "key", p)) for p in path)
+                    if pstr.endswith("/k"):
+                        assert leaf.shape[2] <= cfg.sliding_window
+
+    def test_long_context_applicable_everywhere(self):
+        for arch in cfgbase.ASSIGNED_ARCHS:
+            ok, why = SH.long_context_applicable(cfgbase.get(arch))
+            assert ok, (arch, why)
+
+
+class TestAnalyticTerms:
+    def test_step_flops_scales_with_tokens(self):
+        cfg = cfgbase.get("llama32_1b")
+        f1 = AN.analytic_step_flops(cfg, kind="prefill", batch=1, seq=1024)
+        f2 = AN.analytic_step_flops(cfg, kind="prefill", batch=2, seq=1024)
+        assert f2 / f1 == pytest.approx(2.0, rel=0.05)
+
+    def test_train_is_3x_prefill(self):
+        cfg = cfgbase.get("stablelm_3b")
+        fp = AN.analytic_step_flops(cfg, kind="prefill", batch=4, seq=512)
+        ft = AN.analytic_step_flops(cfg, kind="train", batch=4, seq=512)
+        assert ft / fp == pytest.approx(3.0, rel=0.01)
+
+    def test_moe_active_vs_total(self):
+        cfg = cfgbase.get("arctic_480b")
+        total = AN.total_param_count(cfg)
+        active = AN.active_param_count(cfg)
+        # 128 experts top-2 -> active far below total
+        assert active < 0.1 * total
+
+    def test_window_caps_attention_flops(self):
+        cfg = cfgbase.get("llama32_1b")
+        full = AN.analytic_step_flops(cfg, kind="decode", batch=1, seq=0, cache_len=524288)
+        win = AN.analytic_step_flops(
+            cfg, kind="decode", batch=1, seq=0, cache_len=524288, window=4096
+        )
+        assert win < full
+
+    def test_collective_model_modes(self):
+        cfg = cfgbase.get("llama32_1b")
+        mesh = {"data": 16, "model": 16}
+        base = AN.analytic_collective_bytes(
+            cfg, kind="train", batch=256, seq=4096, num_nodes=16,
+            microbatches=2, mesh_shape=mesh, node_sharded=True, layout="tp",
+        )
+        opt = AN.analytic_collective_bytes(
+            cfg, kind="train", batch=256, seq=4096, num_nodes=16,
+            microbatches=1, mesh_shape=mesh, node_sharded=True, layout="fsdp_model",
+        )
+        assert sum(opt.values()) < 0.5 * sum(base.values())
+        pipe = AN.analytic_collective_bytes(
+            cfg, kind="decode", batch=128, seq=32768, num_nodes=1,
+            microbatches=1, mesh_shape=mesh, node_sharded=False,
+            serve_layout="pipeline",
+        )
+        shard = AN.analytic_collective_bytes(
+            cfg, kind="decode", batch=128, seq=32768, num_nodes=1,
+            microbatches=1, mesh_shape=mesh, node_sharded=False,
+        )
+        assert pipe.get("serve_ag", 0.0) == 0.0
+        assert sum(pipe.values()) < 0.1 * sum(shard.values())
+
+
+class TestHloWalk:
+    HLO = """
+HloModule test
+
+%cond (arg: (s32[])) -> pred[] {
+  %arg = (s32[]) parameter(0)
+  %c = s32[] constant(8)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+%body (arg: (s32[])) -> (s32[]) {
+  %arg = (s32[]) parameter(0)
+  %ag = f32[16,4]{1,0} all-gather(%x), dimensions={0}
+  ROOT %t = (s32[]) tuple(%i)
+}
+
+ENTRY %main (p: f32[1,4]) -> f32[16,4] {
+  %p = f32[1,4]{1,0} parameter(0)
+  %w = (s32[]) while(%init), condition=%cond, body=%body
+  %ar = f32[2,2]{1,0} all-reduce(%p2), to_apply=%add
+  ROOT %r = f32[16,4]{1,0} copy(%gte2)
+}
+"""
+
+    def test_computations_parsed(self):
+        comps = HW.parse_computations(self.HLO)
+        assert {"cond", "body", "main"} <= set(comps)
+        assert comps["main"].is_entry
+
+    def test_loop_multiplier_applied(self):
+        rep = HW.collective_wire_bytes_looped(self.HLO)
+        # all-gather inside the trip-8 loop (operand untyped -> result-size
+        # fallback): 16*4*4B * 8 trips
+        assert rep.wire_by_kind["all-gather"] == pytest.approx(64 * 4 * 8)
+        # top-level all-reduce: 2 * result bytes
+        assert rep.wire_by_kind["all-reduce"] == pytest.approx(2 * 16)
+
+    def test_array_bytes(self):
+        assert HW._array_bytes("bf16[2,3]") == 12
+        assert HW._array_bytes("(f32[4], s8[8])") == 24
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", cfgbase.ASSIGNED_ARCHS)
+    def test_exact_assigned_specs(self, arch):
+        """Configs carry the exact assigned hyperparameters."""
+        cfg = cfgbase.get(arch)
+        expected = {
+            "stablelm_3b": (32, 2560, 32, 32, 6912, 50304),
+            "mistral_large_123b": (88, 12288, 96, 8, 28672, 32768),
+            "jamba_v01_52b": (32, 4096, 32, 8, 14336, 65536),
+            "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+            "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+            "llama32_1b": (16, 2048, 32, 8, 8192, 128256),
+            "minicpm_2b": (40, 2304, 36, 36, 5760, 122753),
+            "rwkv6_3b": (32, 2560, 40, 40, 8960, 65536),
+            "whisper_base": (6, 512, 8, 8, 2048, 51865),
+            "internvl2_76b": (80, 8192, 64, 8, 28672, 128256),
+        }[arch]
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == expected
+        assert cfg.source  # citation present
+
+    def test_moe_specs(self):
+        assert cfgbase.get("dbrx_132b").moe.num_experts == 16
+        assert cfgbase.get("dbrx_132b").moe.top_k == 4
+        arctic = cfgbase.get("arctic_480b").moe
+        assert arctic.num_experts == 128 and arctic.top_k == 2 and arctic.dense_residual
+        jamba = cfgbase.get("jamba_v01_52b")
+        mixers = [s.mixer for s in jamba.pattern]
+        assert mixers.count("attn") == 1 and mixers.count("mamba") == 7
+        assert sum(s.ffn == "moe" for s in jamba.pattern) == 4
+
+    def test_reduced_constraints(self):
+        """Smoke variants respect the assignment's reduction bounds."""
+        for arch in cfgbase.ASSIGNED_ARCHS:
+            r = cfgbase.get(arch).reduced()
+            assert r.num_layers <= 2 * r.period
+            assert r.d_model <= 512
+            if r.moe:
+                assert r.moe.num_experts <= 4

@@ -1,0 +1,87 @@
+"""Mixing matrices (paper Eq. 1): stochasticity, support, trust weighting,
+spectral-gap orderings that drive the paper's qualitative results."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing as M
+from repro.core import topology as T
+
+
+def _graph(n=40, p=0.2, seed=0):
+    return T.erdos_renyi(n, p, seed=seed)
+
+
+class TestDecAvgMatrix:
+    def test_row_stochastic_and_support(self):
+        g = _graph()
+        sizes = np.random.default_rng(0).integers(10, 100, g.num_nodes)
+        w = M.decavg_matrix(g, sizes)
+        M.validate_mixing(w, g)
+
+    def test_alpha_weighting(self):
+        """Eq. 1: neighbor weight proportional to its dataset size."""
+        adj = np.zeros((3, 3), dtype=bool)
+        adj[0, 1] = adj[1, 0] = adj[0, 2] = adj[2, 0] = True
+        g = T.Graph(adj=adj)
+        w = M.decavg_matrix(g, np.array([10.0, 30.0, 60.0]))
+        # node 0's row: self 10, nbr1 30, nbr2 60 -> /100
+        np.testing.assert_allclose(w[0], [0.1, 0.3, 0.6])
+
+    def test_self_trust(self):
+        g = _graph(10, 0.5, 1)
+        sizes = np.ones(10)
+        w_hi = M.decavg_matrix(g, sizes, self_trust=10.0)
+        w_lo = M.decavg_matrix(g, sizes, self_trust=1.0)
+        assert np.all(np.diag(w_hi) > np.diag(w_lo))
+
+    def test_isolated_node(self):
+        adj = np.zeros((3, 3), dtype=bool)
+        adj[0, 1] = adj[1, 0] = True
+        g = T.Graph(adj=adj)
+        w = M.decavg_matrix(g, np.array([5.0, 5.0, 0.0]), self_trust=0.0)
+        # node 2 is isolated with zero data: keeps its own model
+        np.testing.assert_allclose(w[2], [0, 0, 1])
+        M.validate_mixing(w)
+
+    @given(st.integers(5, 40), st.floats(0.1, 0.9), st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_always_valid(self, n, p, seed):
+        g = T.erdos_renyi(n, p, seed=seed)
+        sizes = np.random.default_rng(seed).integers(1, 50, n).astype(float)
+        w = M.decavg_matrix(g, sizes)
+        M.validate_mixing(w, g)
+
+
+class TestMetropolisHastings:
+    def test_doubly_stochastic(self):
+        g = _graph(30, 0.3, 2)
+        w = M.metropolis_hastings_matrix(g)
+        np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-9)
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-9)
+        assert np.allclose(w, w.T)
+
+
+class TestSpectralGap:
+    def test_connectivity_increases_gap(self):
+        """More connected ER -> faster consensus (larger spectral gap)."""
+        gaps = []
+        for p in (0.05, 0.15, 0.5):
+            g = T.erdos_renyi(60, p, seed=3)
+            w = M.decavg_matrix(g, np.ones(60))
+            gaps.append(M.spectral_gap(w))
+        assert gaps[0] < gaps[1] < gaps[2]
+
+    def test_tight_communities_shrink_gap(self):
+        """The paper's SBM finding: tighter communities -> slower spread."""
+        g_tight = T.stochastic_block_model([25] * 4, 0.8, 0.01, seed=0)
+        g_loose = T.stochastic_block_model([25] * 4, 0.5, 0.01, seed=0)
+        w_t = M.decavg_matrix(g_tight, np.ones(100))
+        w_l = M.decavg_matrix(g_loose, np.ones(100))
+        assert M.spectral_gap(w_t) < M.spectral_gap(w_l)
+
+    def test_complete_graph_gap_near_one(self):
+        g = T.erdos_renyi(20, 1.0, seed=0)
+        w = M.decavg_matrix(g, np.ones(20))
+        assert M.spectral_gap(w) == pytest.approx(1.0, abs=1e-6)

@@ -1,0 +1,102 @@
+"""Non-IID partitioners (paper §5.1): focus-node selection with the paper's
+tie-break, class allocation invariants, community splits."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as P
+from repro.core import topology as T
+
+
+def _labels(per_class=60, num_classes=10):
+    return np.repeat(np.arange(num_classes), per_class)
+
+
+class TestFocusSelection:
+    def test_exactly_ten_percent(self):
+        g = T.barabasi_albert(100, 2, seed=0)
+        hubs = P.select_extreme_degree_nodes(g, 0.10, highest=True, seed=0)
+        leaves = P.select_extreme_degree_nodes(g, 0.10, highest=False, seed=0)
+        assert len(hubs) == 10 and len(leaves) == 10
+        deg = g.degrees()
+        # every selected hub has degree >= every non-selected node's... at the
+        # boundary ties are broken randomly, so compare against the threshold.
+        assert deg[hubs].min() >= np.sort(deg)[::-1][9]
+        assert deg[leaves].max() <= np.sort(deg)[9]
+
+    @given(st.integers(20, 100), st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def test_disjoint_quota(self, n, seed):
+        g = T.erdos_renyi(n, 0.2, seed=seed)
+        k = max(1, round(0.1 * n))
+        sel = P.select_extreme_degree_nodes(g, 0.1, highest=True, seed=seed)
+        assert len(sel) == k
+        assert len(set(sel.tolist())) == k
+
+
+class TestFocusedPartitions:
+    def test_hub_focused_allocation(self):
+        g = T.barabasi_albert(100, 2, seed=0)
+        labels = _labels(per_class=300)
+        parts = P.hub_focused(labels, g, seed=1)
+        summ = P.partition_summary(labels, parts)
+        # G1 classes (0-4) on every node; G2 (5-9) only on the 10 hubs
+        assert np.all(summ[:, :5].sum(axis=1) > 0)
+        holders = np.flatnonzero(summ[:, 5:].sum(axis=1) > 0)
+        assert len(holders) == 10
+        deg = g.degrees()
+        assert deg[holders].min() >= np.sort(deg)[::-1][9]
+
+    def test_edge_focused_allocation(self):
+        g = T.barabasi_albert(100, 2, seed=0)
+        labels = _labels(per_class=300)
+        parts = P.edge_focused(labels, g, seed=1)
+        summ = P.partition_summary(labels, parts)
+        holders = np.flatnonzero(summ[:, 5:].sum(axis=1) > 0)
+        assert len(holders) == 10
+        deg = g.degrees()
+        assert deg[holders].max() <= np.sort(deg)[9]
+
+    def test_equal_shares_per_class(self):
+        """Paper: 'on the assigned classes, each node gets the same amount'."""
+        g = T.erdos_renyi(50, 0.2, seed=2)
+        labels = _labels(per_class=100)
+        parts = P.hub_focused(labels, g, seed=3)
+        summ = P.partition_summary(labels, parts)
+        for c in range(5):
+            counts = summ[:, c]
+            assert counts.min() == counts.max() == 100 // 50
+
+    def test_no_index_overlap(self):
+        g = T.erdos_renyi(30, 0.2, seed=0)
+        labels = _labels()
+        parts = P.edge_focused(labels, g, seed=0)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(set(allidx.tolist()))
+
+
+class TestCommunityPartition:
+    def test_exclusive_classes(self):
+        g = T.stochastic_block_model([25] * 4, 0.5, 0.01, seed=0)
+        labels = _labels(per_class=100)
+        parts = P.community(labels, g, seed=1)
+        summ = P.partition_summary(labels, parts)
+        for comm in range(4):
+            members = np.flatnonzero(g.blocks == comm)
+            own = summ[members][:, 2 * comm : 2 * comm + 2]
+            other = np.delete(summ[members], [2 * comm, 2 * comm + 1], axis=1)
+            assert np.all(own > 0)
+            assert np.all(other == 0)
+        # classes 8, 9 discarded entirely
+        assert summ[:, 8:].sum() == 0
+
+
+class TestDirichlet:
+    @given(st.floats(0.05, 10.0), st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_partition_complete(self, beta, seed):
+        labels = _labels(per_class=30)
+        parts = P.dirichlet(labels, 8, beta=beta, seed=seed)
+        allidx = np.concatenate([p for p in parts if len(p)])
+        assert len(allidx) == len(labels)
+        assert len(set(allidx.tolist())) == len(labels)

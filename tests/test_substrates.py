@@ -1,0 +1,164 @@
+"""Substrate tests: data pipeline, optimizers, schedules, checkpointing,
+losses/metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.data import synthetic, tokens as tok
+from repro.data.loader import NodeLoader
+from repro.optim import adamw, schedules, sgd
+from repro.train import losses, metrics
+
+
+class TestSyntheticData:
+    def test_deterministic(self):
+        a = synthetic.make_mnist_like(train_per_class=20, test_per_class=5, seed=3)
+        b = synthetic.make_mnist_like(train_per_class=20, test_per_class=5, seed=3)
+        np.testing.assert_array_equal(a.x_train, b.x_train)
+
+    def test_ranges_and_classes(self):
+        ds = synthetic.make_mnist_like(train_per_class=30, test_per_class=10, seed=0)
+        assert ds.x_train.min() >= 0.0 and ds.x_train.max() <= 1.0
+        assert ds.num_classes == 10
+        assert len(ds.x_train) == 300 and len(ds.x_test) == 100
+
+    def test_learnable_but_not_trivial(self):
+        """A linear probe separates classes (learnable) but not perfectly
+        (within-class variation is real)."""
+        ds = synthetic.make_mnist_like(train_per_class=100, test_per_class=50, seed=0)
+        # one ridge-regression step as a cheap probe
+        x, y = ds.x_train, ds.y_train
+        yoh = np.eye(10)[y]
+        wmat = np.linalg.solve(x.T @ x + 10 * np.eye(784), x.T @ yoh)
+        acc = (np.argmax(ds.x_test @ wmat, 1) == ds.y_test).mean()
+        assert 0.5 < acc < 0.999
+
+
+class TestLoader:
+    def test_round_shapes(self):
+        ds = synthetic.make_mnist_like(train_per_class=30, test_per_class=5, seed=0)
+        parts = [np.arange(i * 30, (i + 1) * 30) for i in range(10)]
+        loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=8, seed=0)
+        xs, ys = loader.sample_round(3)
+        assert xs.shape == (3, 10, 8, 784)
+        assert ys.shape == (3, 10, 8)
+        # samples come from each node's own pool
+        for n in range(10):
+            assert set(np.unique(ys[:, n])) <= set(np.unique(ds.y_train[parts[n]]))
+
+    def test_empty_node_raises(self):
+        ds = synthetic.make_mnist_like(train_per_class=10, test_per_class=5, seed=0)
+        loader = NodeLoader(ds.x_train, ds.y_train, [np.array([], np.int64)], batch_size=4)
+        with pytest.raises(ValueError):
+            loader.sample_round(1)
+
+
+class TestTokens:
+    def test_stream_shapes_and_determinism(self):
+        batches = list(tok.token_batches(4, 2, 16, 1000, steps=3, seed=0))
+        assert len(batches) == 3
+        t, l = batches[0]
+        assert t.shape == (4, 2, 16) and l.shape == (4, 2, 16)
+        np.testing.assert_array_equal(t[:, :, 1:], l[:, :, :-1])  # next-token shift
+        again = list(tok.token_batches(4, 2, 16, 1000, steps=3, seed=0))
+        np.testing.assert_array_equal(batches[1][0], again[1][0])
+
+    def test_domain_skew(self):
+        """Different nodes see measurably different token distributions."""
+        a = tok.node_token_stream(0, 20000, 4096, seed=0)
+        b = tok.node_token_stream(1, 20000, 4096, seed=0)
+        ha = np.bincount(a, minlength=4096) / len(a)
+        hb = np.bincount(b, minlength=4096) / len(b)
+        assert 0.5 * np.abs(ha - hb).sum() > 0.1  # total-variation distance
+
+
+class TestOptim:
+    def test_sgd_momentum_math(self):
+        p = {"w": jnp.ones((3,))}
+        g = {"w": jnp.full((3,), 0.5)}
+        st_ = sgd.init(p)
+        p1, st1 = sgd.update(g, st_, p, lr=0.1, mu=0.5)
+        np.testing.assert_allclose(np.asarray(p1["w"]), 1 - 0.1 * 0.5)
+        p2, st2 = sgd.update(g, st1, p1, lr=0.1, mu=0.5)
+        # momentum: m2 = 0.5*0.5 + 0.5 = 0.75
+        np.testing.assert_allclose(np.asarray(st2.momentum["w"]), 0.75)
+
+    def test_adamw_reduces_loss(self):
+        key = jax.random.PRNGKey(0)
+        w_true = jax.random.normal(key, (8,))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (64, 8))
+        y = x @ w_true
+
+        params = {"w": jnp.zeros((8,))}
+        st_ = adamw.init(params)
+        loss = lambda p: jnp.mean((x @ p["w"] - y) ** 2)
+        l0 = float(loss(params))
+        for _ in range(100):
+            g = jax.grad(loss)(params)
+            params, st_ = adamw.update(g, st_, params, lr=0.05, weight_decay=0.0)
+        assert float(loss(params)) < 0.01 * l0
+
+    def test_wsd_schedule_shape(self):
+        fn = schedules.wsd(1.0, 1000)
+        lrs = np.array([float(fn(s)) for s in [0, 5, 300, 600, 899, 950, 999]])
+        assert lrs[0] < 0.6  # warmup
+        np.testing.assert_allclose(lrs[2:5], 1.0, atol=1e-2)  # stable stage
+        assert lrs[5] < 0.5 and lrs[6] < 0.02  # sharp decay tail
+
+    @given(st.integers(1, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_schedules_positive(self, step):
+        for name in ("const", "cosine", "wsd"):
+            fn = schedules.get(name, 3e-4, 10**6)
+            assert 0 <= float(fn(step)) <= 3e-4 + 1e-9
+
+
+class TestLossesMetrics:
+    def test_xent_matches_manual(self):
+        logits = jnp.array([[2.0, 0.0], [0.0, 2.0]])
+        labels = jnp.array([0, 0])
+        want = np.mean([np.log(1 + np.exp(-2.0)), np.log(1 + np.exp(2.0))])
+        np.testing.assert_allclose(float(losses.softmax_xent(logits, labels)), want, rtol=1e-6)
+
+    def test_lm_loss_ignore_index(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 8))
+        labels = jnp.array([[1, 2, -1, -1]])
+        full = losses.lm_loss(logits, jnp.array([[1, 2, 3, 4]]))
+        masked = losses.lm_loss(logits, labels)
+        manual = losses.lm_loss(logits[:, :2], jnp.array([[1, 2]]))
+        np.testing.assert_allclose(float(masked), float(manual), rtol=1e-6)
+        assert float(masked) != pytest.approx(float(full))
+
+    def test_confusion_matrix_rows(self):
+        logits = jnp.eye(4)[jnp.array([0, 1, 1, 3])] * 5  # predictions 0,1,1,3
+        labels = jnp.array([0, 1, 2, 3])
+        cm = metrics.confusion_matrix(logits, labels, 4)
+        assert float(cm[0, 0]) == 1.0
+        assert float(cm[2, 1]) == 1.0  # true 2 predicted 1
+        assert float(cm[2, 2]) == 0.0
+
+
+class TestCheckpoint:
+    def test_roundtrip_dtypes(self, tmp_path):
+        tree = {
+            "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.array(3, jnp.int32)},
+            "e": [jnp.zeros((2,)), jnp.ones((2,), jnp.bfloat16)],
+        }
+        path = str(tmp_path / "x.npz")
+        ckpt.save(path, tree, step=17)
+        back, step = ckpt.restore(path, tree)
+        assert step == 17
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "y.npz")
+        ckpt.save(path, {"a": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            ckpt.restore(path, {"a": jnp.ones((3,))})

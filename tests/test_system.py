@@ -1,0 +1,145 @@
+"""End-to-end system behaviour: the paper's qualitative claims reproduced at
+test scale, plus the launch-layer step builders wired together."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mixing, partition as P, topology as T
+from repro.data.loader import NodeLoader
+from repro.data.synthetic import make_mnist_like
+from repro.train.trainer import DecentralizedTrainer
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_mnist_like(train_per_class=150, test_per_class=40, seed=0)
+
+
+def _final_acc(g, parts, ds, rounds=8, lr=0.05):
+    loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
+    tr = DecentralizedTrainer(g, loader, lr=lr, momentum=0.9, seed=0)
+    hist = tr.run(rounds, eval_every=rounds - 1, x_test=ds.x_test, y_test=ds.y_test)
+    return hist[-1]
+
+
+def test_hub_beats_edge_focus(ds):
+    """Claim (ii)/(iii): knowledge (the G2 classes) spreads to nodes that
+    never saw it far better when the holders are hubs than when they are
+    leaves. Measured exactly as the paper frames it: accuracy on the held
+    classes at NON-holder nodes (overall mean accuracy is confounded at
+    test scale by local data-diversity effects)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.mlp import mlp_forward
+
+    g = T.barabasi_albert(20, 2, seed=0)
+    g2_mask = ds.y_test >= 5
+
+    def g2_at_nonholders(part_fn):
+        parts = part_fn(ds.y_train, g, seed=1)
+        summ = P.partition_summary(ds.y_train, parts)
+        nonholders = np.flatnonzero(summ[:, 5:].sum(axis=1) == 0)
+        loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
+        tr = DecentralizedTrainer(g, loader, lr=0.05, momentum=0.9, seed=0)
+        tr.run(15)
+        accs = []
+        for node in nonholders:
+            p = jax.tree.map(lambda l: l[node], tr.params)
+            lg = mlp_forward(p, jnp.asarray(ds.x_test[g2_mask]))
+            accs.append(float((lg.argmax(-1) == ds.y_test[g2_mask]).mean()))
+        return float(np.mean(accs))
+
+    hub = g2_at_nonholders(P.hub_focused)
+    edge = g2_at_nonholders(P.edge_focused)
+    assert hub > edge + 0.1, f"hub {hub} vs edge {edge}"
+
+
+def test_sbm_communities_trap_knowledge(ds):
+    """Claim (iv): with community-exclusive classes, per-node accuracy stays
+    near the intra-community ceiling early in training."""
+    g = T.stochastic_block_model([5] * 4, 0.8, 0.02, seed=0)
+    parts = P.community(ds.y_train, g, seed=1)
+    keep = ds.y_test < 8
+    import dataclasses
+
+    ds8 = dataclasses.replace(ds, x_test=ds.x_test[keep], y_test=ds.y_test[keep])
+    res = _final_acc(g, parts, ds8, rounds=6)
+    # 2-of-8 intra ceiling = 0.25; a tight SBM shouldn't be far above it yet,
+    # but learning should have brought it near that ceiling.
+    assert 0.10 < res.mean_acc < 0.45
+
+
+def test_spectral_gap_predicts_consensus_speed(ds):
+    """System invariant: topology's spectral gap orders consensus speed."""
+    from repro.core.decavg import gossip_error, mix_dense
+
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (30, 64))}
+    errs = {}
+    for p in (0.1, 0.6):
+        g = T.erdos_renyi(30, p, seed=1)
+        w = jnp.asarray(mixing.decavg_matrix(g, np.ones(30)), jnp.float32)
+        cur = params
+        for _ in range(3):
+            cur = mix_dense(w, cur)
+        errs[p] = float(gossip_error(cur))
+    assert errs[0.6] < errs[0.1]
+
+
+def test_llm_cohort_loss_decreases():
+    """Decentralized LLM training (the launch path) reduces loss."""
+    import dataclasses
+
+    from repro.configs import base as cfgbase
+    from repro.data import tokens as tok
+    from repro.launch import steps as ST
+    from repro.models import transformer as TF
+    from repro.optim import adamw
+
+    cfg = dataclasses.replace(
+        cfgbase.get("llama32_1b").reduced(),
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256,
+    )
+    n = 2
+    per_node = TF.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), per_node)
+    opt = adamw.init(params)
+    w = jnp.full((n, n), 0.5, jnp.float32)
+    step = jax.jit(ST.build_train_step(cfg, num_nodes=n, lr=1e-2))
+    losses = []
+    for toks, labels in tok.token_batches(n, 4, 32, cfg.vocab_size, steps=30, seed=0):
+        batch = {"tokens": jnp.asarray(toks)[None], "labels": jnp.asarray(labels)[None]}
+        params, opt, loss = step(params, opt, w, batch)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def test_sharding_rules_consistent():
+    """leaf_spec emits valid divisible specs for every arch's full params."""
+    from repro.configs import base as cfgbase
+    from repro.launch import sharding as SR
+    from repro.models import transformer as TF
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    for arch in cfgbase.ASSIGNED_ARCHS:
+        cfg = cfgbase.get(arch)
+        shapes = jax.eval_shape(lambda c=cfg: TF.init_params(jax.random.PRNGKey(0), c))
+        flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+        for path, leaf in flat:
+            pstr = SR._path_str(path)
+            spec = SR.leaf_spec(pstr, tuple(leaf.shape), cfg, FakeMesh(), has_node_axis=False)
+            # every named axis must divide its dim
+            for dim, s in zip(leaf.shape, spec):
+                if s is None:
+                    continue
+                axes = (s,) if isinstance(s, str) else s
+                size = 1
+                for a in axes:
+                    size *= FakeMesh.shape[a]
+                assert dim % size == 0, f"{arch} {pstr} {leaf.shape} {spec}"

@@ -1,0 +1,120 @@
+"""Topology generators: structural invariants + cross-checks vs networkx."""
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+class TestER:
+    def test_edge_probability(self):
+        g = T.erdos_renyi(200, 0.1, seed=0)
+        possible = 200 * 199 / 2
+        # binomial(19900, 0.1): std ~ 42 -> 5 sigma band
+        assert abs(g.num_edges - 0.1 * possible) < 5 * np.sqrt(possible * 0.1 * 0.9)
+
+    def test_determinism(self):
+        a = T.erdos_renyi(50, 0.2, seed=7)
+        b = T.erdos_renyi(50, 0.2, seed=7)
+        assert np.array_equal(a.adj, b.adj)
+        c = T.erdos_renyi(50, 0.2, seed=8)
+        assert not np.array_equal(a.adj, c.adj)
+
+    def test_critical_threshold_connectivity(self):
+        """Above p* ER graphs are almost surely connected; well below, not."""
+        n = 100
+        pstar = T.er_critical_p(n)
+        connected_above = sum(
+            T.connected_components(T.erdos_renyi(n, 2.5 * pstar, seed=s).adj).max() == 0
+            for s in range(10)
+        )
+        connected_below = sum(
+            T.connected_components(T.erdos_renyi(n, 0.2 * pstar, seed=s).adj).max() == 0
+            for s in range(10)
+        )
+        assert connected_above >= 8
+        assert connected_below <= 2
+
+    @given(st.integers(10, 80), st.floats(0.0, 1.0), st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_graph_invariants(self, n, p, seed):
+        g = T.erdos_renyi(n, p, seed=seed)
+        assert g.num_nodes == n
+        assert np.array_equal(g.adj, g.adj.T)
+        assert not np.any(np.diag(g.adj))
+
+
+class TestBA:
+    def test_edge_count(self):
+        # star seed (m edges) + m edges per new node
+        n, m = 100, 3
+        g = T.barabasi_albert(n, m, seed=0)
+        assert g.num_edges == m + m * (n - m - 1)
+
+    def test_min_degree(self):
+        g = T.barabasi_albert(100, 4, seed=1)
+        assert g.degrees().min() >= 4
+
+    def test_heavy_tail_vs_er(self):
+        """BA degree distribution is much more skewed than a same-density ER."""
+        gba = T.barabasi_albert(200, 2, seed=0)
+        p = 2 * gba.num_edges / (200 * 199)
+        ger = T.erdos_renyi(200, p, seed=0)
+        assert gba.degrees().max() > 2.5 * ger.degrees().max()
+
+    @given(st.integers(12, 60), st.integers(1, 5), st.integers(0, 10**6))
+    @settings(max_examples=15, deadline=None)
+    def test_invariants(self, n, m, seed):
+        g = T.barabasi_albert(n, m, seed=seed)
+        assert np.array_equal(g.adj, g.adj.T)
+        assert not np.any(np.diag(g.adj))
+        # preferential attachment keeps the graph connected
+        assert T.connected_components(g.adj).max() == 0
+
+
+class TestSBM:
+    def test_block_structure(self):
+        g = T.stochastic_block_model([25] * 4, 0.8, 0.01, seed=0)
+        assert g.num_nodes == 100
+        assert g.blocks is not None
+        intra = extra = 0
+        ii, jj = np.nonzero(np.triu(g.adj, 1))
+        for u, v in zip(ii, jj):
+            if g.blocks[u] == g.blocks[v]:
+                intra += 1
+            else:
+                extra += 1
+        # expected: intra ~ 0.8 * 4 * C(25,2) = 960; extra ~ 0.01 * 3750 = 37.5
+        assert intra > 800
+        assert extra < 100
+
+    def test_modularity_ordering(self):
+        """Tighter communities -> higher modularity (the paper's SBM knob)."""
+        g8 = T.stochastic_block_model([25] * 4, 0.8, 0.01, seed=0)
+        g5 = T.stochastic_block_model([25] * 4, 0.5, 0.01, seed=0)
+        assert T.modularity(g8.adj, g8.blocks) > T.modularity(g5.adj, g5.blocks) > 0.5
+
+    def test_modularity_matches_networkx(self):
+        g = T.stochastic_block_model([20] * 3, 0.5, 0.05, seed=3)
+        nxg = nx.from_numpy_array(g.adj)
+        comms = [set(np.flatnonzero(g.blocks == b)) for b in range(3)]
+        expected = nx.algorithms.community.modularity(nxg, comms)
+        assert T.modularity(g.adj, g.blocks) == pytest.approx(expected, abs=1e-9)
+
+    def test_external_edge_counts_symmetric(self):
+        g = T.stochastic_block_model([25] * 4, 0.5, 0.01, seed=0)
+        ext = T.external_edge_counts(g)
+        assert np.array_equal(ext, ext.T)
+        assert np.all(np.diag(ext) == 0)
+
+
+def test_connected_components_labels():
+    adj = np.zeros((6, 6), dtype=bool)
+    adj[0, 1] = adj[1, 0] = True
+    adj[2, 3] = adj[3, 2] = True
+    labels = T.connected_components(adj)
+    assert labels[0] == labels[1]
+    assert labels[2] == labels[3]
+    assert len(set(labels.tolist())) == 4

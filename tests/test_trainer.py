@@ -1,0 +1,89 @@
+"""End-to-end decentralized training (paper-faithful path): learning
+happens, gossip spreads knowledge, pallas path agrees with dense."""
+
+import numpy as np
+import pytest
+
+from repro.core import partition as P
+from repro.core import topology as T
+from repro.data.loader import NodeLoader
+from repro.train.trainer import DecentralizedTrainer
+
+
+@pytest.fixture(scope="module")
+def setup(request):
+    from repro.data.synthetic import make_mnist_like
+
+    ds = make_mnist_like(train_per_class=120, test_per_class=40, seed=0)
+    g = T.erdos_renyi(12, 0.4, seed=0)
+    parts = P.iid(ds.y_train, 12, seed=1)
+    loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
+    return ds, g, loader
+
+
+def test_training_improves_accuracy(setup):
+    ds, g, loader = setup
+    tr = DecentralizedTrainer(g, loader, lr=0.05, momentum=0.9, seed=0)
+    hist = tr.run(8, eval_every=7, x_test=ds.x_test, y_test=ds.y_test)
+    assert hist[-1].mean_acc > max(0.3, hist[0].mean_acc + 0.1)
+
+
+def test_knowledge_spread_vs_isolated(setup):
+    """THE paper's core phenomenon: a node that never saw classes 5-9 gets
+    them (well above chance) through gossip; without gossip it cannot."""
+    ds, g, _ = setup
+    parts = P.hub_focused(ds.y_train, g, seed=3)
+    loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
+    from repro.core.partition import partition_summary
+
+    summ = partition_summary(ds.y_train, parts)
+    have_not = np.flatnonzero(summ[:, 5:].sum(axis=1) == 0)
+    assert len(have_not) > 0
+    g2_mask = ds.y_test >= 5
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.mlp import mlp_forward
+
+    def g2_acc(trainer):
+        accs = []
+        for node in have_not:
+            p = jax.tree.map(lambda l: l[node], trainer.params)
+            logits = mlp_forward(p, jnp.asarray(ds.x_test[g2_mask]))
+            accs.append(float((logits.argmax(-1) == ds.y_test[g2_mask]).mean()))
+        return float(np.mean(accs))
+
+    gossip = DecentralizedTrainer(g, loader, lr=0.05, momentum=0.9, seed=0)
+    gossip.run(10)
+    # isolated control: identity mixing (no edges used)
+    isolated = DecentralizedTrainer(g, loader, lr=0.05, momentum=0.9, seed=0)
+    isolated.w = jnp.eye(g.num_nodes)
+    isolated._round_jit = jax.jit(isolated._round)
+    isolated.run(10)
+
+    assert g2_acc(isolated) < 0.12  # ~chance on unseen classes
+    assert g2_acc(gossip) > g2_acc(isolated) + 0.15
+
+
+def test_pallas_mix_path_runs(setup):
+    ds, g, loader = setup
+    tr = DecentralizedTrainer(g, loader, lr=0.05, mix_impl="pallas", seed=0)
+    hist = tr.run(2, x_test=ds.x_test, y_test=ds.y_test)
+    assert np.isfinite(hist[-1].mean_acc)
+
+
+def test_checkpoint_roundtrip_mid_training(setup, tmp_path):
+    import jax
+
+    from repro.checkpoint import ckpt
+
+    ds, g, loader = setup
+    tr = DecentralizedTrainer(g, loader, lr=0.05, seed=0)
+    tr.run(2)
+    path = str(tmp_path / "state.npz")
+    ckpt.save(path, {"params": tr.params, "opt": tr.opt_state._asdict()}, step=2)
+    restored, step = ckpt.restore(path, {"params": tr.params, "opt": tr.opt_state._asdict()})
+    assert step == 2
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves({"params": tr.params, "opt": tr.opt_state._asdict()})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
