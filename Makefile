@@ -1,0 +1,23 @@
+# Tier-1 verification + common dev entry points.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: verify test bench-mixing bench quickstart install
+
+verify:  ## tier-1 test suite (the CI gate)
+	$(PY) -m pytest -x -q
+
+test: verify
+
+install:  ## editable install with test extras (hypothesis, networkx)
+	$(PY) -m pip install -e ".[test]"
+
+bench-mixing:  ## dense vs sparse gossip sweep -> BENCH_mixing.json
+	$(PY) benchmarks/bench_mixing.py
+
+bench:  ## quick paper-figure benchmark harness
+	$(PY) benchmarks/run.py
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -1,0 +1,110 @@
+"""Dense vs sparse gossip sweep: wall-clock + W memory at N in {128, 1024, 4096}.
+
+One DecAvg round ``P <- W @ P`` on BA(m=2) — the paper's hub-dominated
+family, whose edge count grows O(N) while dense W grows O(N^2). Reports, per
+N and backend:
+
+  - us_per_round:   median wall-clock of a jitted round (f32, D params/node)
+  - w_bytes:        memory of the W representation (dense N^2 f32 vs CSR)
+  - transient_bytes: the gather/output working set (nnz*D vs N*D floats)
+  - max_abs_err:    sparse vs dense output (allclose guard, not just speed)
+
+Emits BENCH_mixing.json at the repo root.
+
+Run:  PYTHONPATH=src python benchmarks/bench_mixing.py [--sizes 128,1024,4096]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decavg, mixing, sparse, topology as T
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_mixing.json")
+
+
+def _time(fn, *args, reps: int) -> float:
+    fn(*args)["p"].block_until_ready()  # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)["p"].block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def bench_one(n: int, d: int, reps: int, seed: int) -> dict:
+    g = T.make(f"ba:n={n},m=2", seed=seed)
+    w_np = mixing.decavg_matrix(g, np.ones(n))
+    w = jnp.asarray(w_np, jnp.float32)
+    csr = sparse.csr_from_dense(w_np)
+    params = {"p": jax.random.normal(jax.random.PRNGKey(seed), (n, d), jnp.float32)}
+
+    dense_fn = jax.jit(decavg.mix_dense)
+    us_dense = _time(dense_fn, w, params, reps=reps)
+    us_sparse = _time(sparse.mix_sparse, csr, params, reps=reps)
+
+    err = float(
+        jnp.max(jnp.abs(dense_fn(w, params)["p"] - sparse.mix_sparse(csr, params)["p"]))
+    )
+    row = {
+        "n": n,
+        "d": d,
+        "edges": g.num_edges,
+        "nnz": csr.nnz,
+        "dense": {
+            "us_per_round": round(us_dense, 1),
+            "w_bytes": n * n * 4,
+            "transient_bytes": n * d * 4,
+        },
+        "sparse": {
+            "us_per_round": round(us_sparse, 1),
+            "w_bytes": csr.nbytes,
+            "transient_bytes": csr.nnz * d * 4,
+        },
+        "speedup": round(us_dense / us_sparse, 2) if us_sparse else None,
+        "w_compression": round(n * n * 4 / csr.nbytes, 1),
+        "max_abs_err": err,
+    }
+    print(
+        f"N={n:5d}  dense {us_dense:10.1f} us / {n*n*4/2**20:7.2f} MiB W   "
+        f"sparse {us_sparse:10.1f} us / {csr.nbytes/2**10:7.1f} KiB W   "
+        f"speedup {row['speedup']}x  err {err:.2e}"
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="128,1024,4096")
+    ap.add_argument("--dim", type=int, default=64,
+                    help="params per node (flattened)")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    rows = [bench_one(n, args.dim, args.reps, args.seed) for n in sizes]
+    out = {
+        "bench": "gossip_mixing_dense_vs_sparse",
+        "topology": "ba:m=2",
+        "dim": args.dim,
+        "reps": args.reps,
+        "backend": jax.default_backend(),
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

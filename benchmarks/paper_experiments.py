@@ -105,7 +105,7 @@ def er_experiments(s: ExpSettings, *, focus_cases=("edge", "hub")):
     pstar = T.er_critical_p(n)
     outs = []
     for p in (0.65 * pstar, pstar, 1.09 * pstar):  # 0.03, 0.046, 0.05 at n=100
-        g = T.erdos_renyi(n, p, seed=s.seed)
+        g = T.make(f"er:n={n},p={p}", seed=s.seed)
         for focus in focus_cases:
             part_fn = P.edge_focused if focus == "edge" else P.hub_focused
             parts = part_fn(ds.y_train, g, seed=s.seed + 1)
@@ -119,7 +119,7 @@ def ba_experiments(s: ExpSettings, *, focus_cases=("edge", "hub")):
     ds = _dataset(s)
     outs = []
     for m in (2, 5, 10):
-        g = T.barabasi_albert(s.nodes, m, seed=s.seed)
+        g = T.make(f"ba:n={s.nodes},m={m}", seed=s.seed)
         for focus in focus_cases:
             part_fn = P.edge_focused if focus == "edge" else P.hub_focused
             parts = part_fn(ds.y_train, g, seed=s.seed + 1)
@@ -139,9 +139,9 @@ def sbm_experiments(s: ExpSettings):
     keep = ds.y_test < 8
     ds = dataclasses.replace(ds, x_test=ds.x_test[keep], y_test=ds.y_test[keep])
     outs = []
-    sizes = [s.nodes // 4] * 4
+    sizes = "+".join([str(s.nodes // 4)] * 4)
     for p_in in (0.5, 0.8):
-        g = T.stochastic_block_model(sizes, p_in, 0.01, seed=s.seed)
+        g = T.make(f"sbm:sizes={sizes},p_in={p_in},p_out=0.01", seed=s.seed)
         parts = P.community(ds.y_train, g, seed=s.seed + 1)
         name = f"sbm_pin{p_in}"
         out, tr = _run(name, g, parts, s, ds, extra={"p_in": p_in})

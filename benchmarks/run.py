@@ -112,7 +112,7 @@ def bench_decavg_round(full: bool) -> None:
     from repro.train.trainer import DecentralizedTrainer
 
     ds = make_mnist_like(train_per_class=200, test_per_class=20, seed=0)
-    g = T.erdos_renyi(100 if full else 40, 0.05, seed=0)
+    g = T.make(f"er:n={100 if full else 40},p=0.05", seed=0)
     parts = P.iid(ds.y_train, g.num_nodes, seed=1)
     loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
     tr = DecentralizedTrainer(g, loader)

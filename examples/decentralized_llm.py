@@ -15,11 +15,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.configs import base as cfgbase
-from repro.core import mixing, topology as T
+from repro.core import decavg, topology as T
 from repro.data import tokens as tok
 from repro.launch import steps as ST
 from repro.models import transformer as TF
@@ -51,12 +50,10 @@ def main() -> None:
     )
     n = args.nodes
 
-    # Ring topology: the classic decentralized baseline.
-    adj = np.zeros((n, n), dtype=bool)
-    for i in range(n):
-        adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
-    g = T.Graph(adj=adj, name=f"ring({n})")
-    w = jnp.asarray(mixing.decavg_matrix(g, np.ones(n)), jnp.float32)
+    # Ring topology (the classic decentralized baseline) via the registry;
+    # the engine builds and validates the Eq. 1 mixing matrix.
+    engine = decavg.GossipEngine(T.make("ring", n=n))
+    g, w = engine.graph, engine.w
 
     key = jax.random.PRNGKey(0)
     per_node = TF.init_params(key, cfg)
@@ -87,9 +84,7 @@ def main() -> None:
 
     print(f"\nloss {loss0:.3f} -> {float(loss):.3f} over {args.steps} steps")
     # all ring nodes stay in consensus-ish: check parameter spread
-    from repro.core.decavg import gossip_error
-
-    print(f"consensus distance across nodes: {float(gossip_error(params)):.2e}")
+    print(f"consensus distance across nodes: {float(decavg.gossip_error(params)):.2e}")
     if args.ckpt:
         ckpt.save(args.ckpt, {"params": params, "opt": opt._asdict()}, step=args.steps)
         print(f"saved checkpoint to {args.ckpt}")

@@ -22,7 +22,7 @@ def main() -> None:
     print(f"train {ds.x_train.shape}, test {ds.x_test.shape}, {ds.num_classes} classes")
 
     print("\n== topology ==")
-    g = T.erdos_renyi(30, 0.15, seed=0)
+    g = T.make("er:n=30,p=0.15", seed=0)  # registry spec; try "ws:n=30,k=4" etc.
     print(f"{g.name}: {g.num_edges} edges, degrees {g.degrees().min()}..{g.degrees().max()}")
 
     parts = P.hub_focused(ds.y_train, g, seed=1)

@@ -19,6 +19,15 @@ Three execution paths, all numerically equivalent (tests assert allclose):
                         instead of O(P·N) — this is the form used at LLM
                         cohort scale.
 
+Plus the sparse large-N paths (core/sparse.py): CSR segment-sum and the
+Pallas ELL row-gather kernel, both O(E·P) per round instead of O(N²·P).
+
+``GossipEngine`` is the one front door over all of them: it owns the
+topology (static graph or TopologySchedule), builds + caches the mixing
+matrix per schedule period, capability-checks the requested backend, and
+applies the per-round gossip cadence (``gossip_every`` / identity rounds)
+that call sites used to reimplement inline.
+
 The mixing accumulates in float32 regardless of parameter dtype (bf16 models
 still contract toward consensus without rounding bias), then casts back.
 """
@@ -30,9 +39,17 @@ from typing import Any, Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["mix_dense", "mix_pallas", "mix_sharded", "gossip_error"]
+__all__ = [
+    "GossipEngine",
+    "mix_dense",
+    "mix_pallas",
+    "mix_sharded",
+    "mix_permute",
+    "gossip_error",
+]
 
 PyTree = Any
 
@@ -156,8 +173,6 @@ def mix_permute(
     same W (tests assert allclose); W entries off the graph support are
     ignored by construction.
     """
-    import numpy as np
-
     k = mesh.shape[node_axis]
     if w.shape[0] != k:
         raise ValueError(
@@ -173,8 +188,6 @@ def mix_permute(
         dsts = np.array([d for _, d in pairs], np.int32)
         vec = jnp.zeros((k,), jnp.float32).at[dsts].set(wf[dsts, srcs])
         color_coefs.append(vec)
-
-    other_axes = frozenset(a for a in mesh.axis_names if a != node_axis)
 
     def body(leaf: jax.Array) -> jax.Array:
         # leaf: (1, ...) — this device row's node shard.
@@ -197,6 +210,278 @@ def mix_permute(
         )(leaf)
 
     return jax.tree.map(mix_one, params)
+
+
+# ---------------------------------------------------------------------------
+# GossipEngine: one capability-checked front door over every mixing path
+# ---------------------------------------------------------------------------
+
+_MATRIX_KINDS = ("decavg", "uniform", "mh")
+
+# Backend -> (requirement summary, large-N cost of one round). Source of
+# truth for GossipEngine.capabilities() and the README matrix.
+_BACKEND_INFO = {
+    "dense": ("any backend; W materialized (N,N)", "O(N^2 * P)"),
+    "pallas": ("TPU (interpret elsewhere); W materialized (N,N)", "O(N^2 * P), zero W tiles skipped"),
+    "sparse": ("any backend; W stored CSR, O(E) memory", "O(E * P)"),
+    "sparse_pallas": ("TPU (interpret elsewhere); W stored ELL", "O(E * P)"),
+    "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device"),
+    "permute": ("mesh with node axis; N == |axis|", "O(degree * P) wire per device"),
+}
+
+
+class GossipEngine:
+    """Owns topology, mixing matrix, backend dispatch and gossip cadence.
+
+    One engine replaces the per-call-site wiring of graph construction,
+    ``decavg_matrix``, backend choice and the ``gossip_every`` loop logic::
+
+        engine = GossipEngine("ba:n=4096,m=2", backend="auto", gossip_every=2)
+        params = engine.mix(params, round=i)   # identity rounds are free
+
+    Args:
+      topology: a registry spec string (``"ba:n=100,m=2"``, may carry an
+        ``@regen=``/``@rewire=`` schedule suffix), a built ``Graph``, or a
+        ``TopologySchedule``.
+      data_sizes: per-node |D_j| for the Eq. 1 weights (default: uniform).
+      matrix: "decavg" (paper Eq. 1), "uniform" (closed-neighborhood mean)
+        or "mh" (Metropolis–Hastings, doubly stochastic).
+      backend: one of ``GossipEngine.BACKENDS`` or "auto" (sparse at
+        N >= sparse_threshold, else dense; sharded when a mesh is given).
+      gossip_every: mix on rounds with ``round % gossip_every == 0``; other
+        rounds are identity and skip all work.
+      mesh/node_axis/sharded_schedule: for the shard_map backends.
+      interpret: forwarded to the Pallas backends (default: auto-detect).
+      **topology_defaults: fallback spec params (e.g. ``n=...``) when
+        ``topology`` is a spec string.
+    """
+
+    BACKENDS = ("dense", "pallas", "sparse", "sparse_pallas", "sharded", "permute")
+
+    def __init__(
+        self,
+        topology,
+        *,
+        data_sizes: np.ndarray | None = None,
+        matrix: str = "decavg",
+        backend: str = "auto",
+        gossip_every: int = 1,
+        mesh: jax.sharding.Mesh | None = None,
+        node_axis: str = "data",
+        sharded_schedule: Literal["allgather", "reduce_scatter"] = "reduce_scatter",
+        interpret: bool | None = None,
+        sparse_threshold: int = 512,
+        validate: bool = True,
+        seed: int = 0,
+        **topology_defaults,
+    ):
+        from repro.core import topology as topo
+
+        if isinstance(topology, str):
+            topology = topo.make_schedule(topology, seed=seed, **topology_defaults)
+        elif isinstance(topology, topo.Graph):
+            topology = topo.TopologySchedule.static(topology)
+        elif not isinstance(topology, topo.TopologySchedule):
+            raise TypeError(f"topology must be spec/Graph/TopologySchedule, got {type(topology)}")
+        self.schedule = topology
+        self.num_nodes = topology.num_nodes
+        if matrix not in _MATRIX_KINDS:
+            raise ValueError(f"matrix must be one of {_MATRIX_KINDS}, got {matrix!r}")
+        self.matrix = matrix
+        self.data_sizes = (
+            np.ones(self.num_nodes) if data_sizes is None
+            else np.asarray(data_sizes, dtype=np.float64)
+        )
+        self.gossip_every = int(gossip_every)
+        self.mesh = mesh
+        self.node_axis = node_axis
+        self.sharded_schedule = sharded_schedule
+        self.interpret = interpret
+        self.sparse_threshold = int(sparse_threshold)
+        self.validate = validate
+        self.backend = self._resolve_backend(backend)
+        self.check(self.backend)
+        self._period: int | None = None
+        self._graph = None
+        self._w = None
+        self._csr = None
+        self._ell = None
+        self._colors = None
+        self.refresh(0)
+
+    # -- capability checking -------------------------------------------------
+
+    @classmethod
+    def capabilities(cls) -> dict[str, dict[str, str]]:
+        """Backend -> {requires, cost} (the README capability matrix)."""
+        return {
+            b: {"requires": req, "cost": cost}
+            for b, (req, cost) in _BACKEND_INFO.items()
+        }
+
+    def _resolve_backend(self, backend: str) -> str:
+        if backend != "auto":
+            if backend not in self.BACKENDS:
+                raise ValueError(
+                    f"unknown backend {backend!r}; one of {self.BACKENDS} or 'auto'"
+                )
+            return backend
+        if self.mesh is not None:
+            return "sharded"
+        return "sparse" if self.num_nodes >= self.sparse_threshold else "dense"
+
+    def check(self, backend: str) -> None:
+        """Raise with an actionable message if ``backend`` can't run here."""
+        if backend in ("sharded", "permute") and self.mesh is None:
+            raise ValueError(f"backend {backend!r} needs a mesh (mesh=...)")
+        if backend == "permute":
+            k = self.mesh.shape[self.node_axis]
+            if self.num_nodes != k:
+                raise ValueError(
+                    f"backend 'permute' needs num_nodes == |{self.node_axis}| "
+                    f"({k}), got {self.num_nodes}"
+                )
+            if self.schedule.is_time_varying:
+                raise ValueError(
+                    "backend 'permute' precomputes an edge coloring; "
+                    "time-varying topologies are not supported yet"
+                )
+        if backend == "sharded":
+            shards = self.mesh.shape[self.node_axis]
+            if self.num_nodes % shards:
+                raise ValueError(
+                    f"backend 'sharded': num_nodes {self.num_nodes} not divisible "
+                    f"by node shards {shards}"
+                )
+
+    # -- per-period state ----------------------------------------------------
+
+    def refresh(self, round: int) -> bool:
+        """Rebuild graph/W/CSR if ``round`` enters a new schedule period.
+        Returns True when the mixing state changed."""
+        period = self.schedule.period_of(round)
+        if period == self._period:
+            return False
+        from repro.core import mixing, sparse
+
+        g = self.schedule.graph_at(round)
+        if self.matrix == "decavg":
+            w = mixing.decavg_matrix(g, self.data_sizes)
+        elif self.matrix == "uniform":
+            w = mixing.uniform_neighbor_matrix(g)
+        else:
+            w = mixing.metropolis_hastings_matrix(g)
+        if self.validate:
+            mixing.validate_mixing(w, g)
+        self._period = period
+        self._graph = g
+        self._w = jnp.asarray(w, jnp.float32)
+        self._csr = (
+            sparse.csr_from_dense(w)
+            if self.backend in ("sparse", "sparse_pallas")
+            else None
+        )
+        self._ell = None  # ELL view of _csr, built lazily, period-constant
+        if self.backend == "permute":
+            self._colors = mixing.edge_coloring(g)
+        return True
+
+    @property
+    def graph(self):
+        return self._graph
+
+    @property
+    def w(self) -> jax.Array:
+        """Dense (N, N) f32 mixing matrix for the current period."""
+        return self._w
+
+    @property
+    def csr(self):
+        from repro.core import sparse
+
+        if self._csr is None:
+            self._csr = sparse.csr_from_dense(np.asarray(self._w))
+        return self._csr
+
+    def w_at(self, round: int) -> jax.Array:
+        self.refresh(round)
+        return self._w
+
+    def graph_at(self, round: int):
+        self.refresh(round)
+        return self._graph
+
+    def is_gossip_round(self, round: int) -> bool:
+        # gossip_every == 0 disables gossip entirely (isolated training),
+        # matching the legacy launch/train.py falsy-flag semantics.
+        if self.gossip_every < 1:
+            return False
+        return self.gossip_every == 1 or round % self.gossip_every == 0
+
+    # -- mixing --------------------------------------------------------------
+
+    def mix(
+        self,
+        params: PyTree,
+        *,
+        round: int | None = None,
+        backend: str | None = None,
+        spec: str | None = None,
+    ) -> PyTree:
+        """One communication round.
+
+        With ``round`` given, the engine applies the cadence (identity
+        rounds return ``params`` untouched — no identity matmul) and
+        refreshes schedule state for that round. Without ``round``, the
+        current-period matrix is applied unconditionally (callers that
+        manage ``refresh`` themselves, e.g. the trainer's jitted closure,
+        must not have their period reset here). ``backend`` (alias
+        ``spec``) overrides the engine's backend for this call."""
+        if round is not None:
+            if not self.is_gossip_round(round):
+                return params
+            self.refresh(round)
+        backend = backend or spec or self.backend
+        if backend != self.backend:
+            self.check(backend)
+        if backend == "dense":
+            return mix_dense(self._w, params)
+        if backend == "pallas":
+            return mix_pallas(self._w, params, interpret=self.interpret)
+        if backend == "sparse":
+            from repro.core import sparse
+
+            return sparse.mix_sparse(self.csr, params)
+        if backend == "sparse_pallas":
+            from repro.core import sparse
+
+            if self._ell is None:  # period-constant; avoids per-call rebuild
+                self._ell = sparse.ell_from_csr(self.csr)
+            return sparse.mix_sparse_pallas(
+                self.csr, params, ell=self._ell, interpret=self.interpret
+            )
+        if backend == "sharded":
+            return mix_sharded(
+                self._w, params, mesh=self.mesh, node_axis=self.node_axis,
+                schedule=self.sharded_schedule,
+            )
+        if backend == "permute":
+            if self._colors is None:
+                from repro.core import mixing
+
+                self._colors = mixing.edge_coloring(self._graph)
+            return mix_permute(
+                self._w, params, self._colors, mesh=self.mesh,
+                node_axis=self.node_axis,
+            )
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def __repr__(self) -> str:
+        return (
+            f"GossipEngine(n={self.num_nodes}, backend={self.backend}, "
+            f"matrix={self.matrix}, gossip_every={self.gossip_every}, "
+            f"topology={self.schedule!r})"
+        )
 
 
 def gossip_error(params: PyTree) -> jax.Array:

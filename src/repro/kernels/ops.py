@@ -15,8 +15,9 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gossip_mix import DEFAULT_BLOCKS, gossip_mix_pallas
+from repro.kernels.sparse_gossip import DEFAULT_BD, sparse_gossip_pallas
 
-__all__ = ["gossip_mix", "flash_attention", "on_tpu"]
+__all__ = ["gossip_mix", "gossip_mix_sparse", "flash_attention", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -66,6 +67,32 @@ def gossip_mix(
         wp, pp, bm=bm, bk=bk, bd=bd, interpret=interpret, block_sparse=block_sparse
     )
     return out[:n, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def gossip_mix_sparse(
+    idx: jax.Array,
+    val: jax.Array,
+    p: jax.Array,
+    *,
+    bd: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sparse DecAvg mixing ``W @ P`` via the Pallas ELL row-gather kernel.
+
+    idx/val: (N, K) ELL neighbor indices + weights (core/sparse.ell_from_csr);
+    p: (N, D) node-stacked flat params. Pads D to a block multiple with zeros
+    (padded columns are sliced away; padded ELL slots carry weight 0).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    bd = bd or DEFAULT_BD
+    n, d = p.shape
+    # Don't over-pad tiny leaves: one block that covers D is enough.
+    bd = min(bd, max(128, d))
+    pp = _pad_to(p, (n, bd))
+    out = sparse_gossip_pallas(idx, val, pp, bd=bd, interpret=interpret)
+    return out[:, :d]
 
 
 def flash_attention(

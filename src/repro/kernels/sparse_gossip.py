@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for sparse (ELL) DecAvg gossip ``C = W @ P``.
+
+W arrives ELL-padded: ``idx (N, K) int32`` column indices and ``val (N, K)
+f32`` weights, K = max row nnz (padding entries carry weight 0). P is the
+(N, D) node-stacked flattened parameter matrix.
+
+Unlike the dense kernel (gossip_mix.py) — which streams (bm, bk) W tiles
+through the MXU and merely *skips* zero blocks — this kernel never
+materializes W at all. The grid is (N, D/bd, K); at step (i, j, k) the
+scalar-prefetched index map DMAs exactly the neighbor row ``idx[i, k]``'s
+(1, bd) slice of P into VMEM and the VPU accumulates ``val[i, k] * P[idx[i,
+k], j]`` into an f32 scratch row, flushed at k == K-1. Per-round work and
+wire volume are O(E * D) — the row-gather analogue of the segment-sum path
+in core/sparse.py, which it matches allclose (tests/test_sparse.py).
+
+Scalar prefetch (pltpu.PrefetchScalarGridSpec) is the canonical Pallas
+pattern for data-dependent tile addressing: ``idx`` lands in SMEM before the
+body runs, so each P block fetch is a regular pipelined DMA. Rows are
+processed one at a time ((1, bd) blocks) because neighbor sets differ per
+row; at paper scale (N<=4096, K<=~64 for BA/ER) the grid stays small. An
+8-row blocked variant with per-row gather DMAs is the obvious TPU follow-up
+once sublane-packing matters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sparse_gossip_kernel", "sparse_gossip_pallas", "DEFAULT_BD"]
+
+DEFAULT_BD = 512
+
+
+def sparse_gossip_kernel(idx_ref, val_ref, p_ref, out_ref, acc_ref, *, nk: int):
+    """One (i, j, k) grid step: acc += val[i, k] * P[idx[i, k], j-block].
+
+    Refs:
+      idx_ref: (N, K) int32 scalar-prefetch (SMEM) — consumed by index maps;
+               unused in the body but part of the kernel signature.
+      val_ref: (1, K) f32 VMEM — row i's ELL weights.
+      p_ref:   (1, bd) VMEM — the gathered neighbor row's D-block.
+      out_ref: (1, bd) output block, written once per (i, j).
+      acc_ref: (1, bd) f32 VMEM scratch accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += val_ref[0, k] * p_ref[...].astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def sparse_gossip_pallas(
+    idx: jax.Array,
+    val: jax.Array,
+    p: jax.Array,
+    *,
+    bd: int = DEFAULT_BD,
+    interpret: bool = False,
+) -> jax.Array:
+    """ELL ``W @ P`` with f32 accumulation. D must be pre-padded to a
+    multiple of ``bd`` (the ops.py wrapper handles padding/unpadding)."""
+    n, kmax = idx.shape
+    if val.shape != (n, kmax):
+        raise ValueError(f"idx {idx.shape} vs val {val.shape} mismatch")
+    n2, d = p.shape
+    if n2 != n:
+        raise ValueError(f"ELL rows {n} != params rows {n2}")
+    if d % bd:
+        raise ValueError(f"D={d} must be padded to a multiple of bd={bd}")
+    grid = (n, d // bd, kmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, kmax), lambda i, j, k, idx_ref: (i, 0)),
+            pl.BlockSpec((1, bd), lambda i, j, k, idx_ref: (idx_ref[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, k, idx_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(sparse_gossip_kernel, nk=kmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), p.dtype),
+        interpret=interpret,
+    )(idx, val.astype(jnp.float32), p)

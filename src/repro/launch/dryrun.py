@@ -106,7 +106,7 @@ def build_train(cfg, mesh, shape, *, num_nodes, microbatches, layout="tp", gossi
 
         if num_nodes != mesh.shape.get("data", 0):
             raise ValueError("sparse gossip requires num_nodes == |data|")
-        g = TO.erdos_renyi(num_nodes, 2.0 * TO.er_critical_p(num_nodes), seed=0)
+        g = TO.make(f"er:n={num_nodes}", seed=0)  # registry default p = 2*p*
         colors = MX.edge_coloring(g)
         mix_fn = lambda w, p: decavg.mix_permute(
             w, p, colors, mesh=mesh, node_axis="data"

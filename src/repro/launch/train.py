@@ -23,27 +23,11 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.configs import base as cfgbase
-from repro.core import mixing, topology as T
+from repro.core import decavg
 from repro.data import tokens as tok
 from repro.launch import steps as ST
 from repro.models import transformer as TF
 from repro.optim import adamw, schedules, sgd
-
-
-def build_graph(kind: str, n: int, seed: int) -> T.Graph:
-    if kind == "ring":
-        adj = np.zeros((n, n), dtype=bool)
-        for i in range(n):
-            adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
-        return T.Graph(adj=adj, name=f"ring({n})")
-    if kind == "full":
-        adj = ~np.eye(n, dtype=bool)
-        return T.Graph(adj=adj, name=f"full({n})")
-    if kind == "er":
-        return T.erdos_renyi(n, 2.0 * T.er_critical_p(n), seed=seed)
-    if kind == "ba":
-        return T.barabasi_albert(n, 2, seed=seed)
-    raise ValueError(f"unknown topology {kind!r}")
 
 
 def main() -> None:
@@ -51,7 +35,13 @@ def main() -> None:
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--nodes", type=int, default=4)
-    ap.add_argument("--topology", default="ring", choices=["ring", "full", "er", "ba"])
+    ap.add_argument("--topology", default="ring",
+                    help="topology registry spec, e.g. 'ring', 'ba:n=8,m=2', "
+                         "'er:p=0.3@regen=10' (n defaults to --nodes; "
+                         "see core/topology.py for the grammar)")
+    ap.add_argument("--mix-backend", default="auto",
+                    choices=["auto"] + list(decavg.GossipEngine.BACKENDS),
+                    help="gossip backend (auto: sparse at large N, else dense)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -71,8 +61,16 @@ def main() -> None:
         )
     n = args.nodes
 
-    g = build_graph(args.topology, n, args.seed)
-    w = jnp.asarray(mixing.decavg_matrix(g, np.ones(n)), jnp.float32)
+    # The engine owns the whole gossip side: topology (possibly
+    # time-varying), mixing matrix, backend, and the per-round cadence.
+    engine = decavg.GossipEngine(
+        args.topology, backend=args.mix_backend, gossip_every=args.gossip_every,
+        seed=args.seed, n=n,
+    )
+    if engine.num_nodes != n:
+        raise SystemExit(
+            f"--topology spec pins n={engine.num_nodes} but --nodes is {n}"
+        )
     sched = schedules.get(args.schedule, args.lr, args.steps)
 
     key = jax.random.PRNGKey(args.seed)
@@ -81,38 +79,26 @@ def main() -> None:
     opt = adamw.init(params) if cfg.optimizer == "adamw" else sgd.init(params)
     print(
         f"arch={cfg.arch_id} members={TF.param_count(per_node)/1e6:.1f}M x {n} nodes "
-        f"topology={g.name} optimizer={cfg.optimizer} schedule={args.schedule}"
+        f"topology={engine.graph.name} backend={engine.backend} "
+        f"optimizer={cfg.optimizer} schedule={args.schedule}"
     )
 
-    from repro.core import decavg
-
-    identity = jnp.eye(n, dtype=jnp.float32)
-
-    def make_step(lr):
-        return ST.build_train_step(
-            cfg, num_nodes=n, optimizer=cfg.optimizer, lr=lr
-        )
-
-    # jit once with lr as a traced input by closing over a host float per
-    # step would retrace; instead pass lr through the mixing trick: rebuild
-    # is avoided by making lr an argument.
     loss_fn = ST.node_loss_fn(cfg)
     opt_update = adamw.update if cfg.optimizer == "adamw" else sgd.update
 
     @jax.jit
-    def train_step(params, opt, w_mix, batch, lr):
+    def train_step(params, opt, batch, lr):
         b = jax.tree.map(lambda x: x[0], batch)
         losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, b)
         params, opt = opt_update(grads, opt, params, lr=lr)
-        params = decavg.mix_dense(w_mix, params)
         return params, opt, losses.mean()
 
     data = tok.token_batches(n, args.batch, args.seq, cfg.vocab_size, steps=args.steps, seed=args.seed)
     t0 = time.time()
     for i, (toks, labels) in enumerate(data):
         batch = {"tokens": jnp.asarray(toks)[None], "labels": jnp.asarray(labels)[None]}
-        w_step = w if (args.gossip_every and i % args.gossip_every == 0) else identity
-        params, opt, loss = train_step(params, opt, w_step, batch, float(sched(i)))
+        params, opt, loss = train_step(params, opt, batch, float(sched(i)))
+        params = engine.mix(params, round=i)  # identity rounds are free
         if i % 20 == 0 or i == args.steps - 1:
             print(f"step {i:4d}  loss {float(loss):.4f}  lr {float(sched(i)):.2e}  ({time.time()-t0:.0f}s)")
         if args.ckpt_every and i and i % args.ckpt_every == 0:

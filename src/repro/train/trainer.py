@@ -5,9 +5,14 @@ One *communication round* (paper §3):
   2. every node replaces its weights by the Eq. 1 neighborhood average.
 
 All nodes advance in lockstep as node-stacked pytrees — local training is a
-``vmap`` over the node axis, the gossip is a mixing-matrix product
-(core/decavg.py: XLA einsum or Pallas kernel). Momentum is node-local and is
-*not* averaged (the paper gossips model weights only).
+``vmap`` over the node axis, the gossip is a GossipEngine round
+(core/decavg.py: XLA einsum, Pallas kernel, or sparse CSR). Momentum is
+node-local and is *not* averaged (the paper gossips model weights only).
+
+The topology may be a built ``Graph``, a registry spec string
+(``"ba:n=100,m=2"``, with ``n`` defaulted from the loader), or a
+``TopologySchedule`` — time-varying graphs rebuild the mixing matrix (and
+re-jit the round) at each schedule period.
 
 This trainer is the 100-node MNIST-scale reproduction engine; the LLM-cohort
 path with sharded nodes lives in launch/train.py.
@@ -22,8 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import decavg, mixing
-from repro.core.topology import Graph
+from repro.core import decavg
+from repro.core.topology import Graph, TopologySchedule
 from repro.data.loader import NodeLoader
 from repro.models.mlp import init_mlp, mlp_forward
 from repro.optim import sgd
@@ -46,13 +51,13 @@ class DecentralizedTrainer:
 
     def __init__(
         self,
-        graph: Graph,
+        graph: Graph | TopologySchedule | str,
         loader: NodeLoader,
         *,
         lr: float = 1e-3,
         momentum: float = 0.5,
         local_epochs: int = 1,
-        mix_impl: str = "dense",  # "dense" | "pallas"
+        mix_impl: str = "dense",  # a GossipEngine backend ("dense"|"pallas"|"sparse"|...)
         same_init: bool = True,
         seed: int = 0,
         init_fn: Callable[..., PyTree] | None = None,
@@ -60,21 +65,28 @@ class DecentralizedTrainer:
         in_dim: int = 784,
         num_classes: int = 10,
     ):
-        self.graph = graph
         self.loader = loader
+        self.engine = decavg.GossipEngine(
+            graph, data_sizes=loader.sizes.astype(np.float64), backend=mix_impl,
+            seed=seed, n=len(loader.sizes),
+        )
+        self.graph = self.engine.graph
         self.lr, self.mu = lr, momentum
         self.local_epochs = local_epochs
-        self.num_nodes = graph.num_nodes
+        self.num_nodes = self.engine.num_nodes
         self.num_classes = num_classes
         init_fn = init_fn or (lambda k: init_mlp(k, in_dim=in_dim, num_classes=num_classes))
         self.forward = forward_fn or mlp_forward
 
-        w = mixing.decavg_matrix(graph, loader.sizes.astype(np.float64))
-        mixing.validate_mixing(w, graph)
-        self.w = jnp.asarray(w, jnp.float32)
-        self._mix = (
-            decavg.mix_dense if mix_impl == "dense" else decavg.mix_pallas
-        )
+        self.w = self.engine.w
+        # _mix reads the engine's current-period state; tests may still
+        # override self.w directly (dense path) and re-jit.
+        if mix_impl == "dense":
+            self._mix = decavg.mix_dense
+        elif mix_impl == "pallas":
+            self._mix = decavg.mix_pallas
+        else:
+            self._mix = lambda w, p: self.engine.mix(p, backend=mix_impl)
 
         key = jax.random.PRNGKey(seed)
         if same_init:
@@ -141,6 +153,11 @@ class DecentralizedTrainer:
         if gossip_first:
             self.params = self._mix(self.w, self.params)
         for r in range(rounds):
+            if self.engine.schedule.is_time_varying and self.engine.refresh(r):
+                # New schedule period: fresh W, re-jit the round closure.
+                self.w = self.engine.w
+                self.graph = self.engine.graph
+                self._round_jit = jax.jit(self._round)
             xs, ys = self.loader.sample_round(steps)
             self.params, self.opt_state = self._round_jit(
                 self.params, self.opt_state, jnp.asarray(xs), jnp.asarray(ys)

@@ -1,0 +1,148 @@
+"""Topology registry: every family builds from its example spec, specs
+round-trip through make(), schedules vary (or don't) on cue."""
+
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+class TestMake:
+    def test_every_family_example_builds_valid_graph(self):
+        for name, fam in T.families().items():
+            g = T.make(fam.example, seed=3, n=20)
+            # Graph.__post_init__ enforces symmetry/zero-diagonal; spot-check
+            # basic structure on top.
+            assert g.num_nodes >= 2, name
+            assert g.num_edges >= 1, name
+            assert np.array_equal(g.adj, g.adj.T), name
+
+    def test_every_spec_round_trips(self):
+        """g.name is the canonical spec: make(g.name) reproduces g exactly,
+        regardless of the fallback seed."""
+        for name, fam in T.families().items():
+            g = T.make(fam.example, seed=3, n=20)
+            g2 = T.make(g.name, seed=99, n=20)
+            assert np.array_equal(g.adj, g2.adj), name
+            assert g2.name == g.name, name
+
+    def test_registry_matches_legacy_generators(self):
+        a = T.make("er:n=50,p=0.2,seed=7")
+        b = T.erdos_renyi(50, 0.2, seed=7)
+        assert np.array_equal(a.adj, b.adj)
+        a = T.make("ba:n=50,m=3,seed=7")
+        b = T.barabasi_albert(50, 3, seed=7)
+        assert np.array_equal(a.adj, b.adj)
+        a = T.make("sbm:sizes=10+10+10,p_in=0.6,p_out=0.05,seed=7")
+        b = T.stochastic_block_model([10, 10, 10], 0.6, 0.05, seed=7)
+        assert np.array_equal(a.adj, b.adj)
+        assert np.array_equal(a.blocks, b.blocks)
+
+    def test_caller_defaults_fill_missing_params(self):
+        g = T.make("ring", n=6)
+        assert g.num_nodes == 6
+        # spec params win over caller defaults
+        g = T.make("ring:n=8", n=6)
+        assert g.num_nodes == 8
+
+    def test_aliases(self):
+        assert np.array_equal(
+            T.make("full:n=5").adj, T.make("complete:n=5").adj
+        )
+
+    def test_errors(self):
+        with pytest.raises(ValueError, match="unknown topology family"):
+            T.make("nope:n=4")
+        with pytest.raises(ValueError, match="unknown params"):
+            T.make("ring:n=4,bogus=1")
+        with pytest.raises(ValueError, match="needs params"):
+            T.make("ring")
+        with pytest.raises(ValueError, match="schedule suffix"):
+            T.make("er:n=4@regen=2")
+        with pytest.raises(ValueError, match="malformed param"):
+            T.make("ring:n")
+
+
+class TestStructure:
+    def test_ring(self):
+        g = T.make("ring:n=10")
+        assert np.all(g.degrees() == 2)
+        assert T.connected_components(g.adj).max() == 0
+
+    def test_star(self):
+        g = T.make("star:n=10")
+        d = g.degrees()
+        assert d[0] == 9 and np.all(d[1:] == 1)
+
+    def test_complete(self):
+        g = T.make("complete:n=10")
+        assert np.all(g.degrees() == 9)
+
+    def test_k_regular(self):
+        g = T.make("kreg:n=12,k=4")
+        assert np.all(g.degrees() == 4)
+        # odd k needs even n
+        assert np.all(T.make("kreg:n=12,k=5").degrees() == 5)
+        with pytest.raises(ValueError):
+            T.make("kreg:n=11,k=5")
+
+    def test_torus_and_grid(self):
+        t = T.make("torus:rows=4,cols=5")
+        assert np.all(t.degrees() == 4)
+        gr = T.make("grid:rows=4,cols=5")
+        assert gr.num_edges == 4 * 4 + 3 * 5  # rows*(cols-1) + (rows-1)*cols
+        # n-only form factors to a near square
+        assert T.make("grid:n=20").num_nodes == 20
+
+    def test_watts_strogatz_keeps_edge_count(self):
+        base = T.make("kreg:n=40,k=4")
+        ws = T.make("ws:n=40,k=4,beta=0.3,seed=1")
+        assert ws.num_edges == base.num_edges
+        assert not np.array_equal(ws.adj, base.adj)  # something rewired
+        # beta=0 is exactly the lattice
+        assert np.array_equal(T.make("ws:n=40,k=4,beta=0.0").adj, base.adj)
+
+    def test_caveman(self):
+        g = T.make("caveman:cliques=4,size=5")
+        assert g.num_nodes == 20
+        assert g.blocks is not None
+        assert T.connected_components(g.adj).max() == 0  # bridged, not islands
+        # high modularity by construction (the SBM axis's deterministic extreme)
+        assert T.modularity(g.adj, g.blocks) > 0.5
+        # bridging rewires each 2-clique's only edge -> rejected, not silent
+        with pytest.raises(ValueError, match="size >= 3"):
+            T.make("caveman:cliques=3,size=2")
+        # single clique needs no bridge: size=2 is a plain edge
+        assert T.make("caveman:cliques=1,size=2").num_edges == 1
+
+
+class TestSchedule:
+    def test_static_is_constant(self):
+        s = T.make_schedule("ring:n=8")
+        assert not s.is_time_varying
+        assert np.array_equal(s.graph_at(0).adj, s.graph_at(100).adj)
+
+    def test_static_wraps_existing_graph(self):
+        g = T.make("ba:n=12,m=2", seed=0)
+        s = T.TopologySchedule.static(g)
+        assert s.graph_at(37) is g
+
+    def test_regen_changes_per_period_deterministically(self):
+        s = T.make_schedule("er:n=30,p=0.2@regen=5", seed=0)
+        assert s.is_time_varying
+        assert np.array_equal(s.graph_at(0).adj, s.graph_at(4).adj)
+        assert not np.array_equal(s.graph_at(0).adj, s.graph_at(5).adj)
+        s2 = T.make_schedule("er:n=30,p=0.2@regen=5", seed=0)
+        assert np.array_equal(s.graph_at(7).adj, s2.graph_at(7).adj)
+
+    def test_rewire_preserves_nodes(self):
+        s = T.make_schedule("ba:n=30,m=2@rewire=2,frac=0.2", seed=0)
+        g0, g1 = s.graph_at(0), s.graph_at(2)
+        assert g0.num_nodes == g1.num_nodes == 30
+        assert not np.array_equal(g0.adj, g1.adj)
+
+    def test_bad_schedules(self):
+        with pytest.raises(ValueError, match="regen= or rewire="):
+            T.make_schedule("ring:n=8@warp=2")
+        with pytest.raises(ValueError, match="unknown schedule params"):
+            T.make_schedule("ring:n=8@regen=2,zz=1")

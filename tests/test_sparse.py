@@ -1,0 +1,193 @@
+"""Sparse gossip path + GossipEngine: CSR round-trips, sparse mixing is
+allclose to mix_dense on every paper topology, the engine's dispatch,
+cadence and capability checks behave."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decavg as D
+from repro.core import mixing as M
+from repro.core import sparse as S
+from repro.core import topology as T
+
+SPECS = [
+    "er:n=40,p=0.2",
+    "ba:n=40,m=3",
+    "sbm:sizes=10+10+10+10,p_in=0.6,p_out=0.05",
+    "ring:n=40",
+    "ws:n=40,k=4,beta=0.2",
+]
+
+
+def _params(n, seed=0, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(key, (n, 13, 2)).astype(dtype),
+        "b": {"w": jax.random.normal(jax.random.fold_in(key, 1), (n, 41)).astype(dtype)},
+    }
+
+
+class TestCSR:
+    def test_dense_round_trip(self):
+        g = T.make("ba:n=30,m=2", seed=0)
+        w = M.decavg_matrix(g, np.ones(30))
+        csr = S.csr_from_dense(w)
+        np.testing.assert_allclose(S.csr_to_dense(csr), w.astype(np.float32))
+
+    def test_nnz_is_o_of_e(self):
+        g = T.make("ba:n=200,m=2", seed=0)
+        csr = S.csr_from_dense(M.decavg_matrix(g, np.ones(200)))
+        assert csr.nnz == 2 * g.num_edges + 200  # neighbors + self loops
+        assert csr.nbytes < 200 * 200 * 4 / 4  # far below dense W
+
+    def test_ell_padding(self):
+        g = T.make("star:n=10")
+        csr = S.csr_from_dense(M.decavg_matrix(g, np.ones(10)))
+        idx, val = S.ell_from_csr(csr)
+        assert idx.shape == val.shape == (10, csr.max_row_nnz)
+        assert csr.max_row_nnz == 10  # hub row: 9 spokes + self
+        # padded slots carry zero weight
+        assert np.all(val[1] [2:] == 0.0)
+
+
+class TestSparseEquivalence:
+    @pytest.mark.parametrize("spec", SPECS)
+    def test_segment_sum_matches_dense(self, spec):
+        g = T.make(spec, seed=1)
+        n = g.num_nodes
+        w = M.decavg_matrix(g, np.arange(1, n + 1, dtype=np.float64))
+        csr = S.csr_from_dense(w)
+        params = _params(n)
+        dense = D.mix_dense(jnp.asarray(w, jnp.float32), params)
+        sp = S.mix_sparse(csr, params)
+        for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.parametrize("spec", SPECS[:2] + ["ring:n=40"])
+    def test_pallas_ell_kernel_matches_dense(self, spec):
+        g = T.make(spec, seed=1)
+        n = g.num_nodes
+        w = M.decavg_matrix(g, np.ones(n))
+        csr = S.csr_from_dense(w)
+        params = _params(n)
+        dense = D.mix_dense(jnp.asarray(w, jnp.float32), params)
+        sp = S.mix_sparse_pallas(csr, params, interpret=True)
+        for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+    def test_bf16_params(self):
+        g = T.make("er:n=24,p=0.3", seed=0)
+        w = M.decavg_matrix(g, np.ones(24))
+        params = _params(24, dtype=jnp.bfloat16)
+        dense = D.mix_dense(jnp.asarray(w, jnp.float32), params)
+        sp = S.mix_sparse(S.csr_from_dense(w), params)
+        for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sp)):
+            assert b.dtype == jnp.bfloat16
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-2, atol=2e-2
+            )
+
+
+class TestGossipEngine:
+    def test_every_registered_topology_sparse_equals_dense(self):
+        """Acceptance: engine.mix(spec='sparse') allclose to mix_dense on
+        every registered family (built from its example spec)."""
+        for name, fam in T.families().items():
+            e = D.GossipEngine(fam.example, seed=2, n=20)
+            params = _params(e.num_nodes, seed=3)
+            dense = D.mix_dense(e.w, params)
+            sp = e.mix(params, spec="sparse")
+            for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sp)):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
+                    err_msg=f"family {name}",
+                )
+
+    def test_auto_backend_scales_with_n(self):
+        assert D.GossipEngine("ring:n=16").backend == "dense"
+        assert D.GossipEngine("ring:n=16", sparse_threshold=8).backend == "sparse"
+
+    def test_gossip_every_identity_rounds_are_free(self):
+        e = D.GossipEngine("ring:n=12", gossip_every=3)
+        params = _params(12)
+        assert e.mix(params, round=1) is params  # no copy, no matmul
+        assert e.mix(params, round=2) is params
+        out = e.mix(params, round=3)
+        assert out is not params
+        # gossip_every=0 disables gossip entirely (legacy falsy semantics)
+        e0 = D.GossipEngine("ring:n=12", gossip_every=0)
+        assert e0.mix(params, round=0) is params
+
+    def test_capability_checks(self):
+        with pytest.raises(ValueError, match="needs a mesh"):
+            D.GossipEngine("ring:n=8", backend="sharded")
+        with pytest.raises(ValueError, match="needs a mesh"):
+            D.GossipEngine("ring:n=8", backend="permute")
+        with pytest.raises(ValueError, match="unknown backend"):
+            D.GossipEngine("ring:n=8", backend="warp")
+        caps = D.GossipEngine.capabilities()
+        assert set(caps) == set(D.GossipEngine.BACKENDS)
+        assert "O(E" in caps["sparse"]["cost"]
+
+    def test_matrix_kinds(self):
+        e = D.GossipEngine("er:n=20,p=0.4", matrix="mh", seed=0)
+        w = np.asarray(e.w)
+        np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-6)  # doubly stochastic
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+        with pytest.raises(ValueError, match="matrix must be one of"):
+            D.GossipEngine("ring:n=8", matrix="bogus")
+
+    def test_time_varying_schedule_rebuilds_w(self):
+        e = D.GossipEngine("er:n=24,p=0.3@regen=2", seed=0)
+        w0 = np.asarray(e.w_at(0))
+        assert not e.refresh(1)  # same period: no rebuild
+        assert e.refresh(2)
+        w2 = np.asarray(e.w_at(2))
+        assert not np.allclose(w0, w2)
+        # sparse state follows the period
+        params = _params(24)
+        sp = e.mix(params, round=2, spec="sparse")
+        dense = D.mix_dense(e.w, params)
+        for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+    def test_mix_without_round_keeps_current_period(self):
+        """Regression: engine.mix() with no round must not refresh(0)-reset
+        a time-varying engine (the trainer's jitted closure relies on it)."""
+        e = D.GossipEngine("er:n=24,p=0.3@regen=2", backend="sparse", seed=0)
+        e.refresh(4)
+        w4 = np.asarray(e.w)
+        params = _params(24)
+        out = e.mix(params)  # no round: current period, no cadence
+        assert e._period == 2
+        want = D.mix_dense(jnp.asarray(w4), params)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(out)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+    def test_consensus_contraction_via_sparse(self):
+        """The spectral-gap mechanism survives the sparse path."""
+        e = D.GossipEngine("ws:n=30,k=4,beta=0.2", backend="sparse", seed=1)
+        params = _params(30, seed=5)
+        errs = [float(D.gossip_error(params))]
+        for r in range(5):
+            params = e.mix(params, round=r)
+            errs.append(float(D.gossip_error(params)))
+        assert errs[-1] < 0.5 * errs[0]
+
+
+def test_trainer_accepts_spec_and_sparse_backend():
+    """DecentralizedTrainer end-to-end through the registry + sparse path."""
+    from repro.core import partition as P
+    from repro.data.loader import NodeLoader
+    from repro.data.synthetic import make_mnist_like
+    from repro.train.trainer import DecentralizedTrainer
+
+    ds = make_mnist_like(train_per_class=60, test_per_class=20, seed=0)
+    parts = P.iid(ds.y_train, 12, seed=1)
+    loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=32, seed=2)
+    tr = DecentralizedTrainer("ba:m=2", loader, lr=0.05, mix_impl="sparse", seed=0)
+    assert tr.num_nodes == 12  # n defaulted from the loader
+    hist = tr.run(2, x_test=ds.x_test, y_test=ds.y_test)
+    assert np.isfinite(hist[-1].mean_acc)
