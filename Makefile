@@ -3,10 +3,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test bench-mixing bench quickstart install
+.PHONY: verify test bench-mixing bench quickstart install sweep-smoke sweep-paper
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
+
+sweep-smoke:  ## 3-family smoke sweep (minutes, CPU) -> results/ + BENCH_sweep.json
+	$(PY) -m repro.experiments.sweep --preset smoke \
+	    --store results/sweep_smoke.jsonl --bench-out BENCH_sweep.json
+
+sweep-paper:  ## the paper's N=100 matrix (ER/BA/SBM x splits x 3 seeds)
+	$(PY) -m repro.experiments.sweep --preset paper \
+	    --store results/sweep_paper.jsonl --bench-out BENCH_sweep.json
 
 test: verify
 

@@ -252,6 +252,9 @@ class GossipEngine:
         rounds are identity and skip all work.
       mesh/node_axis/sharded_schedule: for the shard_map backends.
       interpret: forwarded to the Pallas backends (default: auto-detect).
+      sparse_p_chunk: feature-axis chunk for the sparse gather — an int,
+        "auto" (sized from nnz to a ~16 MiB transient), or None (off).
+        Bounds the O(nnz * P) gather buffer for very large per-leaf P.
       **topology_defaults: fallback spec params (e.g. ``n=...``) when
         ``topology`` is a spec string.
     """
@@ -271,6 +274,7 @@ class GossipEngine:
         sharded_schedule: Literal["allgather", "reduce_scatter"] = "reduce_scatter",
         interpret: bool | None = None,
         sparse_threshold: int = 512,
+        sparse_p_chunk: int | Literal["auto"] | None = None,
         validate: bool = True,
         seed: int = 0,
         **topology_defaults,
@@ -298,6 +302,9 @@ class GossipEngine:
         self.sharded_schedule = sharded_schedule
         self.interpret = interpret
         self.sparse_threshold = int(sparse_threshold)
+        # Feature-axis chunking for the sparse gather (None = off; "auto"
+        # sizes the chunk from nnz so the transient buffer stays ~16 MiB).
+        self.sparse_p_chunk = sparse_p_chunk
         self.validate = validate
         self.backend = self._resolve_backend(backend)
         self.check(self.backend)
@@ -451,7 +458,10 @@ class GossipEngine:
         if backend == "sparse":
             from repro.core import sparse
 
-            return sparse.mix_sparse(self.csr, params)
+            p_chunk = self.sparse_p_chunk
+            if p_chunk == "auto":
+                p_chunk = sparse.auto_p_chunk(self.csr.nnz)
+            return sparse.mix_sparse(self.csr, params, p_chunk=p_chunk)
         if backend == "sparse_pallas":
             from repro.core import sparse
 

@@ -39,6 +39,7 @@ __all__ = [
     "ell_from_csr",
     "mix_sparse",
     "mix_sparse_pallas",
+    "auto_p_chunk",
 ]
 
 PyTree = Any
@@ -129,22 +130,50 @@ def ell_from_csr(csr: CSR) -> tuple[np.ndarray, np.ndarray]:
     return idx, val
 
 
-def _mix_sparse_leaf(csr: CSR, leaf: jax.Array) -> jax.Array:
+def _gather_segment_sum(csr: CSR, flat: jax.Array) -> jax.Array:
+    gathered = flat[csr.indices] * csr.values[:, None]  # (nnz, p)
+    return jax.ops.segment_sum(
+        gathered, csr.rows, num_segments=csr.shape[0], indices_are_sorted=True
+    )
+
+
+def _mix_sparse_leaf(csr: CSR, leaf: jax.Array, p_chunk: int | None = None) -> jax.Array:
     n = csr.shape[0]
     if leaf.shape[0] != n:
         raise ValueError(f"leaf leading axis {leaf.shape[0]} != num_nodes {n}")
     flat = leaf.reshape(n, -1).astype(jnp.float32)
-    gathered = flat[csr.indices] * csr.values[:, None]  # (nnz, p)
-    out = jax.ops.segment_sum(
-        gathered, csr.rows, num_segments=n, indices_are_sorted=True
-    )
+    p = flat.shape[1]
+    if p_chunk is not None and p_chunk < p:
+        # Chunk the feature axis so the transient gather buffer is
+        # O(nnz * p_chunk) instead of O(nnz * P) — at N=4096 / BA(m=2) a
+        # P=2^20 leaf would otherwise materialize a ~65 GB intermediate.
+        # lax.map serializes the chunks, bounding peak memory.
+        pad = (-p) % p_chunk
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        chunks = flat.reshape(n, -1, p_chunk).transpose(1, 0, 2)  # (k, n, pc)
+        out = jax.lax.map(functools.partial(_gather_segment_sum, csr), chunks)
+        out = out.transpose(1, 0, 2).reshape(n, -1)[:, :p]
+    else:
+        out = _gather_segment_sum(csr, flat)
     return out.reshape(leaf.shape).astype(leaf.dtype)
 
 
-@jax.jit
-def mix_sparse(csr: CSR, params: PyTree) -> PyTree:
-    """One DecAvg round ``P <- W @ P`` with W in CSR, O(E*P) work."""
-    return jax.tree.map(functools.partial(_mix_sparse_leaf, csr), params)
+@functools.partial(jax.jit, static_argnames=("p_chunk",))
+def mix_sparse(csr: CSR, params: PyTree, *, p_chunk: int | None = None) -> PyTree:
+    """One DecAvg round ``P <- W @ P`` with W in CSR, O(E*P) work.
+
+    ``p_chunk`` bounds the transient gather buffer to O(nnz * p_chunk) per
+    leaf (serialized chunks over the feature axis) — use for very large
+    per-leaf P at large N. Default None preserves the single-gather path.
+    """
+    return jax.tree.map(functools.partial(_mix_sparse_leaf, csr, p_chunk=p_chunk), params)
+
+
+def auto_p_chunk(nnz: int, budget_elems: int = 1 << 22) -> int:
+    """Feature-axis chunk size keeping the gather buffer under ``budget_elems``
+    f32 elements (default 4M ~= 16 MiB)."""
+    return max(64, budget_elems // max(nnz, 1))
 
 
 def mix_sparse_pallas(

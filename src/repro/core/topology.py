@@ -59,6 +59,8 @@ __all__ = [
     "connected_components",
     "modularity",
     "external_edge_counts",
+    "clustering_coefficient",
+    "graph_summary",
 ]
 
 
@@ -765,6 +767,43 @@ def modularity(adj: np.ndarray, communities: np.ndarray) -> float:
     same = communities[:, None] == communities[None, :]
     q = (adj.astype(np.float64) - np.outer(k, k) / m2) * same
     return float(q.sum() / m2)
+
+
+def clustering_coefficient(adj: np.ndarray) -> float:
+    """Global (transitivity) clustering coefficient: 3*triangles / open triads."""
+    a = adj.astype(np.float64)
+    deg = a.sum(axis=1)
+    triangles = float(np.trace(a @ a @ a)) / 6.0
+    triads = float((deg * (deg - 1)).sum()) / 2.0
+    return 0.0 if triads == 0 else 3.0 * triangles / triads
+
+
+def graph_summary(g: Graph, *, max_dense_n: int = 2048) -> dict[str, Any]:
+    """Realized-graph properties as one JSON-able dict.
+
+    This is the graph side of the experiment harness's analysis join: every
+    sweep run records ``graph_summary(realized graph)`` next to its training
+    curves so topology properties (degree spread, modularity, clustering) can
+    be regressed against knowledge-spread speed. O(N^3) quantities
+    (clustering) are skipped above ``max_dense_n`` and reported as None.
+    """
+    deg = g.degrees().astype(np.float64)
+    n = g.num_nodes
+    comps = connected_components(g.adj)
+    out: dict[str, Any] = {
+        "name": g.name,
+        "nodes": n,
+        "edges": g.num_edges,
+        "density": (2.0 * g.num_edges / (n * (n - 1))) if n > 1 else 0.0,
+        "degree_min": int(deg.min()) if n else 0,
+        "degree_max": int(deg.max()) if n else 0,
+        "degree_mean": float(deg.mean()) if n else 0.0,
+        "degree_std": float(deg.std()) if n else 0.0,
+        "components": int(comps.max()) + 1 if n else 0,
+        "modularity": None if g.blocks is None else modularity(g.adj, g.blocks),
+        "clustering": clustering_coefficient(g.adj) if n <= max_dense_n else None,
+    }
+    return out
 
 
 def external_edge_counts(g: Graph) -> np.ndarray:

@@ -1,0 +1,5 @@
+"""Experiment harness: declarative sweep specs, a resumable JSONL runner and
+knowledge-spread analytics (the paper's topology x split x seed matrix)."""
+
+from repro.experiments.spec import ExperimentSpec, expand_grid  # noqa: F401
+from repro.experiments.store import ResultsStore  # noqa: F401

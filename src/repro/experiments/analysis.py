@@ -1,0 +1,197 @@
+"""Knowledge-spread analytics: join graph properties with training curves.
+
+Consumes a ResultsStore written by runner.py and produces the paper's
+headline views:
+
+- per-run summary rows (topology family, partitioner, seed, realized-graph
+  properties, spectral gap, final/best accuracies, consensus trajectory);
+- the hub-vs-leaf table (paper Fig. 3): for each topology family, how well
+  G2 knowledge held only by hubs vs. only by leaves spreads to the nodes
+  that never saw it (``g2_acc_spread``);
+- the community-confusion view (paper Table 1) for runs on block graphs;
+- ``BENCH_sweep.json`` — the machine-readable artifact CI uploads.
+
+Everything is plain dict/list (no pandas in the container).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import numpy as np
+
+from repro.experiments.store import ResultsStore
+
+__all__ = [
+    "summarize",
+    "hub_vs_leaf_table",
+    "qualitative_checks",
+    "write_bench",
+    "render_tables",
+]
+
+
+def _auc(xs: list[float]) -> float | None:
+    """Mean of a curve — a rounds-robust 'how fast did it get there' scalar."""
+    vals = [x for x in xs if x is not None]
+    return float(np.mean(vals)) if vals else None
+
+
+def summarize(store: ResultsStore) -> list[dict[str, Any]]:
+    """One row per completed run: spec axes + graph properties + curve stats.
+
+    One ``store.load()`` pass: runs whose latest attempt is incomplete or
+    failed are excluded (same contract as ``ResultsStore.completed``).
+    """
+    from repro.experiments.spec import family_of
+
+    runs = store.load()
+    rows: list[dict[str, Any]] = []
+    for rid in sorted(runs):
+        run = runs[rid]
+        if not ResultsStore._is_completed(run):
+            continue
+        spec, end, curve = run["spec"], run["end"], run["rounds"]
+        final = end.get("final", {})
+        graph = final.get("graph", {})
+        row: dict[str, Any] = {
+            "run_id": rid,
+            "family": family_of(spec.get("topology", "?")),
+            "topology": spec.get("topology"),
+            "partitioner": spec.get("partitioner"),
+            "backend": spec.get("backend"),
+            "seed": spec.get("seed"),
+            "rounds": len(curve),
+            "wall_s": end.get("wall_s"),
+            # graph side
+            "nodes": graph.get("nodes"),
+            "edges": graph.get("edges"),
+            "degree_mean": graph.get("degree_mean"),
+            "degree_std": graph.get("degree_std"),
+            "modularity": graph.get("modularity"),
+            "clustering": graph.get("clustering"),
+            "spectral_gap": graph.get("spectral_gap"),
+            # training side (last round record)
+            "final_acc": final.get("mean_acc"),
+            "final_g1_acc": final.get("g1_acc"),
+            "final_g2_acc": final.get("g2_acc"),
+            "final_g2_spread": final.get("g2_acc_spread"),
+            "final_consensus": final.get("consensus_mean"),
+            "final_loss": final.get("loss"),
+            # curve stats
+            "auc_acc": _auc([r.get("mean_acc") for r in curve]),
+            "auc_g2_spread": _auc([r.get("g2_acc_spread") for r in curve]),
+        }
+        if "community_confusion_offdiag" in final:
+            row["community_confusion_offdiag"] = final["community_confusion_offdiag"]
+        rows.append(row)
+    return rows
+
+
+def hub_vs_leaf_table(rows: list[dict[str, Any]]) -> dict[str, dict[str, Any]]:
+    """Per topology family: G2 spread under hub_focused vs edge_focused splits,
+    averaged over seeds. The paper's qualitative claim is hub > edge."""
+    table: dict[str, dict[str, Any]] = {}
+    for split in ("hub_focused", "edge_focused"):
+        for r in rows:
+            if r["partitioner"] != split or r.get("final_g2_spread") is None:
+                continue
+            fam = table.setdefault(r["family"], {})
+            fam.setdefault(split, []).append(r["final_g2_spread"])
+            fam.setdefault(f"{split}_auc", []).append(r.get("auc_g2_spread"))
+    out: dict[str, dict[str, Any]] = {}
+    for fam, cols in table.items():
+        row = {k: _auc(v) for k, v in cols.items()}
+        if row.get("hub_focused") is not None and row.get("edge_focused") is not None:
+            row["hub_minus_edge"] = row["hub_focused"] - row["edge_focused"]
+        out[fam] = row
+    return out
+
+
+def qualitative_checks(rows: list[dict[str, Any]]) -> dict[str, Any]:
+    """The paper's qualitative orderings, as machine-checkable booleans.
+
+    - hub_beats_edge: on every family with both splits, knowledge held by
+      hubs spreads to non-holders better than knowledge held by leaves
+      (compared on curve AUC, which is robust to both curves saturating).
+    - gossip_learns_g2: under hub_focused splits, the nodes that never saw
+      a G2 example end clearly above chance (1/10) on G2 — knowledge moved
+      over the edges, not the data.
+    """
+    hub_edge = hub_vs_leaf_table(rows)
+    per_family = {
+        fam: bool(
+            (cols.get("hub_focused_auc") or 0.0)
+            > (cols.get("edge_focused_auc") or 0.0)
+        )
+        for fam, cols in hub_edge.items()
+        if cols.get("hub_focused") is not None and cols.get("edge_focused") is not None
+    }
+    hub_spread = [
+        r["final_g2_spread"]
+        for r in rows
+        if r.get("final_g2_spread") is not None and r["partitioner"] == "hub_focused"
+    ]
+    return {
+        "hub_beats_edge": all(per_family.values()) if per_family else None,
+        "hub_beats_edge_by_family": per_family,
+        "gossip_learns_g2": (float(np.mean(hub_spread)) > 0.13) if hub_spread else None,
+    }
+
+
+def write_bench(
+    store: ResultsStore,
+    out_path: str,
+    *,
+    rows: list[dict[str, Any]] | None = None,
+    extra: dict | None = None,
+) -> dict:
+    """Write the sweep's machine-readable summary (BENCH_sweep.json).
+    Pass ``rows`` to reuse an existing ``summarize(store)`` result."""
+    if rows is None:
+        rows = summarize(store)
+    bench = {
+        "bench": "topology_sweep",
+        "store": store.path,
+        "runs": len(rows),
+        "summary": rows,
+        "hub_vs_leaf": hub_vs_leaf_table(rows),
+        "checks": qualitative_checks(rows),
+        **(extra or {}),
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    return bench
+
+
+def render_tables(rows: list[dict[str, Any]]) -> str:
+    """Human-readable headline tables for the CLI."""
+    lines: list[str] = []
+    if not rows:
+        return "(no completed runs)"
+    lines.append("run summary:")
+    hdr = ("family", "partitioner", "seed", "final_acc", "final_g2_spread",
+           "final_consensus", "spectral_gap")
+    lines.append("  " + "  ".join(f"{h:>16s}" for h in hdr))
+    for r in rows:
+        vals = []
+        for h in hdr:
+            v = r.get(h)
+            vals.append(f"{v:16.4f}" if isinstance(v, float) else f"{str(v):>16s}")
+        lines.append("  " + "  ".join(vals))
+    he = hub_vs_leaf_table(rows)
+    if he:
+        lines.append("\nhub vs leaf G2 spread (final / AUC):")
+        for fam, cols in sorted(he.items()):
+            hub, edge = cols.get("hub_focused"), cols.get("edge_focused")
+            ha, ea = cols.get("hub_focused_auc"), cols.get("edge_focused_auc")
+            if hub is None or edge is None:
+                continue
+            lines.append(
+                f"  {fam:>10s}: hub {hub:.4f}/{ha:.4f}  edge {edge:.4f}/{ea:.4f}  "
+                f"delta {cols['hub_minus_edge']:+.4f}"
+            )
+    checks = qualitative_checks(rows)
+    lines.append(f"\nchecks: {json.dumps(checks)}")
+    return "\n".join(lines)

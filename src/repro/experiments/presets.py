@@ -1,0 +1,115 @@
+"""Sweep presets: the paper's matrix at three scales.
+
+- ``smoke``: minutes on CPU — 3 topology families, hub/edge splits on BA,
+  1 seed. The CI gate and the acceptance check for the harness itself.
+- ``paper``: the reproduction matrix (N=100; ER / BA / SBM x iid / hub /
+  edge / community x 3 seeds) — the source of the Figure 3 / Table 1
+  walkthrough in the README.
+- ``large_n``: the ROADMAP scaling item — ws / torus / caveman / ba at
+  N=1024-4096 on the sparse backend with chunked segment-sum, hub/edge
+  splits. Few rounds: this preset measures spread + wall-clock at scale,
+  not final accuracy.
+"""
+
+from __future__ import annotations
+
+from repro.experiments.spec import ExperimentSpec, expand_grid
+
+__all__ = ["PRESETS", "get_preset"]
+
+
+def _smoke() -> list[ExperimentSpec]:
+    base = {
+        "rounds": 10,
+        "eval_every": 1,
+        "lr": 0.05,
+        "momentum": 0.9,
+        "batch_size": 8,
+        "backend": "dense",
+        "data": {"train_per_class": 300, "test_per_class": 50},
+        "tag": "smoke",
+    }
+    specs = expand_grid(
+        base,
+        topology=["ba:n=16,m=2"],
+        partitioner=["hub_focused", "edge_focused"],
+        seed=[0],
+    )
+    specs += expand_grid(
+        base,
+        topology=["er:n=16,p=0.35", "ws:n=16,k=4,beta=0.2"],
+        partitioner=["hub_focused"],
+        seed=[0],
+    )
+    return specs
+
+
+def _paper() -> list[ExperimentSpec]:
+    base = {
+        "rounds": 40,
+        "eval_every": 2,
+        "lr": 0.05,
+        "momentum": 0.9,
+        "batch_size": 32,
+        "backend": "dense",
+        "tag": "paper",
+    }
+    specs = expand_grid(
+        base,
+        topology=["er:n=100", "ba:n=100,m=2"],
+        partitioner=["iid", "hub_focused", "edge_focused"],
+        seed=[0, 1, 2],
+    )
+    specs += expand_grid(
+        base,
+        topology=["sbm:n=100,blocks=4,p_in=0.5,p_out=0.01"],
+        partitioner=["community"],
+        seed=[0, 1, 2],
+    )
+    return specs
+
+
+def _large_n() -> list[ExperimentSpec]:
+    # Narrow member MLPs + sparse gossip with chunked segment-sum sizing:
+    # this preset measures spread + wall-clock at scale, so every node still
+    # needs >= 1 image per G1 class (train_per_class >= n).
+    base = {
+        "rounds": 5,
+        "eval_every": 1,
+        "lr": 0.05,
+        "momentum": 0.9,
+        "batch_size": 8,
+        "backend": "sparse",
+        "data": {"train_per_class": 2048, "test_per_class": 100},
+        # sparse_p_chunk="auto" bounds the O(nnz*P) gather transient — at
+        # n=4096/ba(m=2) the hidden=[64] first layer is otherwise a ~4 GB
+        # intermediate per mix.
+        "model": {"kind": "mlp", "hidden": [64], "sparse_p_chunk": "auto"},
+        "tag": "large_n",
+    }
+    specs = expand_grid(
+        base,
+        topology=[
+            "ws:n=1024,k=8,beta=0.1",
+            "torus:rows=32,cols=32",
+            "caveman:cliques=128,size=8",
+        ],
+        partitioner=["hub_focused", "edge_focused"],
+        seed=[0],
+    )
+    specs += expand_grid(
+        {**base, "data": {"train_per_class": 5000, "test_per_class": 100}},
+        topology=["ba:n=4096,m=2"],
+        partitioner=["hub_focused"],
+        seed=[0],
+    )
+    return specs
+
+
+PRESETS = {"smoke": _smoke, "paper": _paper, "large_n": _large_n}
+
+
+def get_preset(name: str) -> list[ExperimentSpec]:
+    if name not in PRESETS:
+        raise ValueError(f"unknown preset {name!r}; one of {sorted(PRESETS)}")
+    return PRESETS[name]()

@@ -1,0 +1,399 @@
+"""Executes ExperimentSpecs and streams per-round records to a ResultsStore.
+
+Two executors, dispatched on ``spec.model["kind"]``:
+
+- ``mlp`` (default): the paper-faithful path — synthetic MNIST-like data,
+  graph-aware partitioners, ``DecentralizedTrainer``. Streams per round:
+  per-node accuracy stats, G1/G2 class-group accuracy (overall, on the focus
+  nodes holding G2 data, and on the *spread* nodes that never saw G2 — the
+  paper's knowledge-spread quantity), consensus distance ||theta_i - theta_bar||
+  and wall-clock.
+- ``lm``: the LLM-cohort loop (token batches, transformer members, AdamW /
+  SGD + LR schedule). ``launch/train.py`` is a thin CLI wrapper building one
+  such spec.
+
+``run_sweep`` adds skip-completed resume (a spec whose run_id already has a
+completed ``run_end`` in the store is skipped) and optional multi-process
+fan-out over specs: each worker writes a private JSONL shard which the parent
+merges into the main store, so the store never sees interleaved writers.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+import traceback
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.experiments.spec import ExperimentSpec
+from repro.experiments.store import ResultsStore
+
+__all__ = ["run_spec", "run_sweep", "build_partition", "default_class_groups"]
+
+Emit = Callable[[dict[str, Any]], None]
+
+
+# ---------------------------------------------------------------------------
+# mlp executor (the paper's reproduction path)
+# ---------------------------------------------------------------------------
+
+
+def default_class_groups(num_classes: int) -> np.ndarray:
+    """Paper split: lower half of the classes is G1 (everyone), upper half G2."""
+    g = np.zeros(num_classes, dtype=np.int32)
+    g[num_classes // 2 :] = 1
+    return g
+
+
+def build_partition(spec: ExperimentSpec, g, labels: np.ndarray) -> list[np.ndarray]:
+    """Dispatch spec.partitioner over core/partition.py with the realized graph."""
+    from repro.core import partition as P
+
+    kw = dict(spec.partitioner_params)
+    n = g.num_nodes
+    if spec.partitioner == "iid":
+        return P.iid(labels, n, seed=spec.seed, **kw)
+    if spec.partitioner == "hub_focused":
+        return P.hub_focused(labels, g, seed=spec.seed, **kw)
+    if spec.partitioner == "edge_focused":
+        return P.edge_focused(labels, g, seed=spec.seed, **kw)
+    if spec.partitioner == "community":
+        return P.community(labels, g, seed=spec.seed, **kw)
+    if spec.partitioner == "dirichlet":
+        kw.setdefault("beta", 0.5)
+        return P.dirichlet(labels, n, seed=spec.seed, **kw)
+    raise ValueError(f"unknown partitioner {spec.partitioner!r}")
+
+
+def _graph_record(g, w: np.ndarray) -> dict[str, Any]:
+    """graph_summary + spectral gap of the realized W (exact up to N=1024)."""
+    from repro.core import mixing, topology
+
+    rec = topology.graph_summary(g)
+    rec["spectral_gap"] = (
+        mixing.spectral_gap(np.asarray(w)) if g.num_nodes <= 1024 else None
+    )
+    return rec
+
+
+def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
+    from repro.core import topology
+    from repro.data.loader import NodeLoader
+    from repro.data.synthetic import make_mnist_like
+    from repro.train import metrics as M
+    from repro.train.trainer import DecentralizedTrainer
+
+    ds = make_mnist_like(**spec.data)
+    schedule = topology.make_schedule(spec.topology, seed=spec.seed)
+    g0 = schedule.graph_at(0)
+    parts = build_partition(spec, g0, ds.y_train)
+
+    from repro.core.partition import partition_summary
+
+    num_classes = ds.num_classes
+    groups = default_class_groups(num_classes)
+    summ = partition_summary(ds.y_train, parts)
+    g2_cols = np.flatnonzero(groups == 1)
+    holds_g2 = summ[:, g2_cols].sum(axis=1) > 0
+    focus_nodes = np.flatnonzero(holds_g2)
+    spread_nodes = np.flatnonzero(~holds_g2)
+
+    loader = NodeLoader(
+        ds.x_train, ds.y_train, parts, batch_size=spec.batch_size, seed=spec.seed + 1
+    )
+    extra: dict[str, Any] = {}
+    if "hidden" in spec.model:
+        # Narrower member MLPs for large-N sweeps (the paper's 512-256-128
+        # stack x 4096 nodes is GBs of node-stacked params).
+        from repro.models.mlp import init_mlp
+
+        hidden = tuple(spec.model["hidden"])
+        in_dim = int(spec.model.get("in_dim", ds.x_train.shape[1]))
+        extra["init_fn"] = lambda k: init_mlp(
+            k, in_dim=in_dim, hidden=hidden, num_classes=num_classes
+        )
+    trainer = DecentralizedTrainer(
+        schedule,
+        loader,
+        lr=spec.lr,
+        momentum=spec.momentum,
+        local_epochs=spec.local_epochs,
+        mix_impl=spec.backend,
+        matrix=spec.matrix,
+        sparse_p_chunk=spec.model.get("sparse_p_chunk"),
+        gossip_every=spec.gossip_every,
+        same_init=spec.same_init,
+        seed=spec.seed,
+        num_classes=num_classes,
+        class_groups=groups,
+        **extra,
+    )
+    graph_rec = _graph_record(trainer.graph, np.asarray(trainer.engine.w))
+
+    last: dict[str, Any] = {}
+
+    def on_round(m) -> None:
+        rec: dict[str, Any] = {
+            "round": m.round,
+            "mean_acc": m.mean_acc,
+            "std_acc": m.std_acc,
+            "min_acc": float(m.per_node_acc.min()),
+            "max_acc": float(m.per_node_acc.max()),
+            "g1_acc": float(m.group_acc[:, 0].mean()),
+            "g2_acc": float(m.group_acc[:, 1].mean()),
+            "g2_acc_focus": (
+                float(m.group_acc[focus_nodes, 1].mean()) if len(focus_nodes) else None
+            ),
+            "g2_acc_spread": (
+                float(m.group_acc[spread_nodes, 1].mean()) if len(spread_nodes) else None
+            ),
+            "consensus_mean": float(m.consensus.mean()),
+            "consensus_max": float(m.consensus.max()),
+            "wall_s": round(m.wall_s, 4),
+        }
+        last.clear()
+        last.update(rec)
+        emit(rec)
+        if verbose:
+            print(
+                f"    round {m.round:4d}  acc {m.mean_acc:.4f}  "
+                f"g2_spread {rec['g2_acc_spread']}  cons {rec['consensus_mean']:.3g}"
+            )
+
+    trainer.run(
+        spec.rounds,
+        eval_every=spec.eval_every,
+        x_test=ds.x_test,
+        y_test=ds.y_test,
+        on_round=on_round,
+    )
+
+    final: dict[str, Any] = {
+        **last,
+        "graph": graph_rec,
+        "num_focus_nodes": int(len(focus_nodes)),
+        "num_spread_nodes": int(len(spread_nodes)),
+    }
+    # Community runs additionally record the paper's Table-1 confusion view.
+    if trainer.graph.blocks is not None and trainer.graph.num_nodes <= 256:
+        from repro.train.metrics import community_confusion
+
+        cms = trainer.confusion(ds.x_test, ds.y_test)
+        blocks = trainer.graph.blocks
+        num_comms = int(blocks.max()) + 1
+        comm_cm = np.asarray(
+            community_confusion(cms, np.asarray(blocks), num_comms)
+        )
+        off_diag = comm_cm.copy()
+        for b in range(num_comms):
+            np.fill_diagonal(off_diag[b], 0.0)
+        final["community_confusion_offdiag"] = [
+            float(off_diag[b].sum()) for b in range(num_comms)
+        ]
+        if comm_cm.size <= 1000:
+            final["community_confusion"] = comm_cm.round(4).tolist()
+    return final
+
+
+# ---------------------------------------------------------------------------
+# lm executor (LLM-cohort loop; launch/train.py wraps this)
+# ---------------------------------------------------------------------------
+
+
+def _run_lm(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import ckpt
+    from repro.configs import base as cfgbase
+    from repro.core import decavg
+    from repro.data import tokens as tok
+    from repro.launch import steps as ST
+    from repro.models import transformer as TF
+    from repro.optim import adamw, schedules, sgd
+    from repro.train.metrics import consensus_distance
+
+    m = spec.model
+    cfg = cfgbase.get(m.get("arch", "llama3.2-1b"))
+    if not m.get("full_scale", False):
+        cfg = _dc.replace(cfg.reduced(), param_dtype="float32", optimizer=cfg.optimizer)
+    n = int(m.get("nodes", 4))
+
+    engine = decavg.GossipEngine(
+        spec.topology, backend=spec.backend, matrix=spec.matrix,
+        gossip_every=spec.gossip_every, seed=spec.seed, n=n,
+    )
+    if engine.num_nodes != n:
+        raise ValueError(f"topology spec pins n={engine.num_nodes} but nodes is {n}")
+    sched = schedules.get(m.get("schedule", "cosine"), spec.lr, spec.rounds)
+
+    key = jax.random.PRNGKey(spec.seed)
+    per_node = TF.init_params(key, cfg)
+    params = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), per_node)
+    opt = adamw.init(params) if cfg.optimizer == "adamw" else sgd.init(params)
+    if verbose:
+        print(
+            f"arch={cfg.arch_id} members={TF.param_count(per_node)/1e6:.1f}M x {n} nodes "
+            f"topology={engine.graph.name} backend={engine.backend} "
+            f"optimizer={cfg.optimizer} schedule={m.get('schedule', 'cosine')}"
+        )
+
+    loss_fn = ST.node_loss_fn(cfg)
+    opt_update = adamw.update if cfg.optimizer == "adamw" else sgd.update
+
+    @jax.jit
+    def train_step(params, opt, batch, lr):
+        b = jax.tree.map(lambda x: x[0], batch)
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, b)
+        params, opt = opt_update(grads, opt, params, lr=lr)
+        return params, opt, losses.mean()
+
+    batch_size, seq = int(m.get("batch", 4)), int(m.get("seq", 128))
+    ckpt_every, ckpt_path = int(m.get("ckpt_every", 0)), m.get("ckpt_path", "")
+    data = tok.token_batches(
+        n, batch_size, seq, cfg.vocab_size, steps=spec.rounds, seed=spec.seed
+    )
+    t0 = time.perf_counter()
+    loss = None
+    for i, (toks, labels) in enumerate(data):
+        batch = {"tokens": jnp.asarray(toks)[None], "labels": jnp.asarray(labels)[None]}
+        params, opt, loss = train_step(params, opt, batch, float(sched(i)))
+        params = engine.mix(params, round=i)  # identity rounds are free
+        if i % spec.eval_every == 0 or i == spec.rounds - 1:
+            rec = {
+                "round": i,
+                "loss": float(loss),
+                "lr": float(sched(i)),
+                "wall_s": round(time.perf_counter() - t0, 4),
+            }
+            emit(rec)
+            if verbose:
+                print(
+                    f"step {i:4d}  loss {rec['loss']:.4f}  lr {rec['lr']:.2e}  "
+                    f"({rec['wall_s']:.0f}s)"
+                )
+        if ckpt_every and i and i % ckpt_every == 0:
+            ckpt.save(ckpt_path, {"params": params}, step=i)
+    cons = np.asarray(consensus_distance(params))
+    return {
+        "loss": float(loss) if loss is not None else None,
+        "consensus_mean": float(cons.mean()),
+        "consensus_max": float(cons.max()),
+        "wall_s": round(time.perf_counter() - t0, 4),
+        "graph": _graph_record(engine.graph, np.asarray(engine.w)),
+        "members_m": round(TF.param_count(per_node) / 1e6, 2),
+    }
+
+
+_EXECUTORS = {"mlp": _run_mlp, "lm": _run_lm}
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def run_spec(
+    spec: ExperimentSpec,
+    store: ResultsStore,
+    *,
+    verbose: bool = False,
+    raise_on_error: bool = True,
+) -> dict[str, Any]:
+    """Execute one spec, streaming records to ``store``. Returns the final
+    summary (also written as the ``run_end`` record)."""
+    rid = spec.run_id
+    store.run_start(rid, spec.to_json())
+    executor = _EXECUTORS[spec.model.get("kind", "mlp")]
+    t0 = time.perf_counter()
+    try:
+        final = executor(spec, lambda rec: store.round(rid, rec), verbose)
+    except Exception as e:  # noqa: BLE001 — sweep must survive one bad spec
+        store.run_end(rid, "failed", error=f"{type(e).__name__}: {e}")
+        if raise_on_error:
+            raise
+        if verbose:
+            traceback.print_exc()
+        return {"status": "failed", "run_id": rid, "error": str(e)}
+    store.run_end(rid, "completed", wall_s=round(time.perf_counter() - t0, 4),
+                  final=final)
+    return {"status": "completed", "run_id": rid, "final": final}
+
+
+def _worker(args: tuple[dict[str, Any], str, bool]) -> str:
+    """Multi-process entry: run one spec into a private JSONL shard."""
+    spec_json, shard_path, verbose = args
+    spec = ExperimentSpec.from_json(spec_json)
+    run_spec(spec, ResultsStore(shard_path), verbose=verbose, raise_on_error=False)
+    return shard_path
+
+
+def run_sweep(
+    specs: list[ExperimentSpec],
+    store_path: str,
+    *,
+    resume: bool = True,
+    processes: int = 1,
+    verbose: bool = False,
+) -> dict[str, Any]:
+    """Run a list of specs against one results store.
+
+    With ``resume`` (default), specs whose run_id already has a completed
+    run_end are skipped — re-running a finished sweep is a no-op. With
+    ``processes > 1``, specs fan out over a spawn-context process pool; each
+    worker writes a private shard merged into the main store on completion.
+    """
+    store = ResultsStore(store_path)
+    done = store.completed() if resume else set()
+    todo = [s for s in specs if s.run_id not in done]
+    skipped = len(specs) - len(todo)
+    if verbose and skipped:
+        print(f"resume: skipping {skipped} completed run(s)")
+
+    statuses: list[dict[str, Any]] = []
+    if processes <= 1 or len(todo) <= 1:
+        for i, spec in enumerate(todo):
+            if verbose:
+                print(f"[{i + 1}/{len(todo)}] {spec.run_id}  ({spec.topology} "
+                      f"x {spec.partitioner})")
+            statuses.append(
+                run_spec(spec, store, verbose=verbose, raise_on_error=False)
+            )
+    else:
+        import multiprocessing as mp
+
+        ctx = mp.get_context("spawn")
+        shard_dir = store_path + ".shards"
+        os.makedirs(shard_dir, exist_ok=True)
+        jobs = [
+            (s.to_json(), os.path.join(shard_dir, f"{s.run_id}.jsonl"), verbose)
+            for s in todo
+        ]
+        with ctx.Pool(processes=min(processes, len(jobs))) as pool:
+            for shard in pool.imap_unordered(_worker, jobs):
+                with open(shard) as f:
+                    store.append_lines(f)
+                os.remove(shard)
+        try:
+            os.rmdir(shard_dir)
+        except OSError:
+            pass
+        finals = store.finals()
+        statuses = [
+            {"status": "completed" if s.run_id in finals else "failed",
+             "run_id": s.run_id}
+            for s in todo
+        ]
+
+    failed = [s["run_id"] for s in statuses if s["status"] != "completed"]
+    return {
+        "total": len(specs),
+        "ran": len(todo),
+        "skipped": skipped,
+        "failed": failed,
+        "store": store.path,
+    }

@@ -1,4 +1,10 @@
-"""Decentralized LLM-cohort training driver.
+"""Decentralized LLM-cohort training driver — a thin CLI over the experiment
+harness (repro/experiments/runner.py, model kind "lm").
+
+The CLI builds one ExperimentSpec and hands it to ``runner.run_spec``: the
+training loop, per-step JSONL streaming and the run-id bookkeeping all live
+in the harness, so single runs land in the same results-store format as
+sweeps (``--store``, default results/train_runs.jsonl).
 
 Two modes:
 - default (CPU-runnable): reduced member models, real data, real DecAvg
@@ -14,20 +20,37 @@ Run:  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --steps 50
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import ckpt
-from repro.configs import base as cfgbase
 from repro.core import decavg
-from repro.data import tokens as tok
-from repro.launch import steps as ST
-from repro.models import transformer as TF
-from repro.optim import adamw, schedules, sgd
+from repro.experiments import runner
+from repro.experiments.spec import ExperimentSpec
+from repro.experiments.store import ResultsStore
+
+
+def build_spec(args: argparse.Namespace) -> ExperimentSpec:
+    """One LM-cohort ExperimentSpec from the CLI flags."""
+    return ExperimentSpec(
+        topology=args.topology,
+        partitioner="iid",  # LM cohorts share the token stream (tokens.py)
+        backend=args.mix_backend,
+        rounds=args.steps,
+        eval_every=20,
+        lr=args.lr,
+        gossip_every=args.gossip_every,
+        seed=args.seed,
+        model={
+            "kind": "lm",
+            "arch": args.arch,
+            "nodes": args.nodes,
+            "batch": args.batch,
+            "seq": args.seq,
+            "schedule": args.schedule,
+            "full_scale": bool(args.full_scale),
+            "ckpt_every": args.ckpt_every,
+            "ckpt_path": args.ckpt_path,
+        },
+        tag="launch.train",
+    )
 
 
 def main() -> None:
@@ -51,59 +74,18 @@ def main() -> None:
     ap.add_argument("--ckpt-path", default="results/train_ckpt.npz")
     ap.add_argument("--full-scale", action="store_true",
                     help="use the unreduced arch config (requires TPU-scale memory)")
+    ap.add_argument("--store", default="results/train_runs.jsonl",
+                    help="results JSONL (same schema as the sweep store)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = cfgbase.get(args.arch)
-    if not args.full_scale:
-        cfg = dataclasses.replace(
-            cfg.reduced(), param_dtype="float32", optimizer=cfg.optimizer
-        )
-    n = args.nodes
-
-    # The engine owns the whole gossip side: topology (possibly
-    # time-varying), mixing matrix, backend, and the per-round cadence.
-    engine = decavg.GossipEngine(
-        args.topology, backend=args.mix_backend, gossip_every=args.gossip_every,
-        seed=args.seed, n=n,
-    )
-    if engine.num_nodes != n:
-        raise SystemExit(
-            f"--topology spec pins n={engine.num_nodes} but --nodes is {n}"
-        )
-    sched = schedules.get(args.schedule, args.lr, args.steps)
-
-    key = jax.random.PRNGKey(args.seed)
-    per_node = TF.init_params(key, cfg)
-    params = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), per_node)
-    opt = adamw.init(params) if cfg.optimizer == "adamw" else sgd.init(params)
+    spec = build_spec(args)
+    result = runner.run_spec(spec, ResultsStore(args.store), verbose=True)
+    final = result["final"]
     print(
-        f"arch={cfg.arch_id} members={TF.param_count(per_node)/1e6:.1f}M x {n} nodes "
-        f"topology={engine.graph.name} backend={engine.backend} "
-        f"optimizer={cfg.optimizer} schedule={args.schedule}"
+        f"done in {final['wall_s']:.0f}s  loss {final['loss']:.4f}  "
+        f"consensus {final['consensus_mean']:.3g}  -> {args.store} ({result['run_id']})"
     )
-
-    loss_fn = ST.node_loss_fn(cfg)
-    opt_update = adamw.update if cfg.optimizer == "adamw" else sgd.update
-
-    @jax.jit
-    def train_step(params, opt, batch, lr):
-        b = jax.tree.map(lambda x: x[0], batch)
-        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, b)
-        params, opt = opt_update(grads, opt, params, lr=lr)
-        return params, opt, losses.mean()
-
-    data = tok.token_batches(n, args.batch, args.seq, cfg.vocab_size, steps=args.steps, seed=args.seed)
-    t0 = time.time()
-    for i, (toks, labels) in enumerate(data):
-        batch = {"tokens": jnp.asarray(toks)[None], "labels": jnp.asarray(labels)[None]}
-        params, opt, loss = train_step(params, opt, batch, float(sched(i)))
-        params = engine.mix(params, round=i)  # identity rounds are free
-        if i % 20 == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(loss):.4f}  lr {float(sched(i)):.2e}  ({time.time()-t0:.0f}s)")
-        if args.ckpt_every and i and i % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_path, {"params": params}, step=i)
-    print(f"done in {time.time()-t0:.0f}s")
 
 
 if __name__ == "__main__":

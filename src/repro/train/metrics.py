@@ -1,14 +1,49 @@
-"""Evaluation metrics: per-node accuracy and confusion matrices (the paper's
-two performance figures, §5.1)."""
+"""Evaluation metrics: per-node accuracy, class-group ("knowledge spread")
+accuracy, confusion matrices and consensus distance (the paper's performance
+figures, §5.1, plus the quantities the experiment harness streams per round)."""
 
 from __future__ import annotations
+
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+PyTree = Any
+
 
 def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def group_accuracy(
+    logits: jax.Array, labels: jax.Array, class_groups: jax.Array, num_groups: int
+) -> jax.Array:
+    """(G,) accuracy restricted to each class group, for one node.
+
+    ``class_groups`` maps class id -> group id. Groups with no test examples
+    report 0 (they contribute nothing meaningful; callers mask if needed).
+    """
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    g = class_groups[labels]
+    num = jax.ops.segment_sum(correct, g, num_segments=num_groups)
+    den = jax.ops.segment_sum(jnp.ones_like(correct), g, num_segments=num_groups)
+    return num / jnp.maximum(den, 1.0)
+
+
+def consensus_distance(params: PyTree) -> jax.Array:
+    """(N,) per-node L2 distance to the node-mean model, ||theta_i - theta_bar||.
+
+    The quantity the mixing matrix's spectral gap contracts per gossip round;
+    the experiment harness streams its mean/max per round to relate topology
+    to knowledge-spread speed.
+    """
+    total = None
+    for leaf in jax.tree.leaves(params):
+        f = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        sq = jnp.sum((f - f.mean(axis=0, keepdims=True)) ** 2, axis=1)
+        total = sq if total is None else total + sq
+    return jnp.sqrt(total)
 
 
 def confusion_matrix(logits: jax.Array, labels: jax.Array, num_classes: int) -> jax.Array:

@@ -21,7 +21,8 @@ path with sharded nodes lives in launch/train.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import time
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,12 @@ from repro.data.loader import NodeLoader
 from repro.models.mlp import init_mlp, mlp_forward
 from repro.optim import sgd
 from repro.train.losses import softmax_xent
-from repro.train.metrics import accuracy, confusion_matrix
+from repro.train.metrics import (
+    accuracy,
+    confusion_matrix,
+    consensus_distance,
+    group_accuracy,
+)
 
 PyTree = Any
 
@@ -44,6 +50,11 @@ class RoundMetrics:
     per_node_acc: np.ndarray  # (N,)
     mean_acc: float
     std_acc: float
+    # Knowledge-spread extras (filled when the trainer has class_groups /
+    # when eval runs; None otherwise so legacy consumers are unaffected).
+    group_acc: np.ndarray | None = None  # (N, G) per-node per-group accuracy
+    consensus: np.ndarray | None = None  # (N,) ||theta_i - theta_bar||
+    wall_s: float = 0.0  # cumulative wall-clock since run() started
 
 
 class DecentralizedTrainer:
@@ -57,24 +68,39 @@ class DecentralizedTrainer:
         lr: float = 1e-3,
         momentum: float = 0.5,
         local_epochs: int = 1,
-        mix_impl: str = "dense",  # a GossipEngine backend ("dense"|"pallas"|"sparse"|...)
+        mix_impl: str = "dense",  # a GossipEngine backend ("dense"|"pallas"|...) or "auto"
+        matrix: str = "decavg",  # mixing matrix kind ("decavg"|"uniform"|"mh")
+        sparse_p_chunk=None,  # int | "auto": bound the sparse gather transient
+        gossip_every: int = 1,  # mix on rounds r % k == 0; 0 = isolated (no gossip)
         same_init: bool = True,
         seed: int = 0,
         init_fn: Callable[..., PyTree] | None = None,
         forward_fn: Callable[[PyTree, jax.Array], jax.Array] | None = None,
         in_dim: int = 784,
         num_classes: int = 10,
+        class_groups: Sequence[int] | np.ndarray | None = None,
     ):
         self.loader = loader
         self.engine = decavg.GossipEngine(
             graph, data_sizes=loader.sizes.astype(np.float64), backend=mix_impl,
-            seed=seed, n=len(loader.sizes),
+            matrix=matrix, sparse_p_chunk=sparse_p_chunk,
+            gossip_every=gossip_every, seed=seed, n=len(loader.sizes),
         )
+        if mix_impl == "auto":
+            mix_impl = self.engine.backend
         self.graph = self.engine.graph
         self.lr, self.mu = lr, momentum
         self.local_epochs = local_epochs
         self.num_nodes = self.engine.num_nodes
         self.num_classes = num_classes
+        # class_groups maps class id -> group id (e.g. G1/G2 = 0/1); when set,
+        # eval rounds also report per-node per-group accuracy.
+        self.class_groups = (
+            None if class_groups is None else jnp.asarray(np.asarray(class_groups), jnp.int32)
+        )
+        self.num_groups = (
+            0 if self.class_groups is None else int(np.asarray(class_groups).max()) + 1
+        )
         init_fn = init_fn or (lambda k: init_mlp(k, in_dim=in_dim, num_classes=num_classes))
         self.forward = forward_fn or mlp_forward
 
@@ -99,7 +125,10 @@ class DecentralizedTrainer:
             self.params = jax.vmap(init_fn)(keys)
         self.opt_state = sgd.init(self.params)
         self._round_jit = jax.jit(self._round)
+        self._local_jit = jax.jit(self._local_steps)  # non-gossip rounds
         self._eval_jit = jax.jit(self._eval)
+        self._group_eval_jit = jax.jit(self._group_eval)
+        self._consensus_jit = jax.jit(consensus_distance)
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -135,7 +164,34 @@ class DecentralizedTrainer:
 
         return jax.vmap(node_metrics)(params)
 
+    def _group_eval(self, params, x_test, y_test):
+        """Per-node (accuracy, per-group accuracy); used when class_groups set."""
+
+        def node_metrics(p):
+            logits = self.forward(p, x_test)
+            return accuracy(logits, y_test), group_accuracy(
+                logits, y_test, self.class_groups, self.num_groups
+            )
+
+        return jax.vmap(node_metrics)(params)
+
     # -- public API ---------------------------------------------------------
+
+    def eval_round(self, r: int, x_test, y_test, t0: float) -> RoundMetrics:
+        """One evaluation pass over the current params as a RoundMetrics."""
+        x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
+        group_acc = None
+        if self.class_groups is not None:
+            accs, gaccs = self._group_eval_jit(self.params, x_test, y_test)
+            group_acc = np.asarray(gaccs)
+        else:
+            accs, _ = self._eval_jit(self.params, x_test, y_test)
+        accs = np.asarray(accs)
+        cons = np.asarray(self._consensus_jit(self.params))
+        return RoundMetrics(
+            r, accs, float(accs.mean()), float(accs.std()),
+            group_acc=group_acc, consensus=cons, wall_s=time.perf_counter() - t0,
+        )
 
     def run(
         self,
@@ -146,10 +202,17 @@ class DecentralizedTrainer:
         y_test: np.ndarray | None = None,
         gossip_first: bool = False,
         verbose: bool = False,
+        on_round: Callable[[RoundMetrics], None] | None = None,
     ) -> list[RoundMetrics]:
-        """Run communication rounds; returns per-round metrics history."""
+        """Run communication rounds; returns per-round metrics history.
+
+        ``on_round`` fires after every evaluated round (the experiment
+        harness streams each RoundMetrics to its results store instead of
+        waiting for the full history).
+        """
         history: list[RoundMetrics] = []
         steps = self.loader.steps_per_epoch() * self.local_epochs
+        t0 = time.perf_counter()
         if gossip_first:
             self.params = self._mix(self.w, self.params)
         for r in range(rounds):
@@ -159,16 +222,19 @@ class DecentralizedTrainer:
                 self.graph = self.engine.graph
                 self._round_jit = jax.jit(self._round)
             xs, ys = self.loader.sample_round(steps)
-            self.params, self.opt_state = self._round_jit(
+            step = (
+                self._round_jit if self.engine.is_gossip_round(r) else self._local_jit
+            )
+            self.params, self.opt_state = step(
                 self.params, self.opt_state, jnp.asarray(xs), jnp.asarray(ys)
             )
             if x_test is not None and (r % eval_every == 0 or r == rounds - 1):
-                accs, _ = self._eval_jit(self.params, jnp.asarray(x_test), jnp.asarray(y_test))
-                accs = np.asarray(accs)
-                history.append(
-                    RoundMetrics(r, accs, float(accs.mean()), float(accs.std()))
-                )
+                m = self.eval_round(r, x_test, y_test, t0)
+                history.append(m)
+                if on_round is not None:
+                    on_round(m)
                 if verbose:
+                    accs = m.per_node_acc
                     print(
                         f"round {r:4d}  acc mean {accs.mean():.4f} "
                         f"std {accs.std():.4f} min {accs.min():.4f} max {accs.max():.4f}"

@@ -33,6 +33,47 @@ class TestFocusSelection:
         assert len(sel) == k
         assert len(set(sel.tolist())) == k
 
+    def test_boundary_degree_tie_break(self):
+        """Paper rule at the boundary: whole degree classes are taken while
+        they fit; the class that would overshoot is sampled, so every
+        boundary pick has exactly the boundary degree."""
+        # star: node 0 has degree n-1, the 19 leaves all have degree 1 —
+        # quota 4 forces sampling 3 of the tied leaves.
+        g = T.star(20)
+        sel = P.select_extreme_degree_nodes(g, 0.2, highest=True, seed=0)
+        assert len(sel) == 4
+        assert 0 in sel  # the whole top degree class (the hub) is taken
+        deg = g.degrees()
+        assert np.all(deg[[v for v in sel if v != 0]] == 1)  # boundary picks
+        # lowest side: the hub can never be picked while leaves remain
+        lo = P.select_extreme_degree_nodes(g, 0.2, highest=False, seed=0)
+        assert 0 not in lo and np.all(deg[lo] == 1)
+
+    def test_boundary_tie_break_is_uniform_over_seeds(self):
+        """Different seeds sample different boundary subsets; the
+        non-boundary prefix is deterministic."""
+        g = T.star(20)
+        picks = [
+            frozenset(P.select_extreme_degree_nodes(g, 0.2, highest=True, seed=s).tolist())
+            for s in range(12)
+        ]
+        assert all(0 in p for p in picks)  # hub always in (full class)
+        assert len(set(picks)) > 1  # boundary subset varies with seed
+        # same seed -> same subset (reproducible)
+        again = frozenset(
+            P.select_extreme_degree_nodes(g, 0.2, highest=True, seed=3).tolist()
+        )
+        assert again in picks
+
+    def test_exact_boundary_no_overshoot(self):
+        """When the boundary class fits exactly, no sampling happens and the
+        selection is the full degree prefix regardless of seed."""
+        # kreg is degree-regular: any quota is filled entirely by sampling
+        # within one class; with frac=1.0 every node must be selected.
+        g = T.k_regular(10, 4)
+        sel = P.select_extreme_degree_nodes(g, 1.0, highest=True, seed=5)
+        assert sel.tolist() == list(range(10))
+
 
 class TestFocusedPartitions:
     def test_hub_focused_allocation(self):
@@ -100,3 +141,26 @@ class TestDirichlet:
         allidx = np.concatenate([p for p in parts if len(p)])
         assert len(allidx) == len(labels)
         assert len(set(allidx.tolist())) == len(labels)
+
+    def test_per_class_share_conservation(self):
+        """Every class's examples are fully dealt across nodes — per class,
+        shares sum to the class size with no loss and no duplication."""
+        labels = _labels(per_class=47, num_classes=10)  # odd size: cut rounding
+        for beta in (0.1, 1.0, 5.0):
+            parts = P.dirichlet(labels, 6, beta=beta, seed=9)
+            summ = P.partition_summary(labels, parts)
+            np.testing.assert_array_equal(summ.sum(axis=0), 47)
+            allidx = np.concatenate([p for p in parts if len(p)])
+            assert len(allidx) == len(set(allidx.tolist()))
+
+    def test_skew_increases_as_beta_shrinks(self):
+        """Dir(beta) label skew: small beta concentrates each class on few
+        nodes, large beta approaches a uniform split."""
+        labels = _labels(per_class=200)
+
+        def max_share(beta):
+            parts = P.dirichlet(labels, 8, beta=beta, seed=0)
+            summ = P.partition_summary(labels, parts).astype(np.float64)
+            return float((summ / summ.sum(axis=0, keepdims=True)).max(axis=0).mean())
+
+        assert max_share(0.05) > max_share(10.0) + 0.2

@@ -77,6 +77,31 @@ class TestSparseEquivalence:
         for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sp)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
 
+    @pytest.mark.parametrize("p_chunk", [1, 7, 16, 64, 4096])
+    def test_chunked_segment_sum_matches_unchunked(self, p_chunk):
+        """Feature-axis chunking (bounded gather transient) is exact, incl.
+        non-divisible chunk sizes and chunk > P (single-gather fallback)."""
+        g = T.make("ba:n=40,m=3", seed=1)
+        w = M.decavg_matrix(g, np.arange(1, 41, dtype=np.float64))
+        csr = S.csr_from_dense(w)
+        params = _params(40)  # leaf P: 26 and 41 (odd, exercises padding)
+        want = S.mix_sparse(csr, params)
+        got = S.mix_sparse(csr, params, p_chunk=p_chunk)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+    def test_auto_p_chunk_bounds_buffer(self):
+        assert S.auto_p_chunk(nnz=1 << 14, budget_elems=1 << 22) == 256
+        assert S.auto_p_chunk(nnz=1 << 20) == 64  # floor keeps chunks vectorizable
+        # engine plumbing: sparse_p_chunk="auto" stays allclose to dense
+        e = D.GossipEngine("ba:n=64,m=2", backend="sparse", sparse_p_chunk="auto",
+                           seed=0)
+        params = _params(64)
+        dense = D.mix_dense(e.w, params)
+        sp = e.mix(params)
+        for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(sp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
     def test_bf16_params(self):
         g = T.make("er:n=24,p=0.3", seed=0)
         w = M.decavg_matrix(g, np.ones(24))
@@ -130,6 +155,28 @@ class TestGossipEngine:
         caps = D.GossipEngine.capabilities()
         assert set(caps) == set(D.GossipEngine.BACKENDS)
         assert "O(E" in caps["sparse"]["cost"]
+
+    def test_permute_rejects_time_varying_schedule(self):
+        """The permute backend precomputes one edge coloring; combining it
+        with a TopologySchedule must be a clear ValueError at construction
+        AND on per-call backend override — never a silent stale coloring.
+        (Recoloring per schedule period is a ROADMAP follow-up.)"""
+
+        class FakeMesh:  # capability checks only read mesh.shape
+            shape = {"data": 8}
+
+        with pytest.raises(ValueError, match="time-varying"):
+            D.GossipEngine("ring:n=8@regen=2", backend="permute", mesh=FakeMesh())
+        with pytest.raises(ValueError, match="time-varying"):
+            D.GossipEngine("er:n=8,p=0.5@rewire=3", backend="permute",
+                           mesh=FakeMesh())
+        # override path: engine built on a supported backend, permute per call
+        e = D.GossipEngine("ring:n=8@regen=2", backend="dense", mesh=FakeMesh())
+        with pytest.raises(ValueError, match="time-varying"):
+            e.mix(_params(8), backend="permute")
+        # static schedules stay permitted (construction-time check passes)
+        e2 = D.GossipEngine("ring:n=8", backend="permute", mesh=FakeMesh())
+        assert e2.backend == "permute"
 
     def test_matrix_kinds(self):
         e = D.GossipEngine("er:n=20,p=0.4", matrix="mh", seed=0)
