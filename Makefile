@@ -3,10 +3,14 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test bench-mixing bench quickstart install sweep-smoke sweep-paper
+.PHONY: verify test coverage bench-mixing bench quickstart install sweep-smoke sweep-paper
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
+
+coverage:  ## tier-1 with line coverage gated on the mixing core + kernels
+	$(PY) -m pytest -q --cov=repro.core --cov=repro.kernels \
+	    --cov-report=term-missing --cov-fail-under=85
 
 sweep-smoke:  ## 3-family smoke sweep (minutes, CPU) -> results/ + BENCH_sweep.json
 	$(PY) -m repro.experiments.sweep --preset smoke \

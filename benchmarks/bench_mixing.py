@@ -7,7 +7,13 @@ N and backend:
   - us_per_round:   median wall-clock of a jitted round (f32, D params/node)
   - w_bytes:        memory of the W representation (dense N^2 f32 vs CSR)
   - transient_bytes: the gather/output working set (nnz*D vs N*D floats)
-  - max_abs_err:    sparse vs dense output (allclose guard, not just speed)
+  - max_abs_err:    backend vs dense output (allclose guard, not just speed)
+
+Alongside the replicated paths, the node-sharded pair is timed over a 1-D
+mesh of all local devices: ``sharded_dense`` (shard_map reduce-scatter
+matmul) vs ``sparse_sharded`` (per-shard CSR row ranges + halo gathers).
+The acceptance bar is sparse_sharded no slower than sharded_dense at
+N=4096 — sparse compute per device is O(nnz/S * D) vs O(N^2/S * D).
 
 Emits BENCH_mixing.json at the repo root.
 
@@ -17,6 +23,7 @@ Run:  PYTHONPATH=src python benchmarks/bench_mixing.py [--sizes 128,1024,4096]
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import time
@@ -40,6 +47,10 @@ def _time(fn, *args, reps: int) -> float:
     return float(np.median(times) * 1e6)
 
 
+def _max_err(a, b) -> float:
+    return float(jnp.max(jnp.abs(a["p"] - b["p"])))
+
+
 def bench_one(n: int, d: int, reps: int, seed: int) -> dict:
     g = T.make(f"ba:n={n},m=2", seed=seed)
     w_np = mixing.decavg_matrix(g, np.ones(n))
@@ -50,10 +61,8 @@ def bench_one(n: int, d: int, reps: int, seed: int) -> dict:
     dense_fn = jax.jit(decavg.mix_dense)
     us_dense = _time(dense_fn, w, params, reps=reps)
     us_sparse = _time(sparse.mix_sparse, csr, params, reps=reps)
+    dense_out = dense_fn(w, params)
 
-    err = float(
-        jnp.max(jnp.abs(dense_fn(w, params)["p"] - sparse.mix_sparse(csr, params)["p"]))
-    )
     row = {
         "n": n,
         "d": d,
@@ -71,13 +80,51 @@ def bench_one(n: int, d: int, reps: int, seed: int) -> dict:
         },
         "speedup": round(us_dense / us_sparse, 2) if us_sparse else None,
         "w_compression": round(n * n * 4 / csr.nbytes, 1),
-        "max_abs_err": err,
+        "max_abs_err": _max_err(dense_out, sparse.mix_sparse(csr, params)),
     }
+
+    # Node-sharded pair over all local devices (S=1 on a plain CPU host —
+    # the shard_map machinery still runs, so relative cost is meaningful).
+    devices = np.asarray(jax.devices())
+    shards = len(devices)
+    if n % shards == 0:
+        mesh = jax.sharding.Mesh(devices, ("nodes",))
+        shd_fn = jax.jit(
+            functools.partial(decavg.mix_sharded, mesh=mesh, node_axis="nodes")
+        )
+        shcsr = sparse.shard_csr(csr, shards)
+        shsp_fn = jax.jit(
+            functools.partial(
+                decavg.mix_sharded_sparse, mesh=mesh, node_axis="nodes"
+            )
+        )
+        us_shd = _time(shd_fn, w, params, reps=reps)
+        us_shsp = _time(shsp_fn, shcsr, params, reps=reps)
+        row["shards"] = shards
+        row["sharded_dense"] = {
+            "us_per_round": round(us_shd, 1),
+            "w_bytes": n * n * 4,
+            "max_abs_err": _max_err(dense_out, shd_fn(w, params)),
+        }
+        row["sparse_sharded"] = {
+            "us_per_round": round(us_shsp, 1),
+            "w_bytes": shcsr.nbytes,
+            "halo_width": shcsr.halo_width,
+            "max_abs_err": _max_err(dense_out, shsp_fn(shcsr, params)),
+        }
+        row["sharded_speedup"] = round(us_shd / us_shsp, 2) if us_shsp else None
+
     print(
         f"N={n:5d}  dense {us_dense:10.1f} us / {n*n*4/2**20:7.2f} MiB W   "
         f"sparse {us_sparse:10.1f} us / {csr.nbytes/2**10:7.1f} KiB W   "
-        f"speedup {row['speedup']}x  err {err:.2e}"
+        f"speedup {row['speedup']}x  err {row['max_abs_err']:.2e}"
     )
+    if "sparse_sharded" in row:
+        print(
+            f"        sharded_dense {row['sharded_dense']['us_per_round']:10.1f} us"
+            f"   sparse_sharded {row['sparse_sharded']['us_per_round']:10.1f} us"
+            f"   ({row['shards']} shard(s), speedup {row['sharded_speedup']}x)"
+        )
     return row
 
 
@@ -99,6 +146,7 @@ def main() -> None:
         "dim": args.dim,
         "reps": args.reps,
         "backend": jax.default_backend(),
+        "num_devices": len(jax.devices()),
         "rows": rows,
     }
     with open(args.out, "w") as f:

@@ -19,8 +19,11 @@ Three execution paths, all numerically equivalent (tests assert allclose):
                         instead of O(P·N) — this is the form used at LLM
                         cohort scale.
 
-Plus the sparse large-N paths (core/sparse.py): CSR segment-sum and the
-Pallas ELL row-gather kernel, both O(E·P) per round instead of O(N²·P).
+Plus the sparse large-N paths (core/sparse.py): CSR segment-sum, the Pallas
+blocked-ELL kernel, and ``mix_sharded_sparse`` — the CSR round with the node
+axis sharded over a mesh axis (per-shard row ranges, compact halo gathers
+for cross-shard neighbors). All O(E·P) per round instead of O(N²·P); the
+sharded variant additionally splits the work S ways.
 
 ``GossipEngine`` is the one front door over all of them: it owns the
 topology (static graph or TopologySchedule), builds + caches the mixing
@@ -47,11 +50,29 @@ __all__ = [
     "mix_dense",
     "mix_pallas",
     "mix_sharded",
+    "mix_sharded_sparse",
     "mix_permute",
     "gossip_error",
 ]
 
 PyTree = Any
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """jax.shard_map across jax versions (experimental home before 0.5).
+
+    ``axis_names`` (the manual axes) maps to the experimental API's ``auto``
+    complement when running on older jax.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map  # jax < 0.5
+
+    kw = {}
+    if axis_names is not None and set(axis_names) != set(mesh.axis_names):
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 def _mix_leaf(w: jax.Array, leaf: jax.Array) -> jax.Array:
@@ -145,12 +166,99 @@ def mix_sharded(
 
     def mix_one(leaf: jax.Array) -> jax.Array:
         spec = P(axes, *([None] * (leaf.ndim - 1)))
-        return jax.shard_map(
+        return _shard_map(
             functools.partial(body),
             mesh=mesh,
             in_specs=(P(), spec),
             out_specs=spec,
         )(w, leaf)
+
+    return jax.tree.map(mix_one, params)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "node_axis", "p_chunk"))
+def mix_sharded_sparse(
+    shcsr,
+    params: PyTree,
+    *,
+    mesh: jax.sharding.Mesh,
+    node_axis: str | tuple[str, ...] = "data",
+    p_chunk: int | None = None,
+) -> PyTree:
+    """Sparse DecAvg round with the node axis sharded over ``node_axis``.
+
+    ``shcsr`` is a ``core.sparse.ShardedCSR``: each shard owns a contiguous
+    row range of W and stores its entries with halo-local column ids. The
+    round per device is
+
+      1. all_gather the node axis of P (the only collective),
+      2. slice out the shard's *halo* — the compact set of source rows its
+         W entries actually reference — into an (H, p) buffer,
+      3. gather + segment-sum over the shard's nnz entries, O(nnz_s * p).
+
+    Compute and W memory are sparse (O(nnz/S * P) work per device, O(E)
+    total W bytes vs the dense sharded path's O(N^2/S * P) matmul and
+    O(N^2) W); wire volume matches the dense allgather schedule. A ring
+    halo exchange that also bounds wire volume to O(H * P) is the natural
+    follow-up once cohorts outgrow a single all_gather.
+
+    ``p_chunk`` bounds the per-device gather transient to O(nnz_s * p_chunk)
+    (serialized feature-axis chunks, as in ``sparse.mix_sparse``) — use for
+    very large per-leaf P at large N.
+    """
+    axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
+    if shcsr.shards != shards:
+        raise ValueError(
+            f"ShardedCSR built for {shcsr.shards} shards but mesh axis "
+            f"{axes} has {shards}"
+        )
+    n = shcsr.shape[0]
+    blk = shcsr.rows_per_shard
+
+    def body(halo, rows, cols, values, leaf):
+        # leaf: (n/shards, ...) local block of the node axis; the stacked
+        # per-shard layout arrays arrive replicated and are indexed by the
+        # device's shard position.
+        idx = jax.lax.axis_index(axes)
+        flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)  # (blk, p)
+        full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)  # (n, p)
+        need = jax.lax.dynamic_index_in_dim(halo, idx, 0, keepdims=False)
+        buf = full[need]  # (H, p): the halo — only rows this shard references
+        r = jax.lax.dynamic_index_in_dim(rows, idx, 0, keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(cols, idx, 0, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(values, idx, 0, keepdims=False)
+
+        def seg(hbuf: jax.Array) -> jax.Array:
+            gathered = hbuf[c] * v[:, None]  # (E, pc)
+            return jax.ops.segment_sum(
+                gathered, r, num_segments=blk, indices_are_sorted=True
+            )
+
+        p = flat.shape[1]
+        if p_chunk is not None and p_chunk < p:
+            pad = (-p) % p_chunk
+            if pad:
+                buf = jnp.pad(buf, ((0, 0), (0, pad)))
+            chunks = buf.reshape(buf.shape[0], -1, p_chunk).transpose(1, 0, 2)
+            out = jax.lax.map(seg, chunks)  # serialized: bounds the transient
+            out = out.transpose(1, 0, 2).reshape(blk, -1)[:, :p]
+        else:
+            out = seg(buf)
+        return out.reshape(leaf.shape).astype(leaf.dtype)
+
+    def mix_one(leaf: jax.Array) -> jax.Array:
+        if leaf.shape[0] != n:
+            raise ValueError(f"leaf leading axis {leaf.shape[0]} != num_nodes {n}")
+        spec = P(axes, *([None] * (leaf.ndim - 1)))
+        return _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P(), spec),
+            out_specs=spec,
+        )(shcsr.halo, shcsr.rows, shcsr.cols, shcsr.values, leaf)
 
     return jax.tree.map(mix_one, params)
 
@@ -201,7 +309,7 @@ def mix_permute(
 
     def mix_one(leaf: jax.Array) -> jax.Array:
         spec = P(node_axis, *([None] * (leaf.ndim - 1)))
-        return jax.shard_map(
+        return _shard_map(
             body,
             mesh=mesh,
             in_specs=spec,
@@ -224,9 +332,14 @@ _BACKEND_INFO = {
     "dense": ("any backend; W materialized (N,N)", "O(N^2 * P)"),
     "pallas": ("TPU (interpret elsewhere); W materialized (N,N)", "O(N^2 * P), zero W tiles skipped"),
     "sparse": ("any backend; W stored CSR, O(E) memory", "O(E * P)"),
-    "sparse_pallas": ("TPU (interpret elsewhere); W stored ELL", "O(E * P)"),
+    "sparse_pallas": ("TPU (interpret elsewhere); W stored blocked ELL", "O(E * P)"),
     "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device"),
-    "permute": ("mesh with node axis; N == |axis|", "O(degree * P) wire per device"),
+    "sparse_sharded": (
+        "mesh with node axis (default: all local devices); N divisible by "
+        "shards; W stored per-shard CSR with halo columns",
+        "O(E * P / S) work per device",
+    ),
+    "permute": ("mesh with node axis; N == |axis|; recolors per schedule period", "O(degree * P) wire per device"),
 }
 
 
@@ -247,7 +360,9 @@ class GossipEngine:
       matrix: "decavg" (paper Eq. 1), "uniform" (closed-neighborhood mean)
         or "mh" (Metropolis–Hastings, doubly stochastic).
       backend: one of ``GossipEngine.BACKENDS`` or "auto" (sparse at
-        N >= sparse_threshold, else dense; sharded when a mesh is given).
+        N >= sparse_threshold, else dense; with a mesh, sparse_sharded at
+        N >= sparse_threshold, else sharded). "sparse_sharded" without a
+        mesh builds a 1-D mesh over all local devices.
       gossip_every: mix on rounds with ``round % gossip_every == 0``; other
         rounds are identity and skip all work.
       mesh/node_axis/sharded_schedule: for the shard_map backends.
@@ -259,7 +374,10 @@ class GossipEngine:
         ``topology`` is a spec string.
     """
 
-    BACKENDS = ("dense", "pallas", "sparse", "sparse_pallas", "sharded", "permute")
+    BACKENDS = (
+        "dense", "pallas", "sparse", "sparse_pallas", "sharded",
+        "sparse_sharded", "permute",
+    )
 
     def __init__(
         self,
@@ -307,13 +425,20 @@ class GossipEngine:
         self.sparse_p_chunk = sparse_p_chunk
         self.validate = validate
         self.backend = self._resolve_backend(backend)
+        if self.backend == "sparse_sharded" and self.mesh is None:
+            self.mesh = self._default_node_mesh()
         self.check(self.backend)
         self._period: int | None = None
         self._graph = None
         self._w = None
         self._csr = None
         self._ell = None
+        self._bell = None
+        self._shcsr = None
         self._colors = None
+        # Edge colorings are deterministic per schedule period; cache them so
+        # revisiting a period (or mixing repeatedly within one) never recolors.
+        self._colors_cache: dict[int, list] = {}
         self.refresh(0)
 
     # -- capability checking -------------------------------------------------
@@ -334,30 +459,36 @@ class GossipEngine:
                 )
             return backend
         if self.mesh is not None:
-            return "sharded"
+            return (
+                "sparse_sharded"
+                if self.num_nodes >= self.sparse_threshold
+                else "sharded"
+            )
         return "sparse" if self.num_nodes >= self.sparse_threshold else "dense"
 
-    def check(self, backend: str) -> None:
-        """Raise with an actionable message if ``backend`` can't run here."""
-        if backend in ("sharded", "permute") and self.mesh is None:
+    def _default_node_mesh(self) -> jax.sharding.Mesh:
+        """1-D mesh over every local device — the sparse_sharded default, so
+        large-N sparse cohorts run node-sharded without call-site mesh wiring."""
+        return jax.sharding.Mesh(np.asarray(jax.devices()), (self.node_axis,))
+
+    def check(self, backend: str, mesh: jax.sharding.Mesh | None = None) -> None:
+        """Raise with an actionable message if ``backend`` can't run here.
+        ``mesh`` overrides ``self.mesh`` for the check (per-call overrides)."""
+        mesh = self.mesh if mesh is None else mesh
+        if backend in ("sharded", "sparse_sharded", "permute") and mesh is None:
             raise ValueError(f"backend {backend!r} needs a mesh (mesh=...)")
         if backend == "permute":
-            k = self.mesh.shape[self.node_axis]
+            k = mesh.shape[self.node_axis]
             if self.num_nodes != k:
                 raise ValueError(
                     f"backend 'permute' needs num_nodes == |{self.node_axis}| "
                     f"({k}), got {self.num_nodes}"
                 )
-            if self.schedule.is_time_varying:
-                raise ValueError(
-                    "backend 'permute' precomputes an edge coloring; "
-                    "time-varying topologies are not supported yet"
-                )
-        if backend == "sharded":
-            shards = self.mesh.shape[self.node_axis]
+        if backend in ("sharded", "sparse_sharded"):
+            shards = mesh.shape[self.node_axis]
             if self.num_nodes % shards:
                 raise ValueError(
-                    f"backend 'sharded': num_nodes {self.num_nodes} not divisible "
+                    f"backend {backend!r}: num_nodes {self.num_nodes} not divisible "
                     f"by node shards {shards}"
                 )
 
@@ -385,13 +516,30 @@ class GossipEngine:
         self._w = jnp.asarray(w, jnp.float32)
         self._csr = (
             sparse.csr_from_dense(w)
-            if self.backend in ("sparse", "sparse_pallas")
+            if self.backend in ("sparse", "sparse_pallas", "sparse_sharded")
             else None
         )
-        self._ell = None  # ELL view of _csr, built lazily, period-constant
-        if self.backend == "permute":
-            self._colors = mixing.edge_coloring(g)
+        # Period-constant derived layouts, built lazily on first use.
+        self._ell = None  # scalar ELL view of _csr
+        self._bell = None  # blocked ELL view of _csr
+        self._shcsr = None  # sharded-CSR view of _csr
+        self._colors = (
+            self._coloring_for(period, g) if self.backend == "permute" else None
+        )
         return True
+
+    def _coloring_for(self, period: int, graph) -> list:
+        """Edge coloring for ``period``, cached — recoloring per schedule
+        period is what lets ``permute`` track time-varying topologies."""
+        colors = self._colors_cache.get(period)
+        if colors is None:
+            from repro.core import mixing
+
+            colors = mixing.edge_coloring(graph)
+            if len(self._colors_cache) >= 64:  # bound memory on long regen runs
+                self._colors_cache.pop(next(iter(self._colors_cache)))
+            self._colors_cache[period] = colors
+        return colors
 
     @property
     def graph(self):
@@ -449,8 +597,13 @@ class GossipEngine:
                 return params
             self.refresh(round)
         backend = backend or spec or self.backend
+        mesh = self.mesh
         if backend != self.backend:
-            self.check(backend)
+            if backend == "sparse_sharded" and mesh is None:
+                # Local to this call: an override must not mutate the engine's
+                # capability surface for later calls with other backends.
+                mesh = self._default_node_mesh()
+            self.check(backend, mesh)
         if backend == "dense":
             return mix_dense(self._w, params)
         if backend == "pallas":
@@ -464,24 +617,47 @@ class GossipEngine:
             return sparse.mix_sparse(self.csr, params, p_chunk=p_chunk)
         if backend == "sparse_pallas":
             from repro.core import sparse
+            from repro.kernels import ops
 
-            if self._ell is None:  # period-constant; avoids per-call rebuild
-                self._ell = sparse.ell_from_csr(self.csr)
+            interp = (not ops.on_tpu()) if self.interpret is None else self.interpret
+            if interp:  # scalar row-gather fallback kernel under interpret
+                if self._ell is None:  # period-constant; avoids per-call rebuild
+                    self._ell = sparse.ell_from_csr(self.csr)
+                return sparse.mix_sparse_pallas(
+                    self.csr, params, ell=self._ell, interpret=True, blocked=False
+                )
+            if self._bell is None:
+                self._bell = sparse.block_ell_from_csr(self.csr)
             return sparse.mix_sparse_pallas(
-                self.csr, params, ell=self._ell, interpret=self.interpret
+                self.csr, params, bell=self._bell, interpret=False, blocked=True
             )
         if backend == "sharded":
             return mix_sharded(
-                self._w, params, mesh=self.mesh, node_axis=self.node_axis,
+                self._w, params, mesh=mesh, node_axis=self.node_axis,
                 schedule=self.sharded_schedule,
+            )
+        if backend == "sparse_sharded":
+            from repro.core import sparse
+
+            shards = mesh.shape[self.node_axis]
+            if self._shcsr is None or self._shcsr.shards != shards:
+                # Period-constant (and override-safe): rebuilt only on a new
+                # period or a different shard count.
+                self._shcsr = sparse.shard_csr(self.csr, shards)
+            p_chunk = self.sparse_p_chunk
+            if p_chunk == "auto":
+                # Size from the per-shard entry count: the gather transient
+                # is O(nnz_s * chunk) per device, not O(nnz * chunk).
+                p_chunk = sparse.auto_p_chunk(int(self._shcsr.values.shape[1]))
+            return mix_sharded_sparse(
+                self._shcsr, params, mesh=mesh, node_axis=self.node_axis,
+                p_chunk=p_chunk,
             )
         if backend == "permute":
             if self._colors is None:
-                from repro.core import mixing
-
-                self._colors = mixing.edge_coloring(self._graph)
+                self._colors = self._coloring_for(self._period, self._graph)
             return mix_permute(
-                self._w, params, self._colors, mesh=self.mesh,
+                self._w, params, self._colors, mesh=mesh,
                 node_axis=self.node_axis,
             )
         raise ValueError(f"unknown backend {backend!r}")

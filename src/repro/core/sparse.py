@@ -34,9 +34,13 @@ import numpy as np
 
 __all__ = [
     "CSR",
+    "ShardedCSR",
+    "BlockELL",
     "csr_from_dense",
     "csr_to_dense",
     "ell_from_csr",
+    "block_ell_from_csr",
+    "shard_csr",
     "mix_sparse",
     "mix_sparse_pallas",
     "auto_p_chunk",
@@ -130,6 +134,185 @@ def ell_from_csr(csr: CSR) -> tuple[np.ndarray, np.ndarray]:
     return idx, val
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("halo", "rows", "cols", "values"),
+    meta_fields=("shape", "shards", "rows_per_shard"),
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedCSR:
+    """CSR with the node (row) axis split into ``shards`` contiguous ranges.
+
+    Shard ``s`` owns destination rows ``[s*rows_per_shard, (s+1)*rows_per_shard)``
+    and stores its W entries with *halo-local* column ids: ``halo[s]`` lists
+    the global source nodes shard ``s`` needs (its own rows plus cross-shard
+    neighbors), and ``cols`` indexes into that halo list. One sharded DecAvg
+    round (decavg.mix_sharded_sparse) then gathers the halo rows of P once
+    and runs an O(nnz_s * P) segment-sum per shard.
+
+    All per-shard arrays are stacked on a leading shard axis and zero-padded
+    to the max shard size so the same SPMD program runs on every device:
+    padded entries carry weight 0 and point at halo slot 0 / the shard's last
+    local row, so they contribute nothing while keeping segment ids sorted.
+
+    Attributes:
+      halo:   (S, H) int32 — global source node ids needed by shard s
+              (sorted ascending per shard; padded by repeating id 0).
+      rows:   (S, E) int32 — destination row LOCAL to the shard, sorted
+              ascending (padded with rows_per_shard - 1).
+      cols:   (S, E) int32 — index into ``halo[s]`` (padded with 0).
+      values: (S, E) float32 — W entries (padded with 0).
+      shape:  (N, N) static; shards, rows_per_shard: static ints.
+    """
+
+    halo: jax.Array
+    rows: jax.Array
+    cols: jax.Array
+    values: jax.Array
+    shape: tuple[int, int]
+    shards: int
+    rows_per_shard: int
+
+    @property
+    def halo_width(self) -> int:
+        """Max rows of P any shard gathers (the halo buffer height)."""
+        return int(self.halo.shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            int(np.prod(a.shape)) * a.dtype.itemsize
+            for a in (self.halo, self.rows, self.cols, self.values)
+        )
+
+
+def shard_csr(csr: CSR, shards: int) -> ShardedCSR:
+    """Split a CSR mixing matrix into per-shard row ranges with halo columns.
+
+    Requires N divisible by ``shards`` (same contract as the dense sharded
+    backend). Pure host-side preprocessing, done once per schedule period.
+    """
+    n = csr.shape[0]
+    if shards < 1 or n % shards:
+        raise ValueError(f"num_nodes {n} not divisible by shards {shards}")
+    blk = n // shards
+    ptr = np.asarray(csr.indptr)
+    cols = np.asarray(csr.indices)
+    vals = np.asarray(csr.values)
+    coo_rows = np.asarray(csr.rows)
+
+    halos: list[np.ndarray] = []
+    loc_rows: list[np.ndarray] = []
+    loc_cols: list[np.ndarray] = []
+    loc_vals: list[np.ndarray] = []
+    for s in range(shards):
+        lo, hi = int(ptr[s * blk]), int(ptr[(s + 1) * blk])
+        c = cols[lo:hi]
+        need = np.unique(c)  # sorted global sources for this shard (the halo)
+        if need.size == 0:
+            need = np.zeros(1, dtype=np.int32)
+        halos.append(need.astype(np.int32))
+        loc_rows.append((coo_rows[lo:hi] - s * blk).astype(np.int32))
+        loc_cols.append(np.searchsorted(need, c).astype(np.int32))
+        loc_vals.append(vals[lo:hi].astype(np.float32))
+
+    h_max = max(h.size for h in halos)
+    e_max = max(max(r.size for r in loc_rows), 1)
+    halo = np.zeros((shards, h_max), dtype=np.int32)
+    rows = np.full((shards, e_max), blk - 1, dtype=np.int32)
+    lcols = np.zeros((shards, e_max), dtype=np.int32)
+    lvals = np.zeros((shards, e_max), dtype=np.float32)
+    for s in range(shards):
+        halo[s, : halos[s].size] = halos[s]
+        k = loc_rows[s].size
+        rows[s, :k] = loc_rows[s]
+        lcols[s, :k] = loc_cols[s]
+        lvals[s, :k] = loc_vals[s]
+    return ShardedCSR(
+        halo=jnp.asarray(halo),
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(lcols),
+        values=jnp.asarray(lvals),
+        shape=csr.shape,
+        shards=shards,
+        rows_per_shard=blk,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockELL:
+    """8-row-blocked ELL layout for the TPU sparse gossip kernel.
+
+    Rows are grouped into blocks of ``block`` (the f32 sublane count); for
+    each destination block the distinct *source blocks* touched by any of its
+    rows are enumerated, and the weights coupling the two blocks are stored
+    as a dense (block, block) tile. One kernel grid step is then a single
+    aligned DMA of the source block's P rows plus a (block, block) @
+    (block, bd) mini-matmul — real sublane packing instead of the scalar
+    kernel's (1, bd) row-at-a-time gathers.
+
+    Attributes:
+      idx: (NB, KB) int32 — source block ids per destination block, padded
+           with 0 (their weight tiles are all-zero).
+      val: (NB*block, KB*block) f32 — ``val[r, t*block + o]`` is the weight
+           of global row r against row ``idx[r//block, t]*block + o``. KB is
+           padded so the trailing dim is a multiple of ``block * lane_pad``
+           (TPU lane alignment of the (block, block) tile stream).
+      n:   unpadded row count; block: rows per block.
+    """
+
+    idx: np.ndarray
+    val: np.ndarray
+    n: int
+    block: int = 8
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def max_blocks_per_row(self) -> int:
+        return int(self.idx.shape[1])
+
+
+def block_ell_from_csr(csr: CSR, *, block: int = 8, lane_pad: int = 16) -> BlockELL:
+    """Build the 8-row-blocked ELL layout (see BlockELL) from a CSR matrix.
+
+    ``lane_pad`` rounds the per-block source count up so the stacked weight
+    tiles' trailing dim (KB * block) is a multiple of block * lane_pad = 128
+    lanes for the default block=8.
+    """
+    n = csr.shape[0]
+    nb = -(-n // block)
+    ptr = np.asarray(csr.indptr)
+    cols = np.asarray(csr.indices)
+    vals = np.asarray(csr.values)
+
+    slots: list[dict[int, int]] = []
+    entries: list[list[tuple[int, int, float]]] = []  # (row, val-col, value)
+    for b in range(nb):
+        slot: dict[int, int] = {}
+        ent: list[tuple[int, int, float]] = []
+        for r in range(b * block, min((b + 1) * block, n)):
+            for e in range(int(ptr[r]), int(ptr[r + 1])):
+                sb, off = divmod(int(cols[e]), block)
+                t = slot.setdefault(sb, len(slot))
+                ent.append((r, t * block + off, float(vals[e])))
+        slots.append(slot)
+        entries.append(ent)
+
+    kb = max(max((len(s) for s in slots), default=0), 1)
+    kb = -(-kb // lane_pad) * lane_pad
+    idx = np.zeros((nb, kb), dtype=np.int32)
+    val = np.zeros((nb * block, kb * block), dtype=np.float32)
+    for b, (slot, ent) in enumerate(zip(slots, entries)):
+        for sb, t in slot.items():
+            idx[b, t] = sb
+        for r, c, v in ent:
+            val[r, c] = v
+    return BlockELL(idx=idx, val=val, n=n, block=block)
+
+
 def _gather_segment_sum(csr: CSR, flat: jax.Array) -> jax.Array:
     gathered = flat[csr.indices] * csr.values[:, None]  # (nnz, p)
     return jax.ops.segment_sum(
@@ -181,23 +364,47 @@ def mix_sparse_pallas(
     params: PyTree,
     *,
     ell: tuple[np.ndarray, np.ndarray] | None = None,
+    bell: BlockELL | None = None,
     interpret: bool | None = None,
+    blocked: bool | None = None,
 ) -> PyTree:
-    """Sparse DecAvg round via the Pallas ELL row-gather kernel.
+    """Sparse DecAvg round via the Pallas ELL kernels.
 
-    ``ell`` lets callers that mix repeatedly with the same W (GossipEngine)
-    pass a precomputed ``ell_from_csr`` result instead of paying the O(N*K)
-    host-side padding loop per call.
+    Two kernels (kernels/sparse_gossip.py), selected by ``blocked``:
+
+    - blocked (default on real TPU): 8-row-blocked ELL — sublane-packed
+      (8, bd) source-block DMAs + (8, 8) weight-tile mini-matmuls.
+    - scalar (default under interpret, i.e. off-TPU): the per-row (1, bd)
+      gather kernel; far fewer grid steps through the slow interpreter.
+
+    ``ell`` / ``bell`` let callers that mix repeatedly with the same W
+    (GossipEngine) pass a precomputed layout instead of paying the host-side
+    padding loop per call.
     """
     from repro.kernels import ops  # local import: kernels are optional at import time
 
-    idx, val = ell_from_csr(csr) if ell is None else ell
-    idx_j, val_j = jnp.asarray(idx), jnp.asarray(val)
+    if interpret is None:
+        interpret = not ops.on_tpu()
+    if blocked is None:
+        blocked = not interpret  # scalar fallback kernel under interpret
 
-    def mix(leaf: jax.Array) -> jax.Array:
-        n = csr.shape[0]
-        flat = leaf.reshape(n, -1)
-        out = ops.gossip_mix_sparse(idx_j, val_j, flat, interpret=interpret)
-        return out.reshape(leaf.shape).astype(leaf.dtype)
+    n = csr.shape[0]
+    if blocked:
+        b = block_ell_from_csr(csr) if bell is None else bell
+        idx_j, val_j = jnp.asarray(b.idx), jnp.asarray(b.val)
+
+        def mix(leaf: jax.Array) -> jax.Array:
+            flat = leaf.reshape(n, -1)
+            out = ops.gossip_mix_sparse_blocked(idx_j, val_j, flat, interpret=interpret)
+            return out.reshape(leaf.shape).astype(leaf.dtype)
+
+    else:
+        idx, val = ell_from_csr(csr) if ell is None else ell
+        idx_j, val_j = jnp.asarray(idx), jnp.asarray(val)
+
+        def mix(leaf: jax.Array) -> jax.Array:
+            flat = leaf.reshape(n, -1)
+            out = ops.gossip_mix_sparse(idx_j, val_j, flat, interpret=interpret)
+            return out.reshape(leaf.shape).astype(leaf.dtype)
 
     return jax.tree.map(mix, params)

@@ -5,10 +5,11 @@
 - ``paper``: the reproduction matrix (N=100; ER / BA / SBM x iid / hub /
   edge / community x 3 seeds) — the source of the Figure 3 / Table 1
   walkthrough in the README.
-- ``large_n``: the ROADMAP scaling item — ws / torus / caveman / ba at
-  N=1024-4096 on the sparse backend with chunked segment-sum, hub/edge
-  splits. Few rounds: this preset measures spread + wall-clock at scale,
-  not final accuracy.
+- ``large_n``: the ROADMAP scaling item — ws / torus / caveman at N=1024
+  on the sparse backend with chunked segment-sum, plus BA at N=4096 on the
+  ``sparse_sharded`` backend (per-shard CSR row ranges + halo gathers over
+  a mesh of all local devices — the node-sharded sparse path). Few rounds:
+  this preset measures spread + wall-clock at scale, not final accuracy.
 """
 
 from __future__ import annotations
@@ -97,8 +98,12 @@ def _large_n() -> list[ExperimentSpec]:
         partitioner=["hub_focused", "edge_focused"],
         seed=[0],
     )
+    # N=4096 rides the sparse_sharded backend: the engine builds a 1-D mesh
+    # over all local devices and shards the CSR's node axis across it
+    # (O(E*P/S) work per device; single-device runs degrade gracefully).
     specs += expand_grid(
-        {**base, "data": {"train_per_class": 5000, "test_per_class": 100}},
+        {**base, "backend": "sparse_sharded",
+         "data": {"train_per_class": 5000, "test_per_class": 100}},
         topology=["ba:n=4096,m=2"],
         partitioner=["hub_focused"],
         seed=[0],

@@ -15,9 +15,20 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gossip_mix import DEFAULT_BLOCKS, gossip_mix_pallas
-from repro.kernels.sparse_gossip import DEFAULT_BD, sparse_gossip_pallas
+from repro.kernels.sparse_gossip import (
+    BLOCK_ROWS,
+    DEFAULT_BD,
+    sparse_gossip_blocked_pallas,
+    sparse_gossip_pallas,
+)
 
-__all__ = ["gossip_mix", "gossip_mix_sparse", "flash_attention", "on_tpu"]
+__all__ = [
+    "gossip_mix",
+    "gossip_mix_sparse",
+    "gossip_mix_sparse_blocked",
+    "flash_attention",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -93,6 +104,33 @@ def gossip_mix_sparse(
     pp = _pad_to(p, (n, bd))
     out = sparse_gossip_pallas(idx, val, pp, bd=bd, interpret=interpret)
     return out[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def gossip_mix_sparse_blocked(
+    blk_idx: jax.Array,
+    blk_val: jax.Array,
+    p: jax.Array,
+    *,
+    bd: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sparse DecAvg mixing ``W @ P`` via the 8-row-blocked ELL kernel.
+
+    blk_idx/blk_val: blocked-ELL source-block ids + stacked (8, 8) weight
+    tiles (core/sparse.block_ell_from_csr); p: (N, D) node-stacked flat
+    params. Pads N to the block multiple and D to a bd multiple with zeros
+    (padded rows carry weight 0 and are sliced away).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    bd = bd or DEFAULT_BD
+    n, d = p.shape
+    bd = min(bd, max(128, d))
+    nb = blk_idx.shape[0]
+    pp = _pad_to(p, (nb * BLOCK_ROWS, bd))
+    out = sparse_gossip_blocked_pallas(blk_idx, blk_val, pp, bd=bd, interpret=interpret)
+    return out[:n, :d]
 
 
 def flash_attention(

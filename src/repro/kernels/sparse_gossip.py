@@ -1,25 +1,36 @@
-"""Pallas TPU kernel for sparse (ELL) DecAvg gossip ``C = W @ P``.
-
-W arrives ELL-padded: ``idx (N, K) int32`` column indices and ``val (N, K)
-f32`` weights, K = max row nnz (padding entries carry weight 0). P is the
-(N, D) node-stacked flattened parameter matrix.
+"""Pallas TPU kernels for sparse (ELL) DecAvg gossip ``C = W @ P``.
 
 Unlike the dense kernel (gossip_mix.py) — which streams (bm, bk) W tiles
-through the MXU and merely *skips* zero blocks — this kernel never
-materializes W at all. The grid is (N, D/bd, K); at step (i, j, k) the
-scalar-prefetched index map DMAs exactly the neighbor row ``idx[i, k]``'s
-(1, bd) slice of P into VMEM and the VPU accumulates ``val[i, k] * P[idx[i,
-k], j]`` into an f32 scratch row, flushed at k == K-1. Per-round work and
-wire volume are O(E * D) — the row-gather analogue of the segment-sum path
-in core/sparse.py, which it matches allclose (tests/test_sparse.py).
+through the MXU and merely *skips* zero blocks — these kernels never
+materialize W at all. Per-round work and wire volume are O(E * D), the
+row-gather analogue of the segment-sum path in core/sparse.py, which both
+kernels match allclose (tests/test_sparse.py, tests/test_backend_equivalence.py).
+
+Two layouts, two kernels:
+
+1. **8-row-blocked ELL** (``sparse_gossip_blocked_pallas``) — the real TPU
+   path. Rows are grouped into blocks of 8 (the f32 sublane count); the
+   layout (core/sparse.block_ell_from_csr) enumerates, per destination
+   block, the distinct *source blocks* its rows touch and stores the
+   coupling weights as dense (8, 8) tiles stacked to a lane-aligned
+   (N, 8*KB) array. The grid is (NB, D/bd, KB); at step (b, j, k) the
+   scalar-prefetched index map DMAs the full 8-row slab of source block
+   ``blk_idx[b, k]`` — one aligned (8, bd) transfer instead of eight
+   (1, bd) row gathers — and the VPU/MXU accumulates the (8, 8) @ (8, bd)
+   mini-matmul into an f32 scratch block, flushed at k == KB-1. Every DMA
+   and every tile is sublane-packed: (8, bd) P slabs and 8-row weight
+   strips, nothing narrower than the hardware's native f32 tile height.
+
+2. **Scalar ELL row-gather** (``sparse_gossip_pallas``) — the original
+   per-row kernel, kept as the *interpret-mode fallback*: its grid is
+   O(N * K) single-row steps, which on TPU underutilizes the sublanes but
+   through the Pallas interpreter (CPU CI) is far cheaper than the blocked
+   kernel's denser tile stream. ``kernels/ops.py`` selects the kernel:
+   blocked on real TPU, scalar under interpret, override via ``blocked=``.
 
 Scalar prefetch (pltpu.PrefetchScalarGridSpec) is the canonical Pallas
-pattern for data-dependent tile addressing: ``idx`` lands in SMEM before the
-body runs, so each P block fetch is a regular pipelined DMA. Rows are
-processed one at a time ((1, bd) blocks) because neighbor sets differ per
-row; at paper scale (N<=4096, K<=~64 for BA/ER) the grid stays small. An
-8-row blocked variant with per-row gather DMAs is the obvious TPU follow-up
-once sublane-packing matters.
+pattern for data-dependent tile addressing: the index array lands in SMEM
+before the body runs, so each P block fetch is a regular pipelined DMA.
 """
 
 from __future__ import annotations
@@ -31,9 +42,101 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sparse_gossip_kernel", "sparse_gossip_pallas", "DEFAULT_BD"]
+__all__ = [
+    "sparse_gossip_kernel",
+    "sparse_gossip_pallas",
+    "sparse_gossip_blocked_kernel",
+    "sparse_gossip_blocked_pallas",
+    "DEFAULT_BD",
+    "BLOCK_ROWS",
+]
 
 DEFAULT_BD = 512
+BLOCK_ROWS = 8  # f32 sublane count: the row granularity of the blocked kernel
+
+
+# ---------------------------------------------------------------------------
+# 8-row-blocked ELL kernel (TPU sublane packing)
+# ---------------------------------------------------------------------------
+
+
+def sparse_gossip_blocked_kernel(idx_ref, val_ref, p_ref, out_ref, acc_ref, *, nkb: int):
+    """One (b, j, k) grid step: acc += W_tile(8, 8) @ P_block(8, bd).
+
+    Refs:
+      idx_ref: (NB, KB) int32 scalar-prefetch (SMEM) — consumed by the index
+               maps; unused in the body but part of the kernel signature.
+      val_ref: (8, 8) f32 VMEM — the weight tile coupling destination block b
+               to source block idx_ref[b, k].
+      p_ref:   (8, bd) VMEM — the gathered source block's D-slab.
+      out_ref: (8, bd) output block, written once per (b, j).
+      acc_ref: (8, bd) f32 VMEM scratch accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        val_ref[...],
+        p_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nkb - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def sparse_gossip_blocked_pallas(
+    blk_idx: jax.Array,
+    blk_val: jax.Array,
+    p: jax.Array,
+    *,
+    bd: int = DEFAULT_BD,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked-ELL ``W @ P`` with f32 accumulation.
+
+    blk_idx: (NB, KB) int32 source-block ids; blk_val: (NB*8, KB*8) f32
+    stacked weight tiles (core/sparse.block_ell_from_csr). P must be
+    pre-padded to NB*8 rows and a D multiple of ``bd`` (the ops.py wrapper
+    handles padding/unpadding); padded rows/tiles carry weight 0.
+    """
+    nb, kb = blk_idx.shape
+    n, d = p.shape
+    if n != nb * BLOCK_ROWS:
+        raise ValueError(f"P rows {n} != {nb} blocks x {BLOCK_ROWS}")
+    if blk_val.shape != (nb * BLOCK_ROWS, kb * BLOCK_ROWS):
+        raise ValueError(
+            f"blk_val {blk_val.shape} != ({nb * BLOCK_ROWS}, {kb * BLOCK_ROWS})"
+        )
+    if d % bd:
+        raise ValueError(f"D={d} must be padded to a multiple of bd={bd}")
+    grid = (nb, d // bd, kb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_ROWS), lambda b, j, k, idx_ref: (b, k)),
+            pl.BlockSpec((BLOCK_ROWS, bd), lambda b, j, k, idx_ref: (idx_ref[b, k], j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, bd), lambda b, j, k, idx_ref: (b, j)),
+        scratch_shapes=[pltpu.VMEM((BLOCK_ROWS, bd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(sparse_gossip_blocked_kernel, nkb=kb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), p.dtype),
+        interpret=interpret,
+    )(blk_idx, blk_val.astype(jnp.float32), p)
+
+
+# ---------------------------------------------------------------------------
+# Scalar ELL row-gather kernel (interpret-mode fallback)
+# ---------------------------------------------------------------------------
 
 
 def sparse_gossip_kernel(idx_ref, val_ref, p_ref, out_ref, acc_ref, *, nk: int):

@@ -11,6 +11,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import requires_axis_type
+
 from repro.core import decavg as D
 from repro.core import mixing as M
 from repro.core import topology as T
@@ -35,6 +37,7 @@ class TestEquivalence:
         for dl, pl_ in zip(jax.tree.leaves(dense), jax.tree.leaves(pallas)):
             np.testing.assert_allclose(np.asarray(dl), np.asarray(pl_), rtol=3e-5, atol=3e-5)
 
+    @requires_axis_type
     def test_dense_vs_shardmap_subprocess(self):
         """shard_map schedules need >1 device: run with 8 fake CPU devices."""
         code = textwrap.dedent(

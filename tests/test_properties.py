@@ -1,0 +1,142 @@
+"""Property tests for core/sparse.py layouts and core/mixing.py matrices.
+
+Runs under hypothesis when installed; the conftest stub makes each
+``@given`` test an explicit skip otherwise (the registry-sweep checks at the
+bottom are plain pytest and always run).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import mixing as M  # noqa: E402
+from repro.core import sparse as S  # noqa: E402
+from repro.core import topology as T  # noqa: E402
+
+
+def _random_w(n: int, p: float, seed: int) -> tuple[np.ndarray, T.Graph]:
+    g = T.erdos_renyi(n, p, seed=seed)
+    sizes = np.random.default_rng(seed).uniform(0.5, 5.0, size=n)
+    return M.decavg_matrix(g, sizes), g
+
+
+# ---------------------------------------------------------------------------
+# core/sparse.py layout invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_csr_dense_round_trip(n, p, seed):
+    w, _ = _random_w(n, p, seed)
+    csr = S.csr_from_dense(w)
+    np.testing.assert_allclose(S.csr_to_dense(csr), w.astype(np.float32))
+    # structural invariants: sorted rows, indptr consistent with nnz
+    rows = np.asarray(csr.rows)
+    assert np.all(np.diff(rows) >= 0)
+    ptr = np.asarray(csr.indptr)
+    assert ptr[0] == 0 and ptr[-1] == csr.nnz
+    assert np.all(np.diff(ptr) >= 0)
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_ell_from_csr_padding_invariants(n, p, seed):
+    w, _ = _random_w(n, p, seed)
+    csr = S.csr_from_dense(w)
+    idx, val = S.ell_from_csr(csr)
+    k = max(csr.max_row_nnz, 1)
+    assert idx.shape == val.shape == (n, k)
+    # padded slots carry zero weight; scatter-reconstruction is exact
+    ptr = np.asarray(csr.indptr)
+    counts = ptr[1:] - ptr[:-1]
+    for i in range(n):
+        assert np.all(val[i, counts[i]:] == 0.0)
+    rec = np.zeros((n, n), np.float32)
+    np.add.at(rec, (np.repeat(np.arange(n), k), idx.ravel()), val.ravel())
+    np.testing.assert_allclose(rec, w.astype(np.float32), atol=1e-7)
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_shard_csr_round_trip(n, p, seed):
+    w, _ = _random_w(n, p, seed)
+    csr = S.csr_from_dense(w)
+    for shards in (s for s in (1, 2, 4) if n % s == 0):
+        sh = S.shard_csr(csr, shards)
+        blk = sh.rows_per_shard
+        rec = np.zeros((n, n), np.float32)
+        for s in range(shards):
+            halo = np.asarray(sh.halo[s])
+            rows = np.asarray(sh.rows[s])
+            np.add.at(
+                rec,
+                (rows + s * blk, halo[np.asarray(sh.cols[s])]),
+                np.asarray(sh.values[s]),
+            )
+            assert np.all(np.diff(rows) >= 0), "padded rows must keep sort order"
+        np.testing.assert_allclose(rec, w.astype(np.float32), atol=1e-7)
+
+
+@given(st.integers(1, 1 << 24), st.integers(1 << 10, 1 << 24))
+@settings(max_examples=50, deadline=None)
+def test_auto_p_chunk_bounds(nnz, budget):
+    chunk = S.auto_p_chunk(nnz, budget_elems=budget)
+    assert chunk >= 64  # floor keeps chunks vectorizable
+    assert chunk == max(64, budget // nnz)
+    if chunk > 64:  # above the floor the transient respects the budget
+        assert chunk * nnz <= budget
+
+
+# ---------------------------------------------------------------------------
+# core/mixing.py matrix invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_mixing_matrices_row_stochastic(n, p, seed):
+    w, g = _random_w(n, p, seed)
+    for kind, mat in (
+        ("decavg", w),
+        ("uniform", M.uniform_neighbor_matrix(g)),
+        ("mh", M.metropolis_hastings_matrix(g)),
+    ):
+        assert np.all(mat >= -1e-12), kind
+        np.testing.assert_allclose(mat.sum(axis=1), 1.0, atol=1e-9, err_msg=kind)
+        M.validate_mixing(mat, g)
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_mh_symmetric_doubly_stochastic(n, p, seed):
+    g = T.erdos_renyi(n, p, seed=seed)
+    w = M.metropolis_hastings_matrix(g)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-9)
+
+
+def test_validate_mixing_accepts_every_registry_family():
+    """Every registered topology family yields valid mixing matrices for
+    every matrix kind (the registry x matrix compatibility sweep)."""
+    for name, fam in T.families().items():
+        g = T.make(fam.example, seed=0, n=20)
+        sizes = np.random.default_rng(0).uniform(0.5, 5.0, size=g.num_nodes)
+        for kind, mat in (
+            ("decavg", M.decavg_matrix(g, sizes)),
+            ("uniform", M.uniform_neighbor_matrix(g)),
+            ("mh", M.metropolis_hastings_matrix(g)),
+        ):
+            M.validate_mixing(mat, g)
+
+
+def test_spectral_gap_orders_connectivity():
+    """Sanity anchor for the analysis join: complete > ring in gap."""
+    wc = M.uniform_neighbor_matrix(T.complete(16))
+    wr = M.uniform_neighbor_matrix(T.ring(16))
+    assert M.spectral_gap(wc) > M.spectral_gap(wr)

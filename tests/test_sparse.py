@@ -155,28 +155,76 @@ class TestGossipEngine:
         caps = D.GossipEngine.capabilities()
         assert set(caps) == set(D.GossipEngine.BACKENDS)
         assert "O(E" in caps["sparse"]["cost"]
+        assert "O(E" in caps["sparse_sharded"]["cost"]
 
-    def test_permute_rejects_time_varying_schedule(self):
-        """The permute backend precomputes one edge coloring; combining it
-        with a TopologySchedule must be a clear ValueError at construction
-        AND on per-call backend override — never a silent stale coloring.
-        (Recoloring per schedule period is a ROADMAP follow-up.)"""
+    def test_sparse_sharded_defaults_to_local_device_mesh(self):
+        """sparse_sharded without an explicit mesh builds a 1-D mesh over all
+        local devices — and still needs N divisible by the shard count."""
+        ndev = len(jax.devices())
+        n = 8 * ndev
+        e = D.GossipEngine(f"ring:n={n}", backend="sparse_sharded")
+        assert e.mesh is not None and e.mesh.shape[e.node_axis] == ndev
+        params = _params(n)
+        dense = D.mix_dense(e.w, params)
+        out = e.mix(params)
+        for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(out)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-5, atol=3e-5)
+        if ndev > 1:  # indivisible N must be an actionable error
+            with pytest.raises(ValueError, match="not divisible"):
+                D.GossipEngine(f"ring:n={n + 1}", backend="sparse_sharded")
+
+    def test_sparse_sharded_override_does_not_leak_mesh(self):
+        """A per-call 'sparse_sharded' override builds its mesh locally — it
+        must not mutate the engine, so later calls keep the configured
+        capability surface (no mesh => 'sharded' still rejects)."""
+        e = D.GossipEngine("ring:n=8", backend="dense")
+        params = _params(8)
+        out = e.mix(params, backend="sparse_sharded")
+        dense = D.mix_dense(e.w, params)
+        for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(out)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-5, atol=3e-5)
+        assert e.mesh is None
+        with pytest.raises(ValueError, match="needs a mesh"):
+            e.mix(params, backend="sharded")
+
+    def test_permute_time_varying_recolors_per_period(self):
+        """The permute backend now supports TopologySchedules by recomputing
+        the edge coloring at each schedule period — exactly once per period,
+        cached and reused within it (and across revisits). The numeric
+        round-boundary equality runs with real devices in
+        tests/test_backend_equivalence.py."""
 
         class FakeMesh:  # capability checks only read mesh.shape
             shape = {"data": 8}
 
-        with pytest.raises(ValueError, match="time-varying"):
+        calls: list[int] = []
+        orig = M.edge_coloring
+        M.edge_coloring = lambda g: (calls.append(1), orig(g))[1]
+        try:
+            e = D.GossipEngine("ring:n=8@rewire=2", backend="permute",
+                               mesh=FakeMesh(), seed=3)
+            assert len(calls) == 1  # construction colors period 0
+            assert not e.refresh(1)  # same period: cached coloring, no rebuild
+            assert len(calls) == 1
+            assert e.refresh(2)  # period 1: recolor once
+            assert len(calls) == 2
+            assert not e.refresh(3)
+            assert len(calls) == 2
+            assert e.refresh(4)  # period 2
+            assert len(calls) == 3
+            # regen schedules construct too (previously a ValueError)
             D.GossipEngine("ring:n=8@regen=2", backend="permute", mesh=FakeMesh())
-        with pytest.raises(ValueError, match="time-varying"):
-            D.GossipEngine("er:n=8,p=0.5@rewire=3", backend="permute",
-                           mesh=FakeMesh())
-        # override path: engine built on a supported backend, permute per call
-        e = D.GossipEngine("ring:n=8@regen=2", backend="dense", mesh=FakeMesh())
-        with pytest.raises(ValueError, match="time-varying"):
-            e.mix(_params(8), backend="permute")
-        # static schedules stay permitted (construction-time check passes)
-        e2 = D.GossipEngine("ring:n=8", backend="permute", mesh=FakeMesh())
-        assert e2.backend == "permute"
+        finally:
+            M.edge_coloring = orig
+
+    def test_permute_still_requires_matching_mesh_axis(self):
+        class FakeMesh:
+            shape = {"data": 8}
+
+        with pytest.raises(ValueError, match="num_nodes"):
+            D.GossipEngine("ring:n=12", backend="permute", mesh=FakeMesh())
 
     def test_matrix_kinds(self):
         e = D.GossipEngine("er:n=20,p=0.4", matrix="mh", seed=0)
