@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test coverage bench-mixing bench quickstart install sweep-smoke sweep-paper
+.PHONY: verify test coverage bench-mixing bench-wire bench quickstart install sweep-smoke sweep-paper
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -25,8 +25,11 @@ test: verify
 install:  ## editable install with test extras (hypothesis, networkx)
 	$(PY) -m pip install -e ".[test]"
 
-bench-mixing:  ## dense vs sparse gossip sweep -> BENCH_mixing.json
+bench-mixing:  ## dense vs sparse gossip sweep + halo wire volumes -> BENCH_mixing.json
 	$(PY) benchmarks/bench_mixing.py
+
+bench-wire:  ## wire-volume model only (allgather vs ring halo, S=8, fast)
+	$(PY) benchmarks/bench_mixing.py --sizes "" --out BENCH_mixing_wire.json
 
 bench:  ## quick paper-figure benchmark harness
 	$(PY) benchmarks/run.py

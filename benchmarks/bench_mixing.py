@@ -11,9 +11,17 @@ N and backend:
 
 Alongside the replicated paths, the node-sharded pair is timed over a 1-D
 mesh of all local devices: ``sharded_dense`` (shard_map reduce-scatter
-matmul) vs ``sparse_sharded`` (per-shard CSR row ranges + halo gathers).
-The acceptance bar is sparse_sharded no slower than sharded_dense at
-N=4096 — sparse compute per device is O(nnz/S * D) vs O(N^2/S * D).
+matmul) vs ``sparse_sharded`` (per-shard CSR row ranges + halo buffers),
+the latter under both halo schedules (allgather and ring ppermute). The
+acceptance bar is sparse_sharded no slower than sharded_dense at N=4096 —
+sparse compute per device is O(nnz/S * D) vs O(N^2/S * D).
+
+A separate ``wire`` section models the per-device receive volume of one
+round for both halo schedules across the sparse topology families at a
+reference shard count (default 8; the local mesh is usually S=1 where both
+schedules move zero bytes). The invariant CI checks is ring <= allgather on
+every family: the ring moves only the O(H) halo rows a shard references,
+the allgather always moves the full node axis complement.
 
 Emits BENCH_mixing.json at the repo root.
 
@@ -93,24 +101,37 @@ def bench_one(n: int, d: int, reps: int, seed: int) -> dict:
             functools.partial(decavg.mix_sharded, mesh=mesh, node_axis="nodes")
         )
         shcsr = sparse.shard_csr(csr, shards)
-        shsp_fn = jax.jit(
-            functools.partial(
-                decavg.mix_sharded_sparse, mesh=mesh, node_axis="nodes"
-            )
-        )
         us_shd = _time(shd_fn, w, params, reps=reps)
-        us_shsp = _time(shsp_fn, shcsr, params, reps=reps)
+        wire = sparse.halo_wire_bytes(shcsr, d)
+        schedules = {}
+        for sched in ("allgather", "ring"):
+            fn = jax.jit(
+                functools.partial(
+                    decavg.mix_sharded_sparse, mesh=mesh, node_axis="nodes",
+                    halo_schedule=sched,
+                )
+            )
+            schedules[sched] = {
+                "us_per_round": round(_time(fn, shcsr, params, reps=reps), 1),
+                "wire_bytes_per_device": wire[sched],
+                "max_abs_err": _max_err(dense_out, fn(shcsr, params)),
+            }
+        auto = "ring" if wire["ring"] < wire["allgather"] else "allgather"
+        us_shsp = schedules[auto]["us_per_round"]
         row["shards"] = shards
         row["sharded_dense"] = {
             "us_per_round": round(us_shd, 1),
             "w_bytes": n * n * 4,
+            "wire_bytes_per_device": (n - n // shards) * d * 4,
             "max_abs_err": _max_err(dense_out, shd_fn(w, params)),
         }
         row["sparse_sharded"] = {
-            "us_per_round": round(us_shsp, 1),
+            "us_per_round": us_shsp,  # the auto-selected schedule's round
+            "auto_schedule": auto,
             "w_bytes": shcsr.nbytes,
             "halo_width": shcsr.halo_width,
-            "max_abs_err": _max_err(dense_out, shsp_fn(shcsr, params)),
+            "ring_width": shcsr.ring_width,
+            "schedules": schedules,
         }
         row["sharded_speedup"] = round(us_shd / us_shsp, 2) if us_shsp else None
 
@@ -128,6 +149,46 @@ def bench_one(n: int, d: int, reps: int, seed: int) -> dict:
     return row
 
 
+def wire_report(n: int, d: int, shards: int, seed: int) -> list[dict]:
+    """Modeled per-device wire volume (bytes received per round) of both halo
+    schedules across the sparse topology families, at a reference shard count.
+    Host-side only — no mixing is run, so this also covers meshes the local
+    machine can't realize."""
+    out = []
+    for spec in (
+        f"ba:n={n},m=2",
+        f"ws:n={n},k=4,beta=0.1",
+        f"torus:n={n}",
+        f"ring:n={n}",
+        f"caveman:cliques={n // 8},size=8",
+    ):
+        g = T.make(spec, seed=seed)
+        csr = sparse.csr_from_dense(mixing.decavg_matrix(g, np.ones(g.num_nodes)))
+        shcsr = sparse.shard_csr(csr, shards)
+        wire = sparse.halo_wire_bytes(shcsr, d)
+        out.append(
+            {
+                "topology": spec,
+                "shards": shards,
+                "halo_width": shcsr.halo_width,
+                "ring_width": shcsr.ring_width,
+                "allgather_bytes_per_device": wire["allgather"],
+                "ring_bytes_per_device": wire["ring"],
+                "ring_over_allgather": (
+                    round(wire["ring"] / wire["allgather"], 4)
+                    if wire["allgather"] else None
+                ),
+            }
+        )
+        print(
+            f"wire {spec:28s} S={shards}  allgather "
+            f"{wire['allgather']/2**10:9.1f} KiB/dev   ring "
+            f"{wire['ring']/2**10:9.1f} KiB/dev   "
+            f"({out[-1]['ring_over_allgather']})"
+        )
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="128,1024,4096")
@@ -135,6 +196,10 @@ def main() -> None:
                     help="params per node (flattened)")
     ap.add_argument("--reps", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--wire-n", type=int, default=4096,
+                    help="N for the wire-volume model (0 to skip)")
+    ap.add_argument("--wire-shards", type=int, default=8,
+                    help="reference shard count for the wire-volume model")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
 
@@ -149,6 +214,8 @@ def main() -> None:
         "num_devices": len(jax.devices()),
         "rows": rows,
     }
+    if args.wire_n:
+        out["wire"] = wire_report(args.wire_n, args.dim, args.wire_shards, args.seed)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {os.path.abspath(args.out)}")

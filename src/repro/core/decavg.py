@@ -21,9 +21,11 @@ Three execution paths, all numerically equivalent (tests assert allclose):
 
 Plus the sparse large-N paths (core/sparse.py): CSR segment-sum, the Pallas
 blocked-ELL kernel, and ``mix_sharded_sparse`` — the CSR round with the node
-axis sharded over a mesh axis (per-shard row ranges, compact halo gathers
-for cross-shard neighbors). All O(E·P) per round instead of O(N²·P); the
-sharded variant additionally splits the work S ways.
+axis sharded over a mesh axis (per-shard row ranges, compact halo buffers
+for cross-shard neighbors, assembled by an allgather or ring-ppermute
+``halo_schedule``). All O(E·P) per round instead of O(N²·P); the sharded
+variant additionally splits the work S ways, and the ring schedule bounds
+per-device wire to O(H·P).
 
 ``GossipEngine`` is the one front door over all of them: it owns the
 topology (static graph or TopologySchedule), builds + caches the mixing
@@ -31,8 +33,14 @@ matrix per schedule period, capability-checks the requested backend, and
 applies the per-round gossip cadence (``gossip_every`` / identity rounds)
 that call sites used to reimplement inline.
 
-The mixing accumulates in float32 regardless of parameter dtype (bf16 models
-still contract toward consensus without rounding bias), then casts back.
+Precision contract: the sparse and shard_map paths accumulate in float32
+regardless of parameter dtype, then cast back. The dense einsum path
+(``mix_dense``/``_mix_leaf``) instead accumulates in the *leaf dtype* — an
+f32 ``preferred_element_type`` would materialize a param-sized f32 temporary
+per leaf (GBs/device at LLM scale), and the MXU accumulates bf16 dots in f32
+internally anyway; tests/test_decavg.py pins the resulting bf16-vs-f32
+tolerance. Run in f32 (the paper's sims do) when bit-level dense/sparse
+agreement matters.
 """
 
 from __future__ import annotations
@@ -176,7 +184,9 @@ def mix_sharded(
     return jax.tree.map(mix_one, params)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "node_axis", "p_chunk"))
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "node_axis", "p_chunk", "halo_schedule")
+)
 def mix_sharded_sparse(
     shcsr,
     params: PyTree,
@@ -184,6 +194,7 @@ def mix_sharded_sparse(
     mesh: jax.sharding.Mesh,
     node_axis: str | tuple[str, ...] = "data",
     p_chunk: int | None = None,
+    halo_schedule: Literal["allgather", "ring", "auto"] = "allgather",
 ) -> PyTree:
     """Sparse DecAvg round with the node axis sharded over ``node_axis``.
 
@@ -191,16 +202,26 @@ def mix_sharded_sparse(
     row range of W and stores its entries with halo-local column ids. The
     round per device is
 
-      1. all_gather the node axis of P (the only collective),
-      2. slice out the shard's *halo* — the compact set of source rows its
+      1. assemble the shard's *halo* — the compact set of source rows its
          W entries actually reference — into an (H, p) buffer,
-      3. gather + segment-sum over the shard's nnz entries, O(nnz_s * p).
+      2. gather + segment-sum over the shard's nnz entries, O(nnz_s * p).
 
-    Compute and W memory are sparse (O(nnz/S * P) work per device, O(E)
-    total W bytes vs the dense sharded path's O(N^2/S * P) matmul and
-    O(N^2) W); wire volume matches the dense allgather schedule. A ring
-    halo exchange that also bounds wire volume to O(H * P) is the natural
-    follow-up once cohorts outgrow a single all_gather.
+    Step 1 runs one of two ``halo_schedule``s (numerically identical):
+
+    - "allgather": all_gather the node axis of P, slice the halo rows.
+      One collective, O(N * p) wire per device.
+    - "ring": S-1 ``ppermute`` steps over the shard ring; step d moves
+      exactly the rows each shard needs from its distance-d peer
+      (``shcsr.ring_send/ring_recv``), own rows are copied locally. Steps
+      with no traffic anywhere compile away, so wire per device is
+      O(H * p) — the sparse topology becomes the communication schedule,
+      not just the compute schedule.
+    - "auto": ring when its modeled wire (``shcsr.ring_width``) undercuts
+      the allgather's N - N/S rows, else allgather.
+
+    Compute and W memory are sparse either way (O(nnz/S * P) work per
+    device, O(E) total W bytes vs the dense sharded path's O(N^2/S * P)
+    matmul and O(N^2) W).
 
     ``p_chunk`` bounds the per-device gather transient to O(nnz_s * p_chunk)
     (serialized feature-axis chunks, as in ``sparse.mix_sparse``) — use for
@@ -217,16 +238,45 @@ def mix_sharded_sparse(
         )
     n = shcsr.shape[0]
     blk = shcsr.rows_per_shard
+    h = shcsr.halo_width
+    if halo_schedule == "auto":
+        halo_schedule = "ring" if shcsr.ring_width < n - blk else "allgather"
+    if halo_schedule not in ("allgather", "ring"):
+        raise ValueError(
+            f"halo_schedule must be 'allgather', 'ring' or 'auto', "
+            f"got {halo_schedule!r}"
+        )
+    ring = halo_schedule == "ring"
 
-    def body(halo, rows, cols, values, leaf):
+    def body(halo, rows, cols, values, local_src, local_dst, ring_send,
+             ring_recv, leaf):
         # leaf: (n/shards, ...) local block of the node axis; the stacked
         # per-shard layout arrays arrive replicated and are indexed by the
         # device's shard position.
         idx = jax.lax.axis_index(axes)
         flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)  # (blk, p)
-        full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)  # (n, p)
-        need = jax.lax.dynamic_index_in_dim(halo, idx, 0, keepdims=False)
-        buf = full[need]  # (H, p): the halo — only rows this shard references
+        if ring:
+            # Halo buffer with one scratch row at slot H: padded local/ring
+            # destinations point there and are discarded by the slice below.
+            buf = jnp.zeros((h + 1, flat.shape[1]), jnp.float32)
+            ls = jax.lax.dynamic_index_in_dim(local_src, idx, 0, keepdims=False)
+            ld = jax.lax.dynamic_index_in_dim(local_dst, idx, 0, keepdims=False)
+            buf = buf.at[ld].set(flat[ls])
+            for d, (sidx, rslot) in enumerate(zip(ring_send, ring_recv), 1):
+                if sidx.shape[1] == 0:
+                    continue  # no shard pair exchanges at this distance
+                send = jax.lax.dynamic_index_in_dim(sidx, idx, 0, keepdims=False)
+                got = jax.lax.ppermute(
+                    flat[send], axes,
+                    [(s, (s + d) % shards) for s in range(shards)],
+                )
+                slot = jax.lax.dynamic_index_in_dim(rslot, idx, 0, keepdims=False)
+                buf = buf.at[slot].set(got)
+            buf = buf[:h]  # (H, p); cols only ever reference [0, H)
+        else:
+            full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)  # (n, p)
+            need = jax.lax.dynamic_index_in_dim(halo, idx, 0, keepdims=False)
+            buf = full[need]  # (H, p): only rows this shard references
         r = jax.lax.dynamic_index_in_dim(rows, idx, 0, keepdims=False)
         c = jax.lax.dynamic_index_in_dim(cols, idx, 0, keepdims=False)
         v = jax.lax.dynamic_index_in_dim(values, idx, 0, keepdims=False)
@@ -256,9 +306,11 @@ def mix_sharded_sparse(
         return _shard_map(
             body,
             mesh=mesh,
-            in_specs=(P(), P(), P(), P(), spec),
+            in_specs=(P(), P(), P(), P(), P(), P(), P(), P(), spec),
             out_specs=spec,
-        )(shcsr.halo, shcsr.rows, shcsr.cols, shcsr.values, leaf)
+        )(shcsr.halo, shcsr.rows, shcsr.cols, shcsr.values,
+          shcsr.local_src, shcsr.local_dst, shcsr.ring_send, shcsr.ring_recv,
+          leaf)
 
     return jax.tree.map(mix_one, params)
 
@@ -336,8 +388,9 @@ _BACKEND_INFO = {
     "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device"),
     "sparse_sharded": (
         "mesh with node axis (default: all local devices); N divisible by "
-        "shards; W stored per-shard CSR with halo columns",
-        "O(E * P / S) work per device",
+        "shards; W stored per-shard CSR with halo columns; halo_schedule "
+        "allgather|ring|auto",
+        "O(E * P / S) work per device; wire O(N * P) allgather / O(H * P) ring",
     ),
     "permute": ("mesh with node axis; N == |axis|; recolors per schedule period", "O(degree * P) wire per device"),
 }
@@ -366,6 +419,9 @@ class GossipEngine:
       gossip_every: mix on rounds with ``round % gossip_every == 0``; other
         rounds are identity and skip all work.
       mesh/node_axis/sharded_schedule: for the shard_map backends.
+      halo_schedule: sparse_sharded halo assembly — "allgather" (one
+        collective, O(N*P) wire), "ring" (S-1 ppermute steps, O(H*P) wire)
+        or "auto" (ring whenever its modeled wire undercuts the allgather's).
       interpret: forwarded to the Pallas backends (default: auto-detect).
       sparse_p_chunk: feature-axis chunk for the sparse gather — an int,
         "auto" (sized from nnz to a ~16 MiB transient), or None (off).
@@ -390,6 +446,7 @@ class GossipEngine:
         mesh: jax.sharding.Mesh | None = None,
         node_axis: str = "data",
         sharded_schedule: Literal["allgather", "reduce_scatter"] = "reduce_scatter",
+        halo_schedule: Literal["allgather", "ring", "auto"] = "auto",
         interpret: bool | None = None,
         sparse_threshold: int = 512,
         sparse_p_chunk: int | Literal["auto"] | None = None,
@@ -418,6 +475,12 @@ class GossipEngine:
         self.mesh = mesh
         self.node_axis = node_axis
         self.sharded_schedule = sharded_schedule
+        if halo_schedule not in ("allgather", "ring", "auto"):
+            raise ValueError(
+                f"halo_schedule must be 'allgather', 'ring' or 'auto', "
+                f"got {halo_schedule!r}"
+            )
+        self.halo_schedule = halo_schedule
         self.interpret = interpret
         self.sparse_threshold = int(sparse_threshold)
         # Feature-axis chunking for the sparse gather (None = off; "auto"
@@ -651,7 +714,7 @@ class GossipEngine:
                 p_chunk = sparse.auto_p_chunk(int(self._shcsr.values.shape[1]))
             return mix_sharded_sparse(
                 self._shcsr, params, mesh=mesh, node_axis=self.node_axis,
-                p_chunk=p_chunk,
+                p_chunk=p_chunk, halo_schedule=self.halo_schedule,
             )
         if backend == "permute":
             if self._colors is None:

@@ -41,6 +41,7 @@ __all__ = [
     "ell_from_csr",
     "block_ell_from_csr",
     "shard_csr",
+    "halo_wire_bytes",
     "mix_sparse",
     "mix_sparse_pallas",
     "auto_p_chunk",
@@ -136,7 +137,10 @@ def ell_from_csr(csr: CSR) -> tuple[np.ndarray, np.ndarray]:
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("halo", "rows", "cols", "values"),
+    data_fields=(
+        "halo", "rows", "cols", "values",
+        "local_src", "local_dst", "ring_send", "ring_recv",
+    ),
     meta_fields=("shape", "shards", "rows_per_shard"),
 )
 @dataclasses.dataclass(frozen=True)
@@ -147,13 +151,26 @@ class ShardedCSR:
     and stores its W entries with *halo-local* column ids: ``halo[s]`` lists
     the global source nodes shard ``s`` needs (its own rows plus cross-shard
     neighbors), and ``cols`` indexes into that halo list. One sharded DecAvg
-    round (decavg.mix_sharded_sparse) then gathers the halo rows of P once
-    and runs an O(nnz_s * P) segment-sum per shard.
+    round (decavg.mix_sharded_sparse) assembles the shard's halo rows of P
+    into an (H, p) buffer and runs an O(nnz_s * P) segment-sum per shard.
+
+    Two halo assembly schedules are supported by the same layout:
+
+    - allgather: gather the full node axis once, slice ``halo[s]`` rows.
+    - ring: S-1 ``ppermute`` steps; at step d every shard sends exactly the
+      rows shard ``(s+d) % S`` needs from it (``ring_send[d-1]``) and places
+      what it receives from shard ``(s-d) % S`` at the matching halo slots
+      (``ring_recv[d-1]``); its own rows are copied locally via
+      ``local_src``/``local_dst``. Per-device wire drops from O(N*P) to
+      O(H*P). Steps in which no shard pair exchanges anything have zero-width
+      index arrays and are skipped entirely at trace time.
 
     All per-shard arrays are stacked on a leading shard axis and zero-padded
     to the max shard size so the same SPMD program runs on every device:
     padded entries carry weight 0 and point at halo slot 0 / the shard's last
     local row, so they contribute nothing while keeping segment ids sorted.
+    Padded ring/local *destination* slots point at the scratch slot H (one
+    past the halo), which the mixing kernel discards.
 
     Attributes:
       halo:   (S, H) int32 — global source node ids needed by shard s
@@ -162,6 +179,14 @@ class ShardedCSR:
               ascending (padded with rows_per_shard - 1).
       cols:   (S, E) int32 — index into ``halo[s]`` (padded with 0).
       values: (S, E) float32 — W entries (padded with 0).
+      local_src: (S, L) int32 — shard-local rows copied into the halo buffer
+              without communication (padded with 0).
+      local_dst: (S, L) int32 — halo slots for ``local_src`` (padded with H).
+      ring_send: tuple of (S, K_d) int32, one per ring step d=1..S-1 — rows
+              LOCAL to the sending shard, packed in the receiver's halo
+              order (padded with 0; sent but discarded by the receiver).
+      ring_recv: tuple of (S, K_d) int32 — halo slots where the rows received
+              at step d land (padded with the scratch slot H).
       shape:  (N, N) static; shards, rows_per_shard: static ints.
     """
 
@@ -169,6 +194,10 @@ class ShardedCSR:
     rows: jax.Array
     cols: jax.Array
     values: jax.Array
+    local_src: jax.Array
+    local_dst: jax.Array
+    ring_send: tuple[jax.Array, ...]
+    ring_recv: tuple[jax.Array, ...]
     shape: tuple[int, int]
     shards: int
     rows_per_shard: int
@@ -179,10 +208,19 @@ class ShardedCSR:
         return int(self.halo.shape[1])
 
     @property
+    def ring_width(self) -> int:
+        """Rows of P one device receives per round under the ring schedule
+        (sum of padded per-step widths — the O(H) wire bound)."""
+        return sum(int(a.shape[1]) for a in self.ring_send)
+
+    @property
     def nbytes(self) -> int:
         return sum(
             int(np.prod(a.shape)) * a.dtype.itemsize
-            for a in (self.halo, self.rows, self.cols, self.values)
+            for a in (
+                self.halo, self.rows, self.cols, self.values,
+                self.local_src, self.local_dst, *self.ring_send, *self.ring_recv,
+            )
         )
 
 
@@ -191,6 +229,10 @@ def shard_csr(csr: CSR, shards: int) -> ShardedCSR:
 
     Requires N divisible by ``shards`` (same contract as the dense sharded
     backend). Pure host-side preprocessing, done once per schedule period.
+    Besides the per-shard CSR entries, this derives the peer metadata for the
+    ring halo exchange: which shard owns each halo row, which local rows each
+    shard must send at every ring step, and the halo slot each received row
+    lands in (see ShardedCSR).
     """
     n = csr.shape[0]
     if shards < 1 or n % shards:
@@ -228,15 +270,69 @@ def shard_csr(csr: CSR, shards: int) -> ShardedCSR:
         rows[s, :k] = loc_rows[s]
         lcols[s, :k] = loc_cols[s]
         lvals[s, :k] = loc_vals[s]
+
+    # Ring peer metadata. Each halo row of shard s is owned by shard
+    # owner = id // blk; at ring step d shard s receives exactly its halo
+    # rows owned by (s - d) % shards, packed in halo order, while sending the
+    # rows (s + d) % shards needs from it in *that* receiver's halo order —
+    # sender packing and receiver slots line up by construction.
+    scratch = h_max  # one-past-the-halo slot; padded writes land here
+    loc_src = [np.flatnonzero(halos[s] // blk == s) for s in range(shards)]
+    l_max = max(max((p.size for p in loc_src), default=0), 1)
+    local_src = np.zeros((shards, l_max), dtype=np.int32)
+    local_dst = np.full((shards, l_max), scratch, dtype=np.int32)
+    for s in range(shards):
+        p = loc_src[s]
+        local_src[s, : p.size] = halos[s][p] - s * blk
+        local_dst[s, : p.size] = p
+
+    ring_send: list[jax.Array] = []
+    ring_recv: list[jax.Array] = []
+    for d in range(1, shards):
+        # recv_pos[r]: positions in halos[r] owned by o = (r - d) % shards.
+        recv_pos = [
+            np.flatnonzero(halos[r] // blk == (r - d) % shards)
+            for r in range(shards)
+        ]
+        k_d = max(p.size for p in recv_pos)
+        send = np.zeros((shards, k_d), dtype=np.int32)
+        recv = np.full((shards, k_d), scratch, dtype=np.int32)
+        for r in range(shards):
+            o = (r - d) % shards
+            p = recv_pos[r]
+            send[o, : p.size] = halos[r][p] - o * blk
+            recv[r, : p.size] = p
+        ring_send.append(jnp.asarray(send))
+        ring_recv.append(jnp.asarray(recv))
+
     return ShardedCSR(
         halo=jnp.asarray(halo),
         rows=jnp.asarray(rows),
         cols=jnp.asarray(lcols),
         values=jnp.asarray(lvals),
+        local_src=jnp.asarray(local_src),
+        local_dst=jnp.asarray(local_dst),
+        ring_send=tuple(ring_send),
+        ring_recv=tuple(ring_recv),
         shape=csr.shape,
         shards=shards,
         rows_per_shard=blk,
     )
+
+
+def halo_wire_bytes(shcsr: ShardedCSR, p: int, *, itemsize: int = 4) -> dict[str, int]:
+    """Modeled per-device *receive* volume of one mixing round, per schedule.
+
+    allgather moves the (S-1)/S complement of the full node axis onto every
+    device; the ring moves only the padded per-step halo rows (``ring_width``,
+    O(H)). Both count payload bytes of P rows at ``p`` features — layout
+    metadata (a few KB of int32, round-constant) is excluded.
+    """
+    n = shcsr.shape[0]
+    return {
+        "allgather": (n - shcsr.rows_per_shard) * p * itemsize,
+        "ring": shcsr.ring_width * p * itemsize,
+    }
 
 
 @dataclasses.dataclass(frozen=True)

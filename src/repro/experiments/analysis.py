@@ -55,6 +55,14 @@ def summarize(store: ResultsStore) -> list[dict[str, Any]]:
         spec, end, curve = run["spec"], run["end"], run["rounds"]
         final = end.get("final", {})
         graph = final.get("graph", {})
+        # Time-varying runs carry per-period summaries; regress against the
+        # period mean, not the period-0 snapshot (which only describes the
+        # first graph the schedule realized).
+        gmean = final.get("graph_mean") or {}
+
+        def gv(key: str) -> Any:
+            return gmean.get(key, graph.get(key))
+
         row: dict[str, Any] = {
             "run_id": rid,
             "family": family_of(spec.get("topology", "?")),
@@ -64,14 +72,15 @@ def summarize(store: ResultsStore) -> list[dict[str, Any]]:
             "seed": spec.get("seed"),
             "rounds": len(curve),
             "wall_s": end.get("wall_s"),
-            # graph side
+            # graph side (period means for @regen/@rewire runs)
             "nodes": graph.get("nodes"),
-            "edges": graph.get("edges"),
-            "degree_mean": graph.get("degree_mean"),
-            "degree_std": graph.get("degree_std"),
-            "modularity": graph.get("modularity"),
-            "clustering": graph.get("clustering"),
-            "spectral_gap": graph.get("spectral_gap"),
+            "edges": gv("edges"),
+            "degree_mean": gv("degree_mean"),
+            "degree_std": gv("degree_std"),
+            "modularity": gv("modularity"),
+            "clustering": gv("clustering"),
+            "spectral_gap": gv("spectral_gap"),
+            "topology_periods": final.get("graph_num_periods", 1),
             # training side (last round record)
             "final_acc": final.get("mean_acc"),
             "final_g1_acc": final.get("g1_acc"),

@@ -78,6 +78,55 @@ def _graph_record(g, w: np.ndarray) -> dict[str, Any]:
     return rec
 
 
+_MAX_GRAPH_PERIODS = 32
+
+
+def _graph_records(engine, rounds: int) -> dict[str, Any]:
+    """Graph summaries for every schedule period the run realized.
+
+    A ``@regen``/``@rewire`` run visits several graphs; summarizing only
+    ``graph_at(0)`` would report period-0 modularity/spectral-gap as if they
+    described the whole run. Returns ``graph`` (the period-0 record, labeled
+    with ``period=0``) plus, for multi-period runs, ``graph_periods``
+    (per-period records) and ``graph_mean`` (numeric fields averaged over
+    the recorded periods — the value the analysis join regresses against).
+
+    Each record costs a W rebuild plus (at N <= 1024) an O(N^3) spectral-gap
+    eigensolve, so runs realizing more than ``_MAX_GRAPH_PERIODS`` periods
+    (e.g. ``@regen=1`` over hundreds of rounds) are summarized on an evenly
+    spaced sample of periods — ``graph_num_periods`` always reports the true
+    count, and ``graph_periods_sampled`` flags the subsetting.
+    """
+    first_round: dict[int, int] = {}
+    for r in range(max(int(rounds), 1)):
+        p = engine.schedule.period_of(r)
+        first_round.setdefault(p, r)
+    periods = sorted(first_round)
+    num_periods = len(periods)
+    sampled = num_periods > _MAX_GRAPH_PERIODS
+    if sampled:
+        pick = np.linspace(0, num_periods - 1, _MAX_GRAPH_PERIODS).round()
+        periods = [periods[int(i)] for i in np.unique(pick)]
+    recs = []
+    for p in periods:
+        rec = _graph_record(engine.graph_at(first_round[p]), np.asarray(engine.w))
+        rec["period"] = p
+        recs.append(rec)
+    out: dict[str, Any] = {"graph": recs[0], "graph_num_periods": num_periods}
+    if len(recs) > 1:
+        out["graph_periods"] = recs
+        if sampled:
+            out["graph_periods_sampled"] = True
+        out["graph_mean"] = {
+            k: float(np.mean([r[k] for r in recs]))
+            for k, v in recs[0].items()
+            if k != "period"
+            and isinstance(v, (int, float)) and not isinstance(v, bool)
+            and all(isinstance(r.get(k), (int, float)) for r in recs)
+        }
+    return out
+
+
 def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
     from repro.core import topology
     from repro.data.loader import NodeLoader
@@ -130,8 +179,6 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
         class_groups=groups,
         **extra,
     )
-    graph_rec = _graph_record(trainer.graph, np.asarray(trainer.engine.w))
-
     last: dict[str, Any] = {}
 
     def on_round(m) -> None:
@@ -172,7 +219,9 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
 
     final: dict[str, Any] = {
         **last,
-        "graph": graph_rec,
+        # Per-period summaries, computed after the run so @regen/@rewire
+        # records cover every realized graph, not just graph_at(0).
+        **_graph_records(trainer.engine, spec.rounds),
         "num_focus_nodes": int(len(focus_nodes)),
         "num_spread_nodes": int(len(spread_nodes)),
     }
@@ -281,10 +330,11 @@ def _run_lm(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
     cons = np.asarray(consensus_distance(params))
     return {
         "loss": float(loss) if loss is not None else None,
-        "consensus_mean": float(cons.mean()),
-        "consensus_max": float(cons.max()),
+        # (0,) for an empty pytree — no nodes, so no distance to report
+        "consensus_mean": float(cons.mean()) if cons.size else 0.0,
+        "consensus_max": float(cons.max()) if cons.size else 0.0,
         "wall_s": round(time.perf_counter() - t0, 4),
-        "graph": _graph_record(engine.graph, np.asarray(engine.w)),
+        **_graph_records(engine, spec.rounds),
         "members_m": round(TF.param_count(per_node) / 1e6, 2),
     }
 
@@ -332,6 +382,46 @@ def _worker(args: tuple[dict[str, Any], str, bool]) -> str:
     return shard_path
 
 
+def _merge_shard(store: ResultsStore, shard: str) -> None:
+    with open(shard) as f:
+        store.append_lines(f)
+    os.remove(shard)
+
+
+def _salvage_shards(
+    store: ResultsStore, shard_dir: str, verbose: bool, *, min_age_s: float = 0.0
+) -> int:
+    """Merge + remove shard files a dead worker (or killed parent) left in
+    ``shard_dir``, then drop the directory.
+
+    Salvaged partial shards lack their ``run_end`` line, so resume re-runs
+    them; complete shards whose merge was interrupted count as completed and
+    are skipped. Called before a sweep (stale shards from a previous crash,
+    with ``min_age_s`` so a *concurrent* sweep's in-flight shards are left
+    alone) and after this sweep's own pool has shut down (age 0: its workers
+    are gone, every surviving file is quiescent)."""
+    if not os.path.isdir(shard_dir):
+        return 0
+    import glob
+
+    salvaged = 0
+    for shard in sorted(glob.glob(os.path.join(shard_dir, "*.jsonl"))):
+        try:
+            if min_age_s and time.time() - os.path.getmtime(shard) < min_age_s:
+                continue  # likely still being written by a live sweep
+            _merge_shard(store, shard)
+            salvaged += 1
+        except FileNotFoundError:
+            continue  # another sweep salvaged it between glob and merge
+    try:
+        os.rmdir(shard_dir)
+    except OSError:
+        pass  # a concurrent sweep may still be writing here; leave it
+    if verbose and salvaged:
+        print(f"salvaged {salvaged} stale shard(s) from {shard_dir}")
+    return salvaged
+
+
 def run_sweep(
     specs: list[ExperimentSpec],
     store_path: str,
@@ -348,6 +438,11 @@ def run_sweep(
     worker writes a private shard merged into the main store on completion.
     """
     store = ResultsStore(store_path)
+    shard_dir = store_path + ".shards"
+    # A previous sweep's crash; the age floor spares a concurrent sweep's
+    # in-flight shards (they are fsynced per record, so a genuinely stale
+    # file stops aging the moment its writer dies).
+    _salvage_shards(store, shard_dir, verbose, min_age_s=60.0)
     done = store.completed() if resume else set()
     todo = [s for s in specs if s.run_id not in done]
     skipped = len(specs) - len(todo)
@@ -364,24 +459,45 @@ def run_sweep(
                 run_spec(spec, store, verbose=verbose, raise_on_error=False)
             )
     else:
+        import concurrent.futures as cf
         import multiprocessing as mp
 
         ctx = mp.get_context("spawn")
-        shard_dir = store_path + ".shards"
         os.makedirs(shard_dir, exist_ok=True)
         jobs = [
             (s.to_json(), os.path.join(shard_dir, f"{s.run_id}.jsonl"), verbose)
             for s in todo
         ]
-        with ctx.Pool(processes=min(processes, len(jobs))) as pool:
-            for shard in pool.imap_unordered(_worker, jobs):
-                with open(shard) as f:
-                    store.append_lines(f)
-                os.remove(shard)
+        # ProcessPoolExecutor, not mp.Pool: a worker killed mid-run (OOM,
+        # signal) raises BrokenProcessPool on the victim's future, whereas
+        # Pool.imap_unordered silently respawns the worker and blocks on the
+        # lost result forever — the sweep must fail that run, not deadlock.
         try:
-            os.rmdir(shard_dir)
-        except OSError:
-            pass
+            with cf.ProcessPoolExecutor(
+                max_workers=min(processes, len(jobs)), mp_context=ctx
+            ) as pool:
+                futs = [pool.submit(_worker, j) for j in jobs]
+                for fut in cf.as_completed(futs):
+                    try:
+                        _merge_shard(store, fut.result())
+                    except Exception as e:  # noqa: BLE001 — keep draining;
+                        # a broken pool fails the remaining futures fast and
+                        # each shows up as a failed (re-runnable) run below.
+                        if verbose:
+                            print(f"worker failed: {type(e).__name__}: {e}")
+        finally:
+            # Salvage whatever OUR workers left behind (a killed worker's
+            # partial shard) — only this sweep's own filenames; a concurrent
+            # sweep's in-flight shards in the shared dir are not ours to take.
+            for _, shard, _ in jobs:
+                try:
+                    _merge_shard(store, shard)
+                except FileNotFoundError:
+                    pass  # merged in the loop above
+            try:
+                os.rmdir(shard_dir)
+            except OSError:
+                pass  # non-empty: a concurrent sweep is still writing here
         finals = store.finals()
         statuses = [
             {"status": "completed" if s.run_id in finals else "failed",

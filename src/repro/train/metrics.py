@@ -36,13 +36,16 @@ def consensus_distance(params: PyTree) -> jax.Array:
 
     The quantity the mixing matrix's spectral gap contracts per gossip round;
     the experiment harness streams its mean/max per round to relate topology
-    to knowledge-spread speed.
+    to knowledge-spread speed. An empty pytree has no node axis to read N
+    from, so it yields a (0,) array rather than raising.
     """
     total = None
     for leaf in jax.tree.leaves(params):
         f = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
         sq = jnp.sum((f - f.mean(axis=0, keepdims=True)) ** 2, axis=1)
         total = sq if total is None else total + sq
+    if total is None:
+        return jnp.zeros((0,), jnp.float32)
     return jnp.sqrt(total)
 
 

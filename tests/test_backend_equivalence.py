@@ -33,7 +33,9 @@ TOPOLOGIES = [
 ]
 # Backends runnable in-process on any jax backend (sparse_sharded builds its
 # default 1-device mesh; the >1-shard halo path runs in the subprocess test).
-BACKENDS = ["dense", "pallas", "sparse", "sparse_pallas", "sparse_sharded"]
+# The sparse_sharded+ring entry pins the degenerate local-copy-only ring.
+BACKENDS = ["dense", "pallas", "sparse", "sparse_pallas", "sparse_sharded",
+            "sparse_sharded+ring"]
 
 PYTREES = {
     "ragged": lambda n, key: {
@@ -50,8 +52,10 @@ PYTREES = {
 
 def _engine(spec: str, backend: str) -> D.GossipEngine:
     n = T.make(spec, seed=2).num_nodes
+    backend, _, halo = backend.partition("+")
     return D.GossipEngine(
         spec, backend=backend, seed=2,
+        halo_schedule=halo or "auto",
         data_sizes=np.arange(1, n + 1, dtype=np.float64),
     )
 
@@ -152,8 +156,11 @@ def test_shard_csr_layout_invariants():
 
 def test_sparse_sharded_subprocess_multi_shard():
     """The real halo path: 8 node shards over 8 fake CPU devices, every
-    topology in the matrix, plus both dense sharded schedules as a
-    cross-check of the shard_map shim."""
+    topology in the matrix, both halo schedules (ring ppermute vs allgather,
+    allclose to dense at 1e-6 — the acceptance bar), plus both dense sharded
+    schedules as a cross-check of the shard_map shim. Halos genuinely span
+    several shards here (24 nodes / 8 shards = 3 rows per shard, degree >= 2).
+    """
     code = textwrap.dedent(
         f"""
         import os
@@ -167,18 +174,73 @@ def test_sparse_sharded_subprocess_multi_shard():
             w = M.decavg_matrix(g, np.arange(1, n + 1, dtype=np.float64))
             wj = jnp.asarray(w, jnp.float32)
             csr = S.csr_from_dense(w)
+            shcsr = S.shard_csr(csr, 8)
             params = {{"a": jax.random.normal(jax.random.PRNGKey(0), (n, 9, 3)),
                        "b": jax.random.normal(jax.random.PRNGKey(1), (n, 41))}}
             dense = D.mix_dense(wj, params)
-            outs = [D.mix_sharded_sparse(S.shard_csr(csr, 8), params,
-                                         mesh=mesh, node_axis="nodes")]
+            sched_outs = {{
+                sched: D.mix_sharded_sparse(shcsr, params, mesh=mesh,
+                                            node_axis="nodes",
+                                            halo_schedule=sched)
+                for sched in ("allgather", "ring", "auto")
+            }}
+            for sched, out in sched_outs.items():
+                for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(out)):
+                    np.testing.assert_allclose(
+                        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6,
+                        err_msg=f"{{spec}} halo_schedule={{sched}}")
+            # ring wire never exceeds the allgather's on a sparse graph
+            wire = S.halo_wire_bytes(shcsr, 41)
+            assert wire["ring"] <= wire["allgather"], (spec, wire)
             for sched in ("allgather", "reduce_scatter"):
-                outs.append(D.mix_sharded(wj, params, mesh=mesh,
-                                          node_axis="nodes", schedule=sched))
-            for out in outs:
+                out = D.mix_sharded(wj, params, mesh=mesh,
+                                    node_axis="nodes", schedule=sched)
                 for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(out)):
                     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                                rtol=2e-5, atol=2e-5, err_msg=spec)
+        # ring + p_chunk: the feature-chunked segment-sum consumes the same
+        # ring-assembled halo buffer
+        g = T.make("ws:n=24,k=4,beta=0.2", seed=2)
+        w = M.decavg_matrix(g, np.ones(24))
+        shcsr = S.shard_csr(S.csr_from_dense(w), 8)
+        params = {{"a": jax.random.normal(jax.random.PRNGKey(3), (24, 131))}}
+        dense = D.mix_dense(jnp.asarray(w, jnp.float32), params)
+        out = D.mix_sharded_sparse(shcsr, params, mesh=mesh, node_axis="nodes",
+                                   p_chunk=32, halo_schedule="ring")
+        np.testing.assert_allclose(np.asarray(dense["a"]), np.asarray(out["a"]),
+                                   rtol=1e-6, atol=1e-6)
+        print("OK")
+        """
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=500
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_sparse_sharded_ring_time_varying_subprocess():
+    """GossipEngine(sparse_sharded, halo_schedule=ring) tracks a @rewire
+    schedule: the per-period ShardedCSR (peer metadata included) is rebuilt
+    at period boundaries and every round still matches dense mixing."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import decavg as D, topology as T
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("nodes",))
+        e = D.GossipEngine("ws:n=24,k=4,beta=0.3@rewire=2", backend="sparse_sharded",
+                           halo_schedule="ring", mesh=mesh, node_axis="nodes", seed=4)
+        params = {"a": jax.random.normal(jax.random.PRNGKey(5), (24, 7, 2))}
+        seen = set()
+        for r in range(6):
+            out = e.mix(params, round=r)
+            want = D.mix_dense(e.w, params)  # refreshed for round r by mix()
+            np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(want["a"]),
+                                       rtol=1e-6, atol=1e-6, err_msg=f"round {r}")
+            seen.add(bytes(np.asarray(e.w).tobytes()))
+        assert len(seen) == 3, len(seen)  # rewire=2 over 6 rounds -> 3 periods
         print("OK")
         """
     )

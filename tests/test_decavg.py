@@ -37,6 +37,51 @@ class TestEquivalence:
         for dl, pl_ in zip(jax.tree.leaves(dense), jax.tree.leaves(pallas)):
             np.testing.assert_allclose(np.asarray(dl), np.asarray(pl_), rtol=3e-5, atol=3e-5)
 
+    def test_bf16_dense_mixing_tolerance(self):
+        """Pin the dense path's precision contract (module docstring): it
+        accumulates in the LEAF dtype, so bf16 mixing tracks the f32
+        reference only to bf16 resolution — while f32 inputs are exact."""
+        _, w, params32 = _setup()
+        ref = D.mix_dense(w, params32)
+        params16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params32)
+        out16 = D.mix_dense(w, params16)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out16)):
+            assert b.dtype == jnp.bfloat16  # cast back to the leaf dtype
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b, dtype=np.float32),
+                rtol=0.05, atol=0.05,
+            )
+        # f32 leaves really do take the tight path
+        out32 = D.mix_dense(w, params32)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out32)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_per_call_backend_override_does_not_mutate_engine(self):
+        """mix(backend=...) is call-local: it must not change the engine's
+        resolved backend, mesh, or the cached layouts its own backend uses."""
+        g, w, params = _setup()
+        e = D.GossipEngine(g, backend="dense")
+        assert e.mesh is None and e.backend == "dense"
+        want = D.mix_dense(e.w, params)
+        for override in ("sparse", "sparse_sharded", "pallas"):
+            got = e.mix(params, backend=override)
+            for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
+                    err_msg=override,
+                )
+            # sparse_sharded builds a call-local default mesh; none of the
+            # overrides may leak into the engine's capability surface
+            assert e.mesh is None and e.backend == "dense", override
+        got = e.mix(params)  # the engine's own backend still works after
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_halo_schedule_validated(self):
+        g, _, _ = _setup()
+        with pytest.raises(ValueError, match="halo_schedule"):
+            D.GossipEngine(g, halo_schedule="spiral")
+
     @requires_axis_type
     def test_dense_vs_shardmap_subprocess(self):
         """shard_map schedules need >1 device: run with 8 fake CPU devices."""

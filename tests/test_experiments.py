@@ -227,6 +227,135 @@ class TestRunner:
         assert deg[holders].min() >= np.sort(deg)[::-1][len(holders) - 1]
 
 
+class TestBugfixRegressions:
+    def test_graph_records_cover_every_schedule_period(self):
+        """@regen/@rewire runs must not report period-0 graph properties as
+        if they described the whole run (the old _graph_record-from-
+        graph_at(0) bug)."""
+        from repro.core import decavg as D
+
+        e = D.GossipEngine("er:n=8,p=0.6@regen=2", seed=3)
+        out = runner._graph_records(e, rounds=6)
+        assert out["graph_num_periods"] == 3
+        assert out["graph"]["period"] == 0
+        assert [r["period"] for r in out["graph_periods"]] == [0, 1, 2]
+        gaps = [r["spectral_gap"] for r in out["graph_periods"]]
+        assert all(np.isfinite(g) for g in gaps)
+        assert out["graph_mean"]["spectral_gap"] == pytest.approx(np.mean(gaps))
+        assert "period" not in out["graph_mean"]
+        # a static topology keeps the old single-record shape
+        static = runner._graph_records(D.GossipEngine("ring:n=8"), rounds=6)
+        assert static["graph_num_periods"] == 1
+        assert "graph_periods" not in static and "graph_mean" not in static
+
+    def test_summarize_prefers_period_mean_over_period0(self, tmp_path):
+        st = ResultsStore(str(tmp_path / "r.jsonl"))
+        st.run_start("x", {"topology": "er:n=8,p=0.5@regen=2",
+                           "partitioner": "iid", "seed": 0})
+        st.round("x", {"round": 0, "mean_acc": 0.5})
+        st.run_end("x", "completed", final={
+            "mean_acc": 0.5,
+            "graph": {"nodes": 8, "spectral_gap": 0.9, "degree_mean": 4.0,
+                      "period": 0},
+            "graph_num_periods": 2,
+            "graph_mean": {"spectral_gap": 0.6, "degree_mean": 3.5},
+        })
+        (row,) = analysis.summarize(st)
+        assert row["spectral_gap"] == pytest.approx(0.6)  # mean, not period 0
+        assert row["degree_mean"] == pytest.approx(3.5)
+        assert row["nodes"] == 8 and row["topology_periods"] == 2
+
+    def test_rewire_run_records_per_period_graphs_end_to_end(self, tmp_path):
+        spec = ExperimentSpec(topology="er:n=6,p=0.6@regen=1", **TINY)
+        out = runner.run_spec(spec, ResultsStore(str(tmp_path / "r.jsonl")))
+        assert out["status"] == "completed"
+        final = out["final"]
+        assert final["graph_num_periods"] == TINY["rounds"]
+        assert len(final["graph_periods"]) == TINY["rounds"]
+        assert "spectral_gap" in final["graph_mean"]
+
+    def test_consensus_distance_empty_pytree(self):
+        from repro.train.metrics import consensus_distance
+
+        out = np.asarray(consensus_distance({}))
+        assert out.shape == (0,) and out.dtype == np.float32
+        out = np.asarray(consensus_distance([]))
+        assert out.shape == (0,)
+
+    def test_stale_shards_salvaged_on_next_sweep(self, tmp_path):
+        """A worker that died mid-run leaves its shard + the .shards dir
+        behind; the next sweep must merge complete shards (skipped on
+        resume), re-run partial ones, and drop the directory."""
+        done_spec = ExperimentSpec(topology="ring:n=6", **TINY)
+        partial_spec = ExperimentSpec(topology="star:n=6", **TINY)
+        store_path = str(tmp_path / "r.jsonl")
+        shard_dir = store_path + ".shards"
+        os.makedirs(shard_dir)
+        # complete shard: parent was killed after the worker finished but
+        # before the merge
+        done_shard = ResultsStore(os.path.join(shard_dir, f"{done_spec.run_id}.jsonl"))
+        done_shard.run_start(done_spec.run_id, done_spec.to_json())
+        done_shard.round(done_spec.run_id, {"round": 0, "mean_acc": 0.5})
+        done_shard.run_end(done_spec.run_id, "completed", final={"mean_acc": 0.5})
+        # stuck shard: worker died mid-run, no run_end
+        stuck = ResultsStore(os.path.join(shard_dir, f"{partial_spec.run_id}.jsonl"))
+        stuck.run_start(partial_spec.run_id, partial_spec.to_json())
+        # stale = old: the startup salvage's age floor must not mistake these
+        # for a concurrent sweep's in-flight shards
+        for f in os.listdir(shard_dir):
+            os.utime(os.path.join(shard_dir, f), (1, 1))
+        summary = runner.run_sweep([done_spec, partial_spec], store_path)
+        assert not os.path.exists(shard_dir)
+        assert summary["skipped"] == 1  # salvaged complete shard counts
+        assert summary["ran"] == 1 and not summary["failed"]  # partial re-ran
+        st = ResultsStore(store_path)
+        assert st.completed() == {done_spec.run_id, partial_spec.run_id}
+
+    def test_salvage_tolerates_missing_dir(self, tmp_path):
+        st = ResultsStore(str(tmp_path / "r.jsonl"))
+        assert runner._salvage_shards(st, st.path + ".shards", False) == 0
+
+    def test_salvage_age_floor_spares_inflight_shards(self, tmp_path):
+        """A concurrent sweep's freshly-written shard must not be merged and
+        deleted out from under its writer."""
+        st = ResultsStore(str(tmp_path / "r.jsonl"))
+        shard_dir = st.path + ".shards"
+        os.makedirs(shard_dir)
+        fresh = os.path.join(shard_dir, "live.jsonl")
+        ResultsStore(fresh).run_start("live", {})
+        assert runner._salvage_shards(st, shard_dir, False, min_age_s=60.0) == 0
+        assert os.path.exists(fresh)  # left for its writer
+        assert runner._salvage_shards(st, shard_dir, False) == 1  # age 0: take it
+        assert not os.path.exists(shard_dir)
+
+    def test_multiprocess_sweep_merges_and_cleans_up(self, tmp_path):
+        specs = [
+            ExperimentSpec(topology="ring:n=6", **TINY),
+            ExperimentSpec(topology="star:n=6", **TINY),
+        ]
+        store_path = str(tmp_path / "r.jsonl")
+        summary = runner.run_sweep(specs, store_path, processes=2)
+        assert summary["ran"] == 2 and not summary["failed"]
+        assert not os.path.exists(store_path + ".shards")
+        st = ResultsStore(store_path)
+        assert st.completed() == {s.run_id for s in specs}
+
+    def test_graph_records_sampled_above_period_cap(self, monkeypatch):
+        """Hundreds of @regen=1 periods must not mean hundreds of post-run
+        eigensolves: records are evenly sampled, true count preserved."""
+        from repro.core import decavg as D
+
+        monkeypatch.setattr(runner, "_MAX_GRAPH_PERIODS", 4)
+        e = D.GossipEngine("er:n=8,p=0.6@regen=1", seed=0)
+        out = runner._graph_records(e, rounds=10)
+        assert out["graph_num_periods"] == 10
+        assert out["graph_periods_sampled"] is True
+        assert len(out["graph_periods"]) == 4
+        periods = [r["period"] for r in out["graph_periods"]]
+        assert periods[0] == 0 and periods[-1] == 9  # endpoints always kept
+        assert "spectral_gap" in out["graph_mean"]
+
+
 class TestAnalysis:
     def _fabricated_store(self, tmp_path) -> ResultsStore:
         """Hand-written records with a known hub > edge ordering."""

@@ -82,6 +82,45 @@ def test_shard_csr_round_trip(n, p, seed):
         np.testing.assert_allclose(rec, w.astype(np.float32), atol=1e-7)
 
 
+@given(st.integers(2, 40), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_ring_peer_slot_round_trip(n, p, seed):
+    """The ring halo exchange's peer/slot metadata reassembles exactly the
+    halo buffer the segment-sum consumes: simulating the schedule in numpy
+    (local copies + S-1 pairwise sends) and summing reproduces W @ P."""
+    w, _ = _random_w(n, p, seed)
+    csr = S.csr_from_dense(w)
+    x = np.random.default_rng(seed).standard_normal((n, 3)).astype(np.float32)
+    for shards in (s for s in (1, 2, 4) if n % s == 0):
+        sh = S.shard_csr(csr, shards)
+        blk, h = sh.rows_per_shard, sh.halo_width
+        blocks = x.reshape(shards, blk, -1)
+        out = np.zeros_like(x)
+        for s in range(shards):
+            buf = np.zeros((h + 1, x.shape[1]), np.float32)  # scratch at H
+            buf[np.asarray(sh.local_dst[s])] = blocks[s][np.asarray(sh.local_src[s])]
+            written = set(np.asarray(sh.local_dst[s]).tolist())
+            for d, (send, recv) in enumerate(zip(sh.ring_send, sh.ring_recv), 1):
+                o = (s - d) % shards
+                send_o = np.asarray(send[o])
+                recv_s = np.asarray(recv[s])
+                # sender-side indices stay inside the sender's block; slots
+                # stay inside the halo buffer (+ scratch)
+                assert np.all((send_o >= 0) & (send_o < blk)), (shards, d)
+                assert np.all((recv_s >= 0) & (recv_s <= h)), (shards, d)
+                buf[recv_s] = blocks[o][send_o]
+                written.update(recv_s.tolist())
+            # every slot the shard's entries reference was actually delivered
+            cols = np.asarray(sh.cols[s])
+            vals = np.asarray(sh.values[s])
+            assert set(cols[vals != 0].tolist()) <= written, shards
+            contrib = buf[cols] * vals[:, None]
+            np.add.at(out[s * blk:(s + 1) * blk], np.asarray(sh.rows[s]), contrib)
+        np.testing.assert_allclose(
+            out, w.astype(np.float32) @ x, rtol=1e-5, atol=1e-5
+        )
+
+
 @given(st.integers(1, 1 << 24), st.integers(1 << 10, 1 << 24))
 @settings(max_examples=50, deadline=None)
 def test_auto_p_chunk_bounds(nnz, budget):
