@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test coverage bench-mixing bench-wire bench quickstart install sweep-smoke sweep-paper
+.PHONY: verify test coverage bench-mixing bench-wire bench-rounds bench quickstart install sweep-smoke sweep-paper
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -30,6 +30,9 @@ bench-mixing:  ## dense vs sparse gossip sweep + halo wire volumes -> BENCH_mixi
 
 bench-wire:  ## wire-volume model only (allgather vs ring halo, S=8, fast)
 	$(PY) benchmarks/bench_mixing.py --sizes "" --out BENCH_mixing_wire.json
+
+bench-rounds:  ## fused (one lax.scan) vs Python-loop rounds/s -> BENCH_rounds.json
+	$(PY) benchmarks/bench_rounds.py
 
 bench:  ## quick paper-figure benchmark harness
 	$(PY) benchmarks/run.py

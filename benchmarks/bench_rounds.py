@@ -1,0 +1,142 @@
+"""Fused-vs-loop training throughput: rounds/s over a full multi-round run.
+
+The Python-loop trainer pays per round: host-side batch gather, a
+device transfer, and a jit dispatch (plus a re-trace at every schedule
+period before PR 5). ``run_fused`` compiles the whole run into lax.scan
+chunks — one dispatch per eval (a single scan when no eval runs) with
+batches sampled on device — so the gap between the two is pure
+orchestration overhead, the quantity this benchmark pins.
+
+Per row (the acceptance config is N=100 / 200 rounds on CPU):
+
+  - loop_rounds_per_s / fused_rounds_per_s: whole-run throughput, timed on
+    a second run after a warm-up run has paid all compiles.
+  - speedup: fused / loop (CI guards >= 2x on the N=100 dense row).
+  - max_abs_param_err: fused-vs-loop parameter agreement for the row's
+    config (same seed, fresh trainers) — the speed claim is only worth
+    reporting if the two paths still compute the same thing.
+
+Emits BENCH_rounds.json at the repo root.
+
+Run:  PYTHONPATH=src python benchmarks/bench_rounds.py [--rounds 200]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import partition as P
+from repro.data.loader import NodeLoader
+from repro.data.synthetic import make_mnist_like
+from repro.models.mlp import init_mlp
+from repro.train.trainer import DecentralizedTrainer
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_rounds.json")
+
+# Small members on purpose: the bench isolates per-round *orchestration*
+# overhead (host sampling, transfer, dispatch), so per-round compute must not
+# drown it. large_n-preset-sized members (hidden=[64]) shift both paths by
+# the same compute constant; the fused win converges to 1x as members grow.
+DIM = 32
+HIDDEN = (32,)
+BATCH = 16
+
+
+def make_trainer(n: int, backend: str, ds, seed: int = 0) -> DecentralizedTrainer:
+    parts = P.iid(ds.y_train, n, seed=seed)
+    loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=BATCH, seed=seed)
+    return DecentralizedTrainer(
+        f"ba:n={n},m=2",
+        loader,
+        lr=0.05,
+        momentum=0.9,
+        mix_impl=backend,
+        seed=seed,
+        init_fn=lambda k: init_mlp(k, in_dim=DIM, hidden=HIDDEN, num_classes=10),
+    )
+
+
+def _time_run(run, rounds: int, reps: int = 3) -> float:
+    """Best-of-``reps`` whole-run wall clock (after one compile warm-up).
+
+    Best-of, not mean: transient CPU contention on shared runners only ever
+    slows a run down, and it biases both paths identically.
+    """
+    run(rounds)  # warm-up: pays every compile in the path
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run(rounds)
+        jax.block_until_ready(jax.tree.leaves(run.__self__.params))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _param_err(n: int, backend: str, ds, rounds: int) -> float:
+    """Fused-vs-loop divergence over the SAME round count the row reports."""
+    a = make_trainer(n, backend, ds)
+    a.run(rounds)
+    b = make_trainer(n, backend, ds)
+    b.run_fused(rounds)
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params))
+    )
+
+
+def bench_one(n: int, backend: str, rounds: int, ds) -> dict:
+    loop_s = _time_run(make_trainer(n, backend, ds).run, rounds)
+    fused_s = _time_run(make_trainer(n, backend, ds).run_fused, rounds)
+    row = {
+        "n": n,
+        "backend": backend,
+        "rounds": rounds,
+        "loop_rounds_per_s": round(rounds / loop_s, 1),
+        "fused_rounds_per_s": round(rounds / fused_s, 1),
+        "speedup": round(loop_s / fused_s, 2),
+        "max_abs_param_err": _param_err(n, backend, ds, rounds),
+    }
+    print(
+        f"n={n:4d} {backend:6s} loop {row['loop_rounds_per_s']:8.1f} r/s   "
+        f"fused {row['fused_rounds_per_s']:8.1f} r/s   "
+        f"speedup {row['speedup']:.2f}x   err {row['max_abs_param_err']:.2e}"
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    ds = make_mnist_like(train_per_class=200, test_per_class=50, dim=DIM, seed=0)
+    rows = [
+        # the acceptance row: N=100 dense at the full round count
+        bench_one(100, "dense", args.rounds, ds),
+        # informational: the sparse program at larger N, fewer rounds
+        bench_one(256, "sparse", max(args.rounds // 2, 10), ds),
+    ]
+    out = {
+        "bench": "fused vs loop training rounds/s (benchmarks/bench_rounds.py)",
+        "device": str(jax.devices()[0]),
+        "config": {
+            "topology": "ba:m=2", "dim": DIM, "hidden": list(HIDDEN),
+            "batch": BATCH, "lr": 0.05, "momentum": 0.9, "eval": "none (pure training)",
+        },
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,8 +31,13 @@ class CompressState(NamedTuple):
 
 
 def init(params: PyTree) -> CompressState:
+    # Genuine copies, not astype views: astype(f32) on f32 leaves returns the
+    # SAME buffer, and a reference that aliases params breaks callers that
+    # donate both to one jitted step ("donate the same buffer twice").
     return CompressState(
-        reference=jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        reference=jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+        )
     )
 
 

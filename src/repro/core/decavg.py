@@ -31,7 +31,11 @@ per-device wire to O(H·P).
 topology (static graph or TopologySchedule), builds + caches the mixing
 matrix per schedule period, capability-checks the requested backend, and
 applies the per-round gossip cadence (``gossip_every`` / identity rounds)
-that call sites used to reimplement inline.
+that call sites used to reimplement inline. For fused runs,
+``GossipEngine.program(rounds)`` materializes *all* schedule periods up
+front as a ``MixingProgram`` (stacked dense W or uniformly padded stacked
+CSR) whose per-round operator is selected by index inside a ``lax.scan``
+body — no per-period re-jit (train/trainer.py ``run_fused``).
 
 Precision contract: the sparse and shard_map paths accumulate in float32
 regardless of parameter dtype, then cast back. The dense einsum path
@@ -45,6 +49,7 @@ agreement matters.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Literal
 
@@ -55,6 +60,7 @@ from jax.sharding import PartitionSpec as P
 
 __all__ = [
     "GossipEngine",
+    "MixingProgram",
     "mix_dense",
     "mix_pallas",
     "mix_sharded",
@@ -373,6 +379,104 @@ def mix_permute(
 
 
 # ---------------------------------------------------------------------------
+# MixingProgram: all schedule periods staged up front for a fused lax.scan
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w", "rows", "cols", "values", "period_idx", "gossip_mask"),
+    meta_fields=("kind", "n", "num_periods", "cadence", "p_chunk"),
+)
+@dataclasses.dataclass(frozen=True)
+class MixingProgram:
+    """Every schedule period of a run, materialized as stacked operators.
+
+    The Python training loop rebuilds (and re-traces against) one mixing
+    matrix per schedule period. A fused run cannot: the whole multi-round
+    program is a single ``lax.scan``, so *all* periods must exist on device
+    before the scan starts and the body must select the current period by
+    index. ``GossipEngine.program(rounds)`` builds one of these:
+
+    - kind "dense":  ``w`` is (T, N, N) — the body gathers ``w[period_idx[r]]``
+      and runs the ordinary per-leaf contraction.
+    - kind "sparse": per-period CSRs padded to a uniform nnz and stacked as
+      (T, E) ``rows``/``cols``/``values``. Padding entries carry weight 0 and
+      point at row N-1 / column 0 (appended after the sorted real entries, so
+      segment ids stay sorted) — they add exact zeros.
+
+    ``period_idx`` maps the global round index to the stacked period slot;
+    ``gossip_mask`` carries the ``gossip_every`` cadence. ``cadence`` is the
+    trace-time shortcut: "always" skips the ``lax.cond`` entirely
+    (gossip_every == 1), "never" makes ``mix_at`` the identity
+    (gossip_every == 0), "mask" selects per round inside the scan body.
+
+    Registered as a pytree so it passes through ``jax.jit`` as data: a fused
+    chunk retraces on a new *shape* (different T/E/rounds), never on new
+    values (a different seed's schedule reuses the compiled program).
+    """
+
+    kind: str  # "dense" | "sparse"
+    n: int
+    num_periods: int
+    cadence: str  # "always" | "never" | "mask"
+    period_idx: jax.Array  # (rounds,) int32: round -> stacked period slot
+    gossip_mask: jax.Array  # (rounds,) bool
+    p_chunk: int | None = None  # sparse gather feature-axis chunk (see sparse.mix_sparse)
+    w: jax.Array | None = None  # (T, N, N) f32, kind == "dense"
+    rows: jax.Array | None = None  # (T, E) int32, kind == "sparse"
+    cols: jax.Array | None = None  # (T, E) int32
+    values: jax.Array | None = None  # (T, E) f32
+
+    @property
+    def rounds(self) -> int:
+        return int(self.period_idx.shape[0])
+
+    def apply(self, params: PyTree, r: jax.Array) -> PyTree:
+        """One unconditional mixing round with round ``r``'s operator
+        (``r`` may be a tracer inside a scan body)."""
+        t = self.period_idx[r]
+        if self.kind == "dense":
+            return mix_dense(self.w[t], params)
+        rows, cols, values = self.rows[t], self.cols[t], self.values[t]
+
+        def seg(flat: jax.Array) -> jax.Array:
+            gathered = flat[cols] * values[:, None]  # (E, pc)
+            return jax.ops.segment_sum(
+                gathered, rows, num_segments=self.n, indices_are_sorted=True
+            )
+
+        def leaf(l: jax.Array) -> jax.Array:
+            flat = l.reshape(self.n, -1).astype(jnp.float32)
+            p = flat.shape[1]
+            if self.p_chunk is not None and self.p_chunk < p:
+                # Same transient bound as sparse.mix_sparse(p_chunk=...):
+                # serialized feature-axis chunks keep the gather buffer at
+                # O(E * p_chunk) inside the scan body too.
+                pad = (-p) % self.p_chunk
+                if pad:
+                    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+                chunks = flat.reshape(self.n, -1, self.p_chunk).transpose(1, 0, 2)
+                out = jax.lax.map(seg, chunks)
+                out = out.transpose(1, 0, 2).reshape(self.n, -1)[:, :p]
+            else:
+                out = seg(flat)
+            return out.reshape(l.shape).astype(l.dtype)
+
+        return jax.tree.map(leaf, params)
+
+    def mix_at(self, params: PyTree, r: jax.Array) -> PyTree:
+        """``apply`` gated by the gossip cadence (identity on skip rounds)."""
+        if self.cadence == "never":
+            return params
+        if self.cadence == "always":
+            return self.apply(params, r)
+        return jax.lax.cond(
+            self.gossip_mask[r], lambda p: self.apply(p, r), lambda p: p, params
+        )
+
+
+# ---------------------------------------------------------------------------
 # GossipEngine: one capability-checked front door over every mixing path
 # ---------------------------------------------------------------------------
 
@@ -635,6 +739,80 @@ class GossipEngine:
         if self.gossip_every < 1:
             return False
         return self.gossip_every == 1 or round % self.gossip_every == 0
+
+    def program(self, rounds: int, *, kind: str | None = None) -> MixingProgram:
+        """Stage every schedule period of a ``rounds``-long run up front.
+
+        Returns a ``MixingProgram`` — stacked per-period operators plus the
+        round -> period map and the gossip cadence — for the fused
+        single-``lax.scan`` training path. ``kind`` defaults to "sparse" for
+        the sparse backends and "dense" otherwise. The engine's current
+        period state is restored to round 0 afterwards, so an interleaved
+        Python-loop run sees the same state it would have without this call.
+        """
+        from repro.core import sparse
+
+        rounds = int(rounds)
+        if rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {rounds}")
+        if kind is None:
+            kind = (
+                "sparse"
+                if self.backend in ("sparse", "sparse_pallas", "sparse_sharded")
+                else "dense"
+            )
+        if kind not in ("dense", "sparse"):
+            raise ValueError(f"program kind must be 'dense' or 'sparse', got {kind!r}")
+        first_round: dict[int, int] = {}
+        for r in range(rounds):
+            first_round.setdefault(self.schedule.period_of(r), r)
+        period_list = sorted(first_round)
+        slot = {p: i for i, p in enumerate(period_list)}
+        period_idx = np.array(
+            [slot[self.schedule.period_of(r)] for r in range(rounds)], np.int32
+        )
+        gossip_mask = np.array([self.is_gossip_round(r) for r in range(rounds)], bool)
+        ws = [np.asarray(self.w_at(first_round[p])) for p in period_list]
+        self.refresh(0)  # leave the engine where a fresh run expects it
+        cadence = (
+            "never" if self.gossip_every < 1
+            else "always" if self.gossip_every == 1
+            else "mask"
+        )
+        common = dict(
+            n=self.num_nodes,
+            num_periods=len(ws),
+            cadence=cadence,
+            period_idx=jnp.asarray(period_idx),
+            gossip_mask=jnp.asarray(gossip_mask),
+        )
+        if kind == "dense":
+            return MixingProgram(kind="dense", w=jnp.asarray(np.stack(ws)), **common)
+        csrs = [sparse.csr_from_dense(w) for w in ws]
+        e_max = max(c.nnz for c in csrs)
+        p_chunk = self.sparse_p_chunk
+        if p_chunk == "auto":
+            # Size from the padded entry count: the in-scan gather transient
+            # is O(e_max * chunk) per leaf, same bound as the loop path's.
+            p_chunk = sparse.auto_p_chunk(e_max)
+        n = self.num_nodes
+        rows = np.full((len(csrs), e_max), n - 1, np.int32)
+        cols = np.zeros((len(csrs), e_max), np.int32)
+        values = np.zeros((len(csrs), e_max), np.float32)
+        for t, c in enumerate(csrs):
+            # Real entries first (rows sorted ascending), zero-weight padding
+            # at row n-1 after them — segment ids stay sorted, sums are exact.
+            rows[t, : c.nnz] = np.asarray(c.rows)
+            cols[t, : c.nnz] = np.asarray(c.indices)
+            values[t, : c.nnz] = np.asarray(c.values)
+        return MixingProgram(
+            kind="sparse",
+            rows=jnp.asarray(rows),
+            cols=jnp.asarray(cols),
+            values=jnp.asarray(values),
+            p_chunk=None if p_chunk is None else int(p_chunk),
+            **common,
+        )
 
     # -- mixing --------------------------------------------------------------
 

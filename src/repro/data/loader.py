@@ -7,13 +7,66 @@ per round from their own pool — matching the paper's "equal share per
 assigned class" setup where nodes holding extra classes simply have more
 local data (their epoch covers more batches; we keep steps uniform and let
 alpha_ij in the mixing matrix carry the |D_j| weighting, as Eq. 1 does).
+
+Two sampling modes share one index-generation rule:
+
+- host (``sample_round(steps)``): the legacy stateful numpy-RNG path.
+- round-keyed (``sample_round(steps, round=r)`` and the fused trainer's
+  in-scan sampler): batch indices are a *pure function* of
+  ``(seed, round)`` via ``round_batch_indices`` (jax.random, so the exact
+  same bits come out on host and inside a jitted ``lax.scan``). This is
+  what makes the fused single-scan run and the Python loop draw identical
+  batches — the fused-vs-loop equivalence tests rest on it.
+
+``device_data()`` stages the dataset once as device arrays (the full
+(T, D) image bank plus padded per-node index pools, O(T·D + N·M) memory —
+not the O(N·M·D) a per-node copy would cost), so the fused path never
+transfers batches from the host.
 """
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["NodeLoader"]
+__all__ = ["NodeLoader", "DeviceData", "round_batch_indices"]
+
+
+class DeviceData(NamedTuple):
+    """The loader's dataset staged on device for in-scan sampling.
+
+    x/y are the *shared* banks; ``parts`` maps (node, pool position) to a
+    bank row (zero-padded past ``sizes[n]`` — round_batch_indices never
+    produces an index beyond the node's true pool). ``key`` seeds the
+    round-keyed batch sampler.
+    """
+
+    x: jax.Array  # (T, ...) full image bank
+    y: jax.Array  # (T,) int32 labels
+    parts: jax.Array  # (N, M) int32 rows of x/y per node, zero-padded
+    sizes: jax.Array  # (N,) int32 true pool sizes
+    key: jax.Array  # PRNG key (pure function of the loader seed)
+
+
+def round_batch_indices(
+    key: jax.Array, round: int | jax.Array, steps: int, batch: int, sizes: jax.Array
+) -> jax.Array:
+    """(steps, N, B) with-replacement pool positions for one round.
+
+    Pure function of ``(key, round)`` — jax.random is deterministic across
+    the jit boundary, so the Python loop (eager, host) and the fused scan
+    body (traced, ``round`` a tracer) draw bit-identical indices. Positions
+    are uniform over ``[0, sizes[n])`` per node via a modulo draw from the
+    full int32 range (bias O(size / 2^31), far below sampling noise).
+    """
+    k = jax.random.fold_in(key, round)
+    raw = jax.random.randint(
+        k, (steps, sizes.shape[0], batch), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+    )
+    return raw % sizes[None, :, None]
 
 
 class NodeLoader:
@@ -29,22 +82,67 @@ class NodeLoader:
         self.x, self.y = x, y
         self.parts = parts
         self.batch = batch_size
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.num_nodes = len(parts)
         self.sizes = np.array([len(p) for p in parts], dtype=np.int64)
+        self._device_data: DeviceData | None = None
+        self._sampler_state: tuple[jax.Array, jax.Array] | None = None
 
     def steps_per_epoch(self) -> int:
         """Uniform local steps per round: one pass of the *median* node."""
         return max(1, int(np.median(self.sizes)) // self.batch)
 
-    def sample_round(self, steps: int):
-        """(steps, N, B, ...) batches, sampled per node with replacement."""
+    def _check_nonempty(self) -> None:
+        empty = np.flatnonzero(self.sizes == 0)
+        if empty.size:
+            raise ValueError(f"node {int(empty[0])} has an empty dataset")
+
+    def device_data(self) -> DeviceData:
+        """Stage the dataset as device arrays once (cached); see DeviceData."""
+        if self._device_data is None:
+            self._check_nonempty()
+            m = int(self.sizes.max())
+            pools = np.zeros((self.num_nodes, m), dtype=np.int32)
+            for n, p in enumerate(self.parts):
+                pools[n, : len(p)] = p
+            self._device_data = DeviceData(
+                x=jnp.asarray(self.x),
+                y=jnp.asarray(self.y.astype(np.int32)),
+                parts=jnp.asarray(pools),
+                sizes=jnp.asarray(self.sizes.astype(np.int32)),
+                key=jax.random.PRNGKey(self.seed),
+            )
+        return self._device_data
+
+    def sample_round(self, steps: int, *, round: int | None = None):
+        """(steps, N, B, ...) batches, sampled per node with replacement.
+
+        With ``round`` given, indices come from the round-keyed pure sampler
+        (identical draws to the fused in-scan path — and re-calling with the
+        same round re-yields the same batches). Without it, the legacy
+        stateful numpy RNG path is used.
+        """
+        self._check_nonempty()
         xs = np.empty((steps, self.num_nodes, self.batch) + self.x.shape[1:], self.x.dtype)
         ys = np.empty((steps, self.num_nodes, self.batch), self.y.dtype)
+        if round is not None:
+            if self._sampler_state is None:  # key/sizes staged once, not per round
+                self._sampler_state = (
+                    jax.random.PRNGKey(self.seed),
+                    jnp.asarray(self.sizes.astype(np.int32)),
+                )
+            key, sizes = self._sampler_state
+            idx = np.asarray(
+                round_batch_indices(key, round, steps, self.batch, sizes)
+            )
+            for n, p in enumerate(self.parts):
+                rows = p[idx[:, n]]
+                xs[:, n] = self.x[rows]
+                ys[:, n] = self.y[rows]
+            return xs, ys
         for n, p in enumerate(self.parts):
-            if len(p) == 0:
-                raise ValueError(f"node {n} has an empty dataset")
-            idx = self.rng.choice(p, size=(steps, self.batch), replace=True)
-            xs[:, n] = self.x[idx]
-            ys[:, n] = self.y[idx]
+            i = self.rng.choice(p, size=(steps, self.batch), replace=True)
+            xs[:, n] = self.x[i]
+            ys[:, n] = self.y[i]
         return xs, ys

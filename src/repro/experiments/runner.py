@@ -7,7 +7,9 @@ Two executors, dispatched on ``spec.model["kind"]``:
   per-node accuracy stats, G1/G2 class-group accuracy (overall, on the focus
   nodes holding G2 data, and on the *spread* nodes that never saw G2 — the
   paper's knowledge-spread quantity), consensus distance ||theta_i - theta_bar||
-  and wall-clock.
+  and wall-clock. Runs through the fused single-``lax.scan`` trainer path
+  (``run_fused``) whenever the resolved backend supports it; set
+  ``model={"fused": False}`` to force the per-round Python loop.
 - ``lm``: the LLM-cohort loop (token batches, transformer members, AdamW /
   SGD + LR schedule). ``launch/train.py`` is a thin CLI wrapper building one
   such spec.
@@ -173,6 +175,7 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
         matrix=spec.matrix,
         sparse_p_chunk=spec.model.get("sparse_p_chunk"),
         gossip_every=spec.gossip_every,
+        compress=spec.model.get("compress"),
         same_init=spec.same_init,
         seed=spec.seed,
         num_classes=num_classes,
@@ -209,7 +212,13 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
                 f"g2_spread {rec['g2_acc_spread']}  cons {rec['consensus_mean']:.3g}"
             )
 
-    trainer.run(
+    # Fused single-scan path by default for the backends that support it
+    # (dense/sparse after "auto" resolution): one device dispatch per eval
+    # instead of one per round. model={"fused": False} opts a spec out
+    # (debugging, or backends the MixingProgram can't stage).
+    use_fused = bool(spec.model.get("fused", True)) and trainer.supports_fused
+    run = trainer.run_fused if use_fused else trainer.run
+    run(
         spec.rounds,
         eval_every=spec.eval_every,
         x_test=ds.x_test,

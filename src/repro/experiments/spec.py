@@ -56,8 +56,10 @@ class ExperimentSpec:
       model: model config; ``{"kind": "mlp", ...}`` (default) runs the
         paper-faithful DecentralizedTrainer (optional ``hidden=[...]`` for
         narrower members, ``sparse_p_chunk=int|"auto"`` to bound the sparse
-        gather transient at large N), ``{"kind": "lm", "arch": ...}`` runs
-        the LLM-cohort loop (launch/train.py is a thin wrapper over it).
+        gather transient at large N, ``fused=False`` to opt out of the fused
+        single-``lax.scan`` run path, ``compress=float`` for top-k gossip
+        delta compression), ``{"kind": "lm", "arch": ...}`` runs the
+        LLM-cohort loop (launch/train.py is a thin wrapper over it).
       tag: freeform grouping label — excluded from the run id.
     """
 

@@ -11,8 +11,29 @@ node-local and is *not* averaged (the paper gossips model weights only).
 
 The topology may be a built ``Graph``, a registry spec string
 (``"ba:n=100,m=2"``, with ``n`` defaulted from the loader), or a
-``TopologySchedule`` — time-varying graphs rebuild the mixing matrix (and
-re-jit the round) at each schedule period.
+``TopologySchedule``.
+
+Two execution paths over the same numerics:
+
+- ``run``: one Python iteration per round. The mixing operand (dense W or
+  CSR) is a *traced argument* of the round closure, so ``@regen``/``@rewire``
+  schedule periods reuse one compiled program instead of re-jitting (backends
+  that mix through engine-held static state fall back to a per-period cache
+  of jitted closures). Batches come from the loader's round-keyed sampler.
+- ``run_fused``: the whole run is ``lax.scan`` chunks of ``eval_every``
+  rounds inside one jit — the engine's ``MixingProgram`` stages every
+  schedule period up front, the loader's dataset is staged on device and
+  batch indices are generated *inside* the scan, and stacked round metrics
+  stream to ``on_round`` between chunks. Same seed => same params/metrics as
+  ``run`` (tests pin allclose at 1e-6); dense and sparse backends only. The
+  Python loop remains the fallback for verbose/debug and the other backends.
+
+``compress=`` (top-k fraction) turns on CHOCO-style gossip compression
+(core/compress.py): each gossip round every node transmits the top-k entries
+of ``params - reference``, peers mix the shared *reference* models, and
+``params += W @ ref - ref`` — at ``k_frac=1`` this is exactly DecAvg, at
+small k it cuts wire volume to k·|params| while reference tracking keeps the
+residual re-entering next round's selection.
 
 This trainer is the 100-node MNIST-scale reproduction engine; the LLM-cohort
 path with sharded nodes lives in launch/train.py.
@@ -21,6 +42,7 @@ path with sharded nodes lives in launch/train.py.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Sequence
 
@@ -28,9 +50,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compress as compress_mod
 from repro.core import decavg
 from repro.core.topology import Graph, TopologySchedule
-from repro.data.loader import NodeLoader
+from repro.data.loader import NodeLoader, round_batch_indices
 from repro.models.mlp import init_mlp, mlp_forward
 from repro.optim import sgd
 from repro.train.losses import softmax_xent
@@ -42,6 +65,16 @@ from repro.train.metrics import (
 )
 
 PyTree = Any
+
+# Backends whose mixing operand (dense W / CSR pytree) rides through the
+# round closure as a traced argument: one compiled program serves every
+# schedule period. The rest (engine-held static state: ELL layouts, meshes,
+# edge colorings) re-trace per period via the per-period jit cache.
+_OPERAND_BACKENDS = ("dense", "pallas", "sparse")
+
+# Backends run_fused supports: those whose per-period operators stack into a
+# MixingProgram (core/decavg.py) selectable by index inside a lax.scan.
+_FUSED_BACKENDS = ("dense", "sparse")
 
 
 @dataclasses.dataclass
@@ -72,6 +105,7 @@ class DecentralizedTrainer:
         matrix: str = "decavg",  # mixing matrix kind ("decavg"|"uniform"|"mh")
         sparse_p_chunk=None,  # int | "auto": bound the sparse gather transient
         gossip_every: int = 1,  # mix on rounds r % k == 0; 0 = isolated (no gossip)
+        compress: float | None = None,  # top-k fraction for gossip compression
         same_init: bool = True,
         seed: int = 0,
         init_fn: Callable[..., PyTree] | None = None,
@@ -88,11 +122,15 @@ class DecentralizedTrainer:
         )
         if mix_impl == "auto":
             mix_impl = self.engine.backend
+        self.mix_impl = mix_impl
         self.graph = self.engine.graph
         self.lr, self.mu = lr, momentum
         self.local_epochs = local_epochs
         self.num_nodes = self.engine.num_nodes
         self.num_classes = num_classes
+        if compress is not None and not 0.0 < float(compress) <= 1.0:
+            raise ValueError(f"compress (top-k fraction) must be in (0, 1], got {compress}")
+        self.compress = None if compress is None else float(compress)
         # class_groups maps class id -> group id (e.g. G1/G2 = 0/1); when set,
         # eval rounds also report per-node per-group accuracy.
         self.class_groups = (
@@ -105,14 +143,19 @@ class DecentralizedTrainer:
         self.forward = forward_fn or mlp_forward
 
         self.w = self.engine.w
-        # _mix reads the engine's current-period state; tests may still
-        # override self.w directly (dense path) and re-jit.
+        # _mix(op, params): op is the current-period mixing operand (dense W
+        # or CSR); engine-held backends ignore it and read engine state at
+        # trace time. Tests may still override self.w directly (dense path).
         if mix_impl == "dense":
             self._mix = decavg.mix_dense
         elif mix_impl == "pallas":
-            self._mix = decavg.mix_pallas
+            self._mix = lambda w, p: decavg.mix_pallas(
+                w, p, interpret=self.engine.interpret
+            )
+        elif mix_impl == "sparse":
+            self._mix = self._mix_sparse
         else:
-            self._mix = lambda w, p: self.engine.mix(p, backend=mix_impl)
+            self._mix = lambda op, p: self.engine.mix(p, backend=mix_impl)
 
         key = jax.random.PRNGKey(seed)
         if same_init:
@@ -124,13 +167,39 @@ class DecentralizedTrainer:
             keys = jax.random.split(key, self.num_nodes)
             self.params = jax.vmap(init_fn)(keys)
         self.opt_state = sgd.init(self.params)
-        self._round_jit = jax.jit(self._round)
-        self._local_jit = jax.jit(self._local_steps)  # non-gossip rounds
+        self.cstate = (
+            None if self.compress is None else compress_mod.init(self.params)
+        )
+        # donate_argnums on params/opt_state (and compress reference): the
+        # node-stacked pytrees are the footprint at N=4096 — without donation
+        # every round double-buffers them.
+        self._round_jit = jax.jit(self._round, donate_argnums=(1, 2, 3))
+        self._local_jit = jax.jit(self._local_steps, donate_argnums=(0, 1))
         self._eval_jit = jax.jit(self._eval)
         self._group_eval_jit = jax.jit(self._group_eval)
         self._consensus_jit = jax.jit(consensus_distance)
+        # Per-period cache for the engine-held backends (see _jit_for_period);
+        # the init-time jit serves period 0 so repeat runs never recompile it.
+        self._round_jit_cache: dict[int, Any] = {0: self._round_jit}
+        self._fused_chunk_jit = jax.jit(
+            self._fused_chunk,
+            static_argnames=("length", "do_eval"),
+            donate_argnums=(2, 3, 4),
+        )
 
     # -- jitted bodies ------------------------------------------------------
+
+    def _mix_sparse(self, csr, params):
+        from repro.core import sparse
+
+        p_chunk = self.engine.sparse_p_chunk
+        if p_chunk == "auto":
+            p_chunk = sparse.auto_p_chunk(csr.nnz)  # nnz is static under trace
+        return sparse.mix_sparse(csr, params, p_chunk=p_chunk)
+
+    def _mix_op(self):
+        """The current-period mixing operand passed into the round closure."""
+        return self.engine.csr if self.mix_impl == "sparse" else self.w
 
     def _local_steps(self, params, opt_state, xs, ys):
         """xs: (steps, N, B, D); one vmapped SGD step per element of steps."""
@@ -150,10 +219,34 @@ class DecentralizedTrainer:
         (params, opt_state), _ = jax.lax.scan(one_step, (params, opt_state), (xs, ys))
         return params, opt_state
 
-    def _round(self, params, opt_state, xs, ys):
+    def _gossip(self, mix, params, cstate):
+        """One gossip exchange via ``mix`` (a params->params mixing closure).
+
+        Without compression this is plain DecAvg. With it, the CHOCO update:
+        each node publishes the top-k of ``params - reference`` (advancing
+        the shared reference), peers average *references*, and the node keeps
+        its residual: ``params += W @ ref - ref``. k_frac=1 reduces exactly
+        to ``params = W @ params``.
+        """
+        if self.compress is None:
+            return mix(params), cstate
+        _, cstate = jax.vmap(
+            functools.partial(compress_mod.compress, k_frac=self.compress)
+        )(params, cstate)
+        ref = cstate.reference
+        mixed = mix(ref)
+        params = jax.tree.map(
+            lambda p, m, r: (p.astype(jnp.float32) + (m - r)).astype(p.dtype),
+            params, mixed, ref,
+        )
+        return params, cstate
+
+    def _round(self, op, params, opt_state, cstate, xs, ys):
         params, opt_state = self._local_steps(params, opt_state, xs, ys)
-        params = self._mix(self.w, params)
-        return params, opt_state
+        params, cstate = self._gossip(
+            functools.partial(self._mix, op), params, cstate
+        )
+        return params, opt_state, cstate
 
     def _eval(self, params, x_test, y_test):
         def node_metrics(p):
@@ -175,7 +268,97 @@ class DecentralizedTrainer:
 
         return jax.vmap(node_metrics)(params)
 
+    def _fused_chunk(
+        self, program, data, params, opt_state, cstate, start, x_test, y_test,
+        *, length: int, do_eval: bool,
+    ):
+        """``length`` rounds as one lax.scan, plus (optionally) one eval.
+
+        ``program`` is the engine's MixingProgram (all schedule periods
+        staged), ``data`` the loader's DeviceData; batch indices are
+        generated inside the scan from ``(data.key, round)`` — the same
+        draws the Python loop makes on the host.
+        """
+        steps = self.loader.steps_per_epoch() * self.local_epochs
+        node = jnp.arange(self.num_nodes)
+
+        def one_round(carry, r):
+            params, opt, cstate = carry
+            idx = round_batch_indices(data.key, r, steps, self.loader.batch, data.sizes)
+
+            def one_step(c, idx_s):
+                p, o = c
+                rows = data.parts[node[:, None], idx_s]  # (N, B) bank rows
+                x = data.x[rows]
+                y = data.y[rows]
+
+                def node_loss(pp, xb, yb):
+                    return softmax_xent(self.forward(pp, xb), yb)
+
+                grads = jax.vmap(jax.grad(node_loss))(p, x, y)
+                p, o = sgd.update(grads, o, p, lr=self.lr, mu=self.mu)
+                return (p, o), None
+
+            (params, opt), _ = jax.lax.scan(one_step, (params, opt), idx)
+            if self.compress is None:
+                params = program.mix_at(params, r)
+            else:
+                # Compression state must advance only on gossip rounds (the
+                # loop path's non-gossip rounds never touch it).
+                def do(args):
+                    p, cs = args
+                    return self._gossip(lambda q: program.apply(q, r), p, cs)
+
+                if program.cadence == "always":
+                    params, cstate = do((params, cstate))
+                elif program.cadence == "mask":
+                    params, cstate = jax.lax.cond(
+                        program.gossip_mask[r], do, lambda a: a, (params, cstate)
+                    )
+            return (params, opt, cstate), None
+
+        rs = start + jnp.arange(length)
+        (params, opt_state, cstate), _ = jax.lax.scan(
+            one_round, (params, opt_state, cstate), rs
+        )
+        if not do_eval:
+            return params, opt_state, cstate, None
+        if self.class_groups is not None:
+            accs, gaccs = self._group_eval(params, x_test, y_test)
+        else:
+            accs, _ = self._eval(params, x_test, y_test)
+            gaccs = None
+        cons = consensus_distance(params)
+        return params, opt_state, cstate, (accs, gaccs, cons)
+
+    def _jit_for_period(self, period: int):
+        """The round step for a new schedule period.
+
+        Operand backends reuse the one compiled program (the new W/CSR is
+        just a new argument value; a different per-period nnz re-traces by
+        shape, cached). Engine-held backends (sparse_pallas, sharded,
+        permute, ...) bake period state in at trace time, so they get one
+        jitted closure per period, cached across repeat visits/runs.
+        """
+        if self.mix_impl in _OPERAND_BACKENDS:
+            return self._round_jit
+        jitted = self._round_jit_cache.get(period)
+        if jitted is None:
+            jitted = jax.jit(self._round, donate_argnums=(1, 2, 3))
+            if len(self._round_jit_cache) >= 64:
+                # Bound compiled-program memory on long @regen runs (same cap
+                # as the engine's coloring cache); re-entering an evicted
+                # period just pays one re-jit.
+                self._round_jit_cache.pop(next(iter(self._round_jit_cache)))
+            self._round_jit_cache[period] = jitted
+        return jitted
+
     # -- public API ---------------------------------------------------------
+
+    @property
+    def supports_fused(self) -> bool:
+        """True when ``run_fused`` can execute this trainer's backend."""
+        return self.mix_impl in _FUSED_BACKENDS
 
     def eval_round(self, r: int, x_test, y_test, t0: float) -> RoundMetrics:
         """One evaluation pass over the current params as a RoundMetrics."""
@@ -192,6 +375,11 @@ class DecentralizedTrainer:
             r, accs, float(accs.mean()), float(accs.std()),
             group_acc=group_acc, consensus=cons, wall_s=time.perf_counter() - t0,
         )
+
+    @staticmethod
+    def _eval_rounds(rounds: int, eval_every: int) -> list[int]:
+        """Rounds after which both run paths evaluate/stream metrics."""
+        return [r for r in range(rounds) if r % eval_every == 0 or r == rounds - 1]
 
     def run(
         self,
@@ -214,20 +402,25 @@ class DecentralizedTrainer:
         steps = self.loader.steps_per_epoch() * self.local_epochs
         t0 = time.perf_counter()
         if gossip_first:
-            self.params = self._mix(self.w, self.params)
+            self.params = self._mix(self._mix_op(), self.params)
+        round_jit = self._round_jit
         for r in range(rounds):
             if self.engine.schedule.is_time_varying and self.engine.refresh(r):
-                # New schedule period: fresh W, re-jit the round closure.
+                # New schedule period: fresh W/CSR; one compiled program for
+                # operand backends, per-period cached closures for the rest.
                 self.w = self.engine.w
                 self.graph = self.engine.graph
-                self._round_jit = jax.jit(self._round)
-            xs, ys = self.loader.sample_round(steps)
-            step = (
-                self._round_jit if self.engine.is_gossip_round(r) else self._local_jit
-            )
-            self.params, self.opt_state = step(
-                self.params, self.opt_state, jnp.asarray(xs), jnp.asarray(ys)
-            )
+                round_jit = self._jit_for_period(self.engine.schedule.period_of(r))
+            xs, ys = self.loader.sample_round(steps, round=r)
+            if self.engine.is_gossip_round(r):
+                self.params, self.opt_state, self.cstate = round_jit(
+                    self._mix_op(), self.params, self.opt_state, self.cstate,
+                    jnp.asarray(xs), jnp.asarray(ys),
+                )
+            else:
+                self.params, self.opt_state = self._local_jit(
+                    self.params, self.opt_state, jnp.asarray(xs), jnp.asarray(ys)
+                )
             if x_test is not None and (r % eval_every == 0 or r == rounds - 1):
                 m = self.eval_round(r, x_test, y_test, t0)
                 history.append(m)
@@ -239,6 +432,80 @@ class DecentralizedTrainer:
                         f"round {r:4d}  acc mean {accs.mean():.4f} "
                         f"std {accs.std():.4f} min {accs.min():.4f} max {accs.max():.4f}"
                     )
+        return history
+
+    def run_fused(
+        self,
+        rounds: int,
+        *,
+        eval_every: int = 1,
+        x_test: np.ndarray | None = None,
+        y_test: np.ndarray | None = None,
+        gossip_first: bool = False,
+        verbose: bool = False,
+        on_round: Callable[[RoundMetrics], None] | None = None,
+    ) -> list[RoundMetrics]:
+        """``run`` compiled into lax.scan chunks — one dispatch per eval.
+
+        The whole multi-round program runs on device: every schedule period
+        is staged up front (``GossipEngine.program``), batches are sampled
+        inside the scan from the staged dataset, and ``gossip_every`` is a
+        select in the scan body. Rounds are scanned in chunks that end at
+        the eval rounds (``r % eval_every == 0`` plus the final round —
+        exactly ``run``'s cadence), and each chunk's RoundMetrics streams to
+        ``on_round`` before the next chunk launches, so consumers see the
+        same callback sequence as the Python loop. Without ``x_test`` the
+        entire run is a single scan.
+
+        Same seed => same params and metrics as ``run`` (allclose at f32
+        1e-6; pinned by tests/test_fused.py). Supported for the dense and
+        sparse backends; others raise (use ``run``).
+        """
+        if not self.supports_fused:
+            raise ValueError(
+                f"run_fused supports backends {_FUSED_BACKENDS}, not "
+                f"{self.mix_impl!r}; use run()"
+            )
+        if rounds < 1:
+            return []
+        program = self.engine.program(rounds, kind=self.mix_impl)
+        data = self.loader.device_data()
+        t0 = time.perf_counter()
+        if gossip_first:
+            self.params = self._mix(self._mix_op(), self.params)
+        do_eval = x_test is not None
+        if do_eval:
+            x_t, y_t = jnp.asarray(x_test), jnp.asarray(y_test)
+            ends = self._eval_rounds(rounds, eval_every)
+        else:
+            x_t = y_t = None
+            ends = [rounds - 1]
+        history: list[RoundMetrics] = []
+        prev = -1
+        for end in ends:
+            start, length = prev + 1, end - prev
+            prev = end
+            self.params, self.opt_state, self.cstate, metrics = self._fused_chunk_jit(
+                program, data, self.params, self.opt_state, self.cstate,
+                jnp.int32(start), x_t, y_t, length=length, do_eval=do_eval,
+            )
+            if not do_eval:
+                continue
+            accs, gaccs, cons = metrics
+            accs = np.asarray(accs)
+            m = RoundMetrics(
+                end, accs, float(accs.mean()), float(accs.std()),
+                group_acc=None if gaccs is None else np.asarray(gaccs),
+                consensus=np.asarray(cons), wall_s=time.perf_counter() - t0,
+            )
+            history.append(m)
+            if on_round is not None:
+                on_round(m)
+            if verbose:
+                print(
+                    f"round {end:4d}  acc mean {accs.mean():.4f} "
+                    f"std {accs.std():.4f} min {accs.min():.4f} max {accs.max():.4f}"
+                )
         return history
 
     def confusion(self, x_test: np.ndarray, y_test: np.ndarray) -> np.ndarray:

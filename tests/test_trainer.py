@@ -55,12 +55,12 @@ def test_knowledge_spread_vs_isolated(setup):
         return float(np.mean(accs))
 
     gossip = DecentralizedTrainer(g, loader, lr=0.05, momentum=0.9, seed=0)
-    gossip.run(10)
+    gossip.run(14)
     # isolated control: identity mixing (no edges used)
     isolated = DecentralizedTrainer(g, loader, lr=0.05, momentum=0.9, seed=0)
     isolated.w = jnp.eye(g.num_nodes)
     isolated._round_jit = jax.jit(isolated._round)
-    isolated.run(10)
+    isolated.run(14)
 
     assert g2_acc(isolated) < 0.12  # ~chance on unseen classes
     assert g2_acc(gossip) > g2_acc(isolated) + 0.15
