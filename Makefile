@@ -16,6 +16,11 @@ sweep-smoke:  ## 3-family smoke sweep (minutes, CPU) -> results/ + BENCH_sweep.j
 	$(PY) -m repro.experiments.sweep --preset smoke \
 	    --store results/sweep_smoke.jsonl --bench-out BENCH_sweep.json
 
+sweep-large-n-smoke:  ## tiny-N large_n stand-in: fused sparse_sharded end to end
+	$(PY) -m repro.experiments.sweep --preset large_n_smoke \
+	    --store results/sweep_large_n_smoke.jsonl \
+	    --bench-out BENCH_large_n_smoke.json
+
 sweep-paper:  ## the paper's N=100 matrix (ER/BA/SBM x splits x 3 seeds)
 	$(PY) -m repro.experiments.sweep --preset paper \
 	    --store results/sweep_paper.jsonl --bench-out BENCH_sweep.json

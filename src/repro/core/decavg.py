@@ -33,9 +33,13 @@ matrix per schedule period, capability-checks the requested backend, and
 applies the per-round gossip cadence (``gossip_every`` / identity rounds)
 that call sites used to reimplement inline. For fused runs,
 ``GossipEngine.program(rounds)`` materializes *all* schedule periods up
-front as a ``MixingProgram`` (stacked dense W or uniformly padded stacked
-CSR) whose per-round operator is selected by index inside a ``lax.scan``
-body — no per-period re-jit (train/trainer.py ``run_fused``).
+front as a ``MixingProgram`` (stacked dense W, uniformly padded stacked
+CSR, stacked blocked-ELL tiles, or stacked per-shard ``ShardedCSR``
+metadata) whose per-round operator is selected by index inside a
+``lax.scan`` body — no per-period re-jit (train/trainer.py ``run_fused``).
+For the sharded kind the ring/allgather halo exchange itself runs inside
+the scan body under ``shard_map``, so a whole multi-host run is one
+compiled SPMD program.
 
 Precision contract: the sparse and shard_map paths accumulate in float32
 regardless of parameter dtype, then cast back. The dense einsum path
@@ -190,6 +194,93 @@ def mix_sharded(
     return jax.tree.map(mix_one, params)
 
 
+def _mix_leaves_concatenated(params: PyTree, n: int, mix_cat) -> PyTree:
+    """Run ``mix_cat`` ONCE on all leaves' features side by side.
+
+    Mixing is linear over the node axis and columns are independent, so
+    concatenating every leaf's flattened features into one (n, P_total) f32
+    matrix computes bit-identical results to mixing leaf by leaf — while
+    paying the halo exchange (ring ppermutes or allgather) and the
+    replicated->sharded boundary movement once per ROUND instead of once per
+    leaf. For an MLP that cuts the sharded path's collective count 4x.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    for leaf in leaves:
+        if leaf.shape[0] != n:
+            raise ValueError(f"leaf leading axis {leaf.shape[0]} != num_nodes {n}")
+    flats = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+    cat = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=1)
+    out = mix_cat(cat)
+    if len(flats) == 1:
+        outs = [out]
+    else:
+        splits = np.cumsum([f.shape[1] for f in flats])[:-1]
+        outs = jnp.split(out, splits, axis=1)
+    return jax.tree.unflatten(
+        treedef,
+        [o.reshape(l.shape).astype(l.dtype) for o, l in zip(outs, leaves)],
+    )
+
+
+def _sharded_mix_leaf(
+    halo, rows, cols, values, local_src, local_dst, ring_send, ring_recv,
+    leaf, *, axes, shards, blk, h, ring, p_chunk,
+):
+    """Per-device body of one sharded sparse DecAvg round on ONE leaf.
+
+    Runs inside a ``shard_map`` over ``axes``: ``leaf`` is this device's
+    (blk, ...) slab of the node axis; the layout arrays arrive replicated
+    with a leading (S, ...) axis and are indexed by the device's shard
+    position. Shared by ``mix_sharded_sparse`` (one shard_map per call) and
+    ``MixingProgram.apply_local`` (the fused trainer's whole-scan shard_map).
+    """
+    idx = jax.lax.axis_index(axes)
+    flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)  # (blk, p)
+    if ring:
+        # Halo buffer with one scratch row at slot H: padded local/ring
+        # destinations point there and are discarded by the slice below.
+        buf = jnp.zeros((h + 1, flat.shape[1]), jnp.float32)
+        ls = jax.lax.dynamic_index_in_dim(local_src, idx, 0, keepdims=False)
+        ld = jax.lax.dynamic_index_in_dim(local_dst, idx, 0, keepdims=False)
+        buf = buf.at[ld].set(flat[ls])
+        for d, (sidx, rslot) in enumerate(zip(ring_send, ring_recv), 1):
+            if sidx.shape[1] == 0:
+                continue  # no shard pair exchanges at this distance
+            send = jax.lax.dynamic_index_in_dim(sidx, idx, 0, keepdims=False)
+            got = jax.lax.ppermute(
+                flat[send], axes,
+                [(s, (s + d) % shards) for s in range(shards)],
+            )
+            slot = jax.lax.dynamic_index_in_dim(rslot, idx, 0, keepdims=False)
+            buf = buf.at[slot].set(got)
+        buf = buf[:h]  # (H, p); cols only ever reference [0, H)
+    else:
+        full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)  # (n, p)
+        need = jax.lax.dynamic_index_in_dim(halo, idx, 0, keepdims=False)
+        buf = full[need]  # (H, p): only rows this shard references
+    r = jax.lax.dynamic_index_in_dim(rows, idx, 0, keepdims=False)
+    c = jax.lax.dynamic_index_in_dim(cols, idx, 0, keepdims=False)
+    v = jax.lax.dynamic_index_in_dim(values, idx, 0, keepdims=False)
+
+    def seg(hbuf: jax.Array) -> jax.Array:
+        gathered = hbuf[c] * v[:, None]  # (E, pc)
+        return jax.ops.segment_sum(
+            gathered, r, num_segments=blk, indices_are_sorted=True
+        )
+
+    p = flat.shape[1]
+    if p_chunk is not None and p_chunk < p:
+        pad = (-p) % p_chunk
+        if pad:
+            buf = jnp.pad(buf, ((0, 0), (0, pad)))
+        chunks = buf.reshape(buf.shape[0], -1, p_chunk).transpose(1, 0, 2)
+        out = jax.lax.map(seg, chunks)  # serialized: bounds the transient
+        out = out.transpose(1, 0, 2).reshape(blk, -1)[:, :p]
+    else:
+        out = seg(buf)
+    return out.reshape(leaf.shape).astype(leaf.dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("mesh", "node_axis", "p_chunk", "halo_schedule")
 )
@@ -253,62 +344,13 @@ def mix_sharded_sparse(
             f"got {halo_schedule!r}"
         )
     ring = halo_schedule == "ring"
+    body = functools.partial(
+        _sharded_mix_leaf, axes=axes, shards=shards, blk=blk, h=h,
+        ring=ring, p_chunk=p_chunk,
+    )
 
-    def body(halo, rows, cols, values, local_src, local_dst, ring_send,
-             ring_recv, leaf):
-        # leaf: (n/shards, ...) local block of the node axis; the stacked
-        # per-shard layout arrays arrive replicated and are indexed by the
-        # device's shard position.
-        idx = jax.lax.axis_index(axes)
-        flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)  # (blk, p)
-        if ring:
-            # Halo buffer with one scratch row at slot H: padded local/ring
-            # destinations point there and are discarded by the slice below.
-            buf = jnp.zeros((h + 1, flat.shape[1]), jnp.float32)
-            ls = jax.lax.dynamic_index_in_dim(local_src, idx, 0, keepdims=False)
-            ld = jax.lax.dynamic_index_in_dim(local_dst, idx, 0, keepdims=False)
-            buf = buf.at[ld].set(flat[ls])
-            for d, (sidx, rslot) in enumerate(zip(ring_send, ring_recv), 1):
-                if sidx.shape[1] == 0:
-                    continue  # no shard pair exchanges at this distance
-                send = jax.lax.dynamic_index_in_dim(sidx, idx, 0, keepdims=False)
-                got = jax.lax.ppermute(
-                    flat[send], axes,
-                    [(s, (s + d) % shards) for s in range(shards)],
-                )
-                slot = jax.lax.dynamic_index_in_dim(rslot, idx, 0, keepdims=False)
-                buf = buf.at[slot].set(got)
-            buf = buf[:h]  # (H, p); cols only ever reference [0, H)
-        else:
-            full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)  # (n, p)
-            need = jax.lax.dynamic_index_in_dim(halo, idx, 0, keepdims=False)
-            buf = full[need]  # (H, p): only rows this shard references
-        r = jax.lax.dynamic_index_in_dim(rows, idx, 0, keepdims=False)
-        c = jax.lax.dynamic_index_in_dim(cols, idx, 0, keepdims=False)
-        v = jax.lax.dynamic_index_in_dim(values, idx, 0, keepdims=False)
-
-        def seg(hbuf: jax.Array) -> jax.Array:
-            gathered = hbuf[c] * v[:, None]  # (E, pc)
-            return jax.ops.segment_sum(
-                gathered, r, num_segments=blk, indices_are_sorted=True
-            )
-
-        p = flat.shape[1]
-        if p_chunk is not None and p_chunk < p:
-            pad = (-p) % p_chunk
-            if pad:
-                buf = jnp.pad(buf, ((0, 0), (0, pad)))
-            chunks = buf.reshape(buf.shape[0], -1, p_chunk).transpose(1, 0, 2)
-            out = jax.lax.map(seg, chunks)  # serialized: bounds the transient
-            out = out.transpose(1, 0, 2).reshape(blk, -1)[:, :p]
-        else:
-            out = seg(buf)
-        return out.reshape(leaf.shape).astype(leaf.dtype)
-
-    def mix_one(leaf: jax.Array) -> jax.Array:
-        if leaf.shape[0] != n:
-            raise ValueError(f"leaf leading axis {leaf.shape[0]} != num_nodes {n}")
-        spec = P(axes, *([None] * (leaf.ndim - 1)))
+    def mix_cat(cat: jax.Array) -> jax.Array:
+        spec = P(axes, None)
         return _shard_map(
             body,
             mesh=mesh,
@@ -316,9 +358,9 @@ def mix_sharded_sparse(
             out_specs=spec,
         )(shcsr.halo, shcsr.rows, shcsr.cols, shcsr.values,
           shcsr.local_src, shcsr.local_dst, shcsr.ring_send, shcsr.ring_recv,
-          leaf)
+          cat)
 
-    return jax.tree.map(mix_one, params)
+    return _mix_leaves_concatenated(params, n, mix_cat)
 
 
 def mix_permute(
@@ -385,8 +427,16 @@ def mix_permute(
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("w", "rows", "cols", "values", "period_idx", "gossip_mask"),
-    meta_fields=("kind", "n", "num_periods", "cadence", "p_chunk"),
+    data_fields=(
+        "w", "rows", "cols", "values", "period_idx", "gossip_mask",
+        "pad_ratio", "bell_idx", "bell_val",
+        "sh_halo", "sh_rows", "sh_cols", "sh_values",
+        "sh_local_src", "sh_local_dst", "sh_ring_send", "sh_ring_recv",
+    ),
+    meta_fields=(
+        "kind", "n", "num_periods", "cadence", "p_chunk",
+        "interpret", "mesh", "node_axis", "shards", "halo_schedule",
+    ),
 )
 @dataclasses.dataclass(frozen=True)
 class MixingProgram:
@@ -404,6 +454,19 @@ class MixingProgram:
       (T, E) ``rows``/``cols``/``values``. Padding entries carry weight 0 and
       point at row N-1 / column 0 (appended after the sorted real entries, so
       segment ids stay sorted) — they add exact zeros.
+    - kind "sparse_pallas": per-period blocked-ELL tiles padded to a common
+      block count (``sparse.stack_block_ell``) as ``bell_idx`` (T, NB, KB) +
+      ``bell_val`` (T, NB*8, KB*8); the body indexes the period axis and
+      invokes the 8-row-blocked kernel (``interpret`` resolved at staging).
+    - kind "sparse_sharded": per-period ``ShardedCSR`` metadata padded to
+      common widths (``sparse.stack_shard_csr``) as ``sh_*`` arrays with a
+      leading period axis. The fused trainer wraps its whole round scan in
+      ONE ``shard_map`` over ``node_axis`` and calls ``apply_local`` per
+      round: the S-1 ``ppermute`` ring steps (or the allgather) execute
+      *inside* the fused scan, with ``halo_schedule`` ("auto" resolves once
+      from the stacked widths, common to all periods) and ``p_chunk``
+      semantics preserved. ``apply`` remains the self-contained (shard_map
+      per call) form, used by the loop-parity tests.
 
     ``period_idx`` maps the global round index to the stacked period slot;
     ``gossip_mask`` carries the ``gossip_every`` cadence. ``cadence`` is the
@@ -411,12 +474,18 @@ class MixingProgram:
     (gossip_every == 1), "never" makes ``mix_at`` the identity
     (gossip_every == 0), "mask" selects per round inside the scan body.
 
+    ``pad_ratio`` is the staging-overhead diagnostic: stacked operator slots
+    per real W entry (1.0 = no padding waste; dense kind reports 1.0). A
+    ``@regen`` schedule whose periods vary widely in edge count pads every
+    period to the widest one — a large ratio makes that visible instead of
+    silently wasting device memory.
+
     Registered as a pytree so it passes through ``jax.jit`` as data: a fused
     chunk retraces on a new *shape* (different T/E/rounds), never on new
     values (a different seed's schedule reuses the compiled program).
     """
 
-    kind: str  # "dense" | "sparse"
+    kind: str  # "dense" | "sparse" | "sparse_pallas" | "sparse_sharded"
     n: int
     num_periods: int
     cadence: str  # "always" | "never" | "mask"
@@ -427,10 +496,45 @@ class MixingProgram:
     rows: jax.Array | None = None  # (T, E) int32, kind == "sparse"
     cols: jax.Array | None = None  # (T, E) int32
     values: jax.Array | None = None  # (T, E) f32
+    pad_ratio: float = 1.0  # stacked operator slots per real W entry
+    bell_idx: jax.Array | None = None  # (T, NB, KB) int32, kind == "sparse_pallas"
+    bell_val: jax.Array | None = None  # (T, NB*8, KB*8) f32
+    sh_halo: jax.Array | None = None  # (T, S, H) int32, kind == "sparse_sharded"
+    sh_rows: jax.Array | None = None  # (T, S, E) int32
+    sh_cols: jax.Array | None = None  # (T, S, E) int32
+    sh_values: jax.Array | None = None  # (T, S, E) f32
+    sh_local_src: jax.Array | None = None  # (T, S, L) int32
+    sh_local_dst: jax.Array | None = None  # (T, S, L) int32
+    sh_ring_send: tuple[jax.Array, ...] = ()  # per ring step: (T, S, K_d) int32
+    sh_ring_recv: tuple[jax.Array, ...] = ()
+    interpret: bool | None = None  # kind == "sparse_pallas" (resolved at staging)
+    mesh: jax.sharding.Mesh | None = None  # kind == "sparse_sharded"
+    node_axis: str | None = None
+    shards: int | None = None
+    halo_schedule: str | None = None
 
     @property
     def rounds(self) -> int:
         return int(self.period_idx.shape[0])
+
+    def _shcsr_at(self, t: jax.Array):
+        """Reconstruct round slot ``t``'s ShardedCSR view (traced slices of
+        the stacked metadata; static shapes are period-independent)."""
+        from repro.core import sparse
+
+        return sparse.ShardedCSR(
+            halo=self.sh_halo[t],
+            rows=self.sh_rows[t],
+            cols=self.sh_cols[t],
+            values=self.sh_values[t],
+            local_src=self.sh_local_src[t],
+            local_dst=self.sh_local_dst[t],
+            ring_send=tuple(a[t] for a in self.sh_ring_send),
+            ring_recv=tuple(a[t] for a in self.sh_ring_recv),
+            shape=(self.n, self.n),
+            shards=self.shards,
+            rows_per_shard=self.n // self.shards,
+        )
 
     def apply(self, params: PyTree, r: jax.Array) -> PyTree:
         """One unconditional mixing round with round ``r``'s operator
@@ -438,6 +542,25 @@ class MixingProgram:
         t = self.period_idx[r]
         if self.kind == "dense":
             return mix_dense(self.w[t], params)
+        if self.kind == "sparse_pallas":
+            from repro.kernels import ops
+
+            idx, val = self.bell_idx[t], self.bell_val[t]
+
+            def bleaf(l: jax.Array) -> jax.Array:
+                flat = l.reshape(self.n, -1)
+                out = ops.gossip_mix_sparse_blocked(
+                    idx, val, flat, interpret=self.interpret
+                )
+                return out.reshape(l.shape).astype(l.dtype)
+
+            return jax.tree.map(bleaf, params)
+        if self.kind == "sparse_sharded":
+            return mix_sharded_sparse(
+                self._shcsr_at(t), params,
+                mesh=self.mesh, node_axis=self.node_axis,
+                p_chunk=self.p_chunk, halo_schedule=self.halo_schedule,
+            )
         rows, cols, values = self.rows[t], self.cols[t], self.values[t]
 
         def seg(flat: jax.Array) -> jax.Array:
@@ -475,6 +598,62 @@ class MixingProgram:
             self.gossip_mask[r], lambda p: self.apply(p, r), lambda p: p, params
         )
 
+    def _sharded_static(self) -> tuple[tuple[str, ...], bool, int]:
+        """(axes, ring?, blk) for the stacked sharded layout. The ring/
+        allgather decision uses the same rule as ``mix_sharded_sparse`` but
+        resolves ONCE from the stacked widths, which ``stack_shard_csr``
+        keeps common to every period."""
+        axes = (
+            (self.node_axis,) if isinstance(self.node_axis, str)
+            else tuple(self.node_axis)
+        )
+        blk = self.n // self.shards
+        sched = self.halo_schedule
+        if sched == "auto":
+            ring_width = sum(int(a.shape[2]) for a in self.sh_ring_send)
+            sched = "ring" if ring_width < self.n - blk else "allgather"
+        return axes, sched == "ring", blk
+
+    def apply_local(self, params: PyTree, r: jax.Array) -> PyTree:
+        """Kind "sparse_sharded" only: round ``r``'s mix on this device's
+        LOCAL (N/S, ...) slab — must be called inside a ``shard_map`` over
+        ``node_axis``.
+
+        This is what lets the fused trainer keep the ENTIRE round scan under
+        one shard_map (train step genuinely node-sharded, carry never
+        resharded between rounds): the ring ppermutes / allgather execute
+        directly in the caller's SPMD context. Calling ``apply`` instead —
+        a shard_map per mix inside the scan — makes everything *outside* the
+        mix replicated on every device and reshards the carry each iteration.
+        """
+        if self.kind != "sparse_sharded":
+            raise ValueError(
+                f"apply_local needs kind 'sparse_sharded', got {self.kind!r}"
+            )
+        t = self.period_idx[r]
+        axes, ring, blk = self._sharded_static()
+        mix = functools.partial(
+            _sharded_mix_leaf,
+            self.sh_halo[t], self.sh_rows[t], self.sh_cols[t],
+            self.sh_values[t], self.sh_local_src[t], self.sh_local_dst[t],
+            tuple(a[t] for a in self.sh_ring_send),
+            tuple(a[t] for a in self.sh_ring_recv),
+            axes=axes, shards=self.shards, blk=blk,
+            h=int(self.sh_halo.shape[2]), ring=ring, p_chunk=self.p_chunk,
+        )
+        return _mix_leaves_concatenated(params, blk, mix)
+
+    def mix_at_local(self, params: PyTree, r: jax.Array) -> PyTree:
+        """``apply_local`` gated by the gossip cadence (cf. ``mix_at``)."""
+        if self.cadence == "never":
+            return params
+        if self.cadence == "always":
+            return self.apply_local(params, r)
+        return jax.lax.cond(
+            self.gossip_mask[r],
+            lambda p: self.apply_local(p, r), lambda p: p, params,
+        )
+
 
 # ---------------------------------------------------------------------------
 # GossipEngine: one capability-checked front door over every mixing path
@@ -482,21 +661,25 @@ class MixingProgram:
 
 _MATRIX_KINDS = ("decavg", "uniform", "mh")
 
-# Backend -> (requirement summary, large-N cost of one round). Source of
-# truth for GossipEngine.capabilities() and the README matrix.
+# Backend -> (requirement summary, large-N cost of one round, fused). Source
+# of truth for GossipEngine.capabilities() and the README matrix. ``fused``
+# means program() can stage every schedule period for this backend, so
+# DecentralizedTrainer.run_fused covers it (its _FUSED_BACKENDS mirrors this
+# flag, pinned by test).
 _BACKEND_INFO = {
-    "dense": ("any backend; W materialized (N,N)", "O(N^2 * P)"),
-    "pallas": ("TPU (interpret elsewhere); W materialized (N,N)", "O(N^2 * P), zero W tiles skipped"),
-    "sparse": ("any backend; W stored CSR, O(E) memory", "O(E * P)"),
-    "sparse_pallas": ("TPU (interpret elsewhere); W stored blocked ELL", "O(E * P)"),
-    "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device"),
+    "dense": ("any backend; W materialized (N,N)", "O(N^2 * P)", True),
+    "pallas": ("TPU (interpret elsewhere); W materialized (N,N)", "O(N^2 * P), zero W tiles skipped", False),
+    "sparse": ("any backend; W stored CSR, O(E) memory", "O(E * P)", True),
+    "sparse_pallas": ("TPU (interpret elsewhere); W stored blocked ELL", "O(E * P)", True),
+    "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device", False),
     "sparse_sharded": (
         "mesh with node axis (default: all local devices); N divisible by "
         "shards; W stored per-shard CSR with halo columns; halo_schedule "
         "allgather|ring|auto",
         "O(E * P / S) work per device; wire O(N * P) allgather / O(H * P) ring",
+        True,
     ),
-    "permute": ("mesh with node axis; N == |axis|; recolors per schedule period", "O(degree * P) wire per device"),
+    "permute": ("mesh with node axis; N == |axis|; recolors per schedule period", "O(degree * P) wire per device", False),
 }
 
 
@@ -611,11 +794,11 @@ class GossipEngine:
     # -- capability checking -------------------------------------------------
 
     @classmethod
-    def capabilities(cls) -> dict[str, dict[str, str]]:
-        """Backend -> {requires, cost} (the README capability matrix)."""
+    def capabilities(cls) -> dict[str, dict[str, str | bool]]:
+        """Backend -> {requires, cost, fused} (the README capability matrix)."""
         return {
-            b: {"requires": req, "cost": cost}
-            for b, (req, cost) in _BACKEND_INFO.items()
+            b: {"requires": req, "cost": cost, "fused": fused}
+            for b, (req, cost, fused) in _BACKEND_INFO.items()
         }
 
     def _resolve_backend(self, backend: str) -> str:
@@ -681,8 +864,11 @@ class GossipEngine:
         self._period = period
         self._graph = g
         self._w = jnp.asarray(w, jnp.float32)
+        # Built from the edge list, not the dense W: the exact same
+        # construction GossipEngine.program uses for its stacked periods, so
+        # the loop and fused paths mix with bit-identical CSR values.
         self._csr = (
-            sparse.csr_from_dense(w)
+            sparse.csr_from_graph(g, self.data_sizes, matrix=self.matrix)
             if self.backend in ("sparse", "sparse_pallas", "sparse_sharded")
             else None
         )
@@ -745,24 +931,33 @@ class GossipEngine:
 
         Returns a ``MixingProgram`` — stacked per-period operators plus the
         round -> period map and the gossip cadence — for the fused
-        single-``lax.scan`` training path. ``kind`` defaults to "sparse" for
-        the sparse backends and "dense" otherwise. The engine's current
-        period state is restored to round 0 afterwards, so an interleaved
-        Python-loop run sees the same state it would have without this call.
+        single-``lax.scan`` training path. ``kind`` defaults to the backend's
+        own kind for the sparse backends ("sparse", "sparse_pallas",
+        "sparse_sharded") and "dense" otherwise.
+
+        The sparse kinds build each period's CSR straight from the
+        schedule's graphs (``sparse.csr_from_graph``) — the dense (N, N)
+        matrix is never materialized, so staging a T-period ``@rewire`` run
+        is O(T * E) host memory, not O(T * N^2). The loop path's ``refresh``
+        builds its CSR the same way, which is what keeps fused and loop runs
+        bit-identical for the sparse backends. For the dense kind the
+        engine's period state is walked and then restored to round 0, so an
+        interleaved Python-loop run sees the same state it would have
+        without this call.
         """
         from repro.core import sparse
 
         rounds = int(rounds)
         if rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {rounds}")
+        sparse_kinds = ("sparse", "sparse_pallas", "sparse_sharded")
         if kind is None:
-            kind = (
-                "sparse"
-                if self.backend in ("sparse", "sparse_pallas", "sparse_sharded")
-                else "dense"
+            kind = self.backend if self.backend in sparse_kinds else "dense"
+        if kind not in ("dense",) + sparse_kinds:
+            raise ValueError(
+                f"program kind must be one of {('dense',) + sparse_kinds}, "
+                f"got {kind!r}"
             )
-        if kind not in ("dense", "sparse"):
-            raise ValueError(f"program kind must be 'dense' or 'sparse', got {kind!r}")
         first_round: dict[int, int] = {}
         for r in range(rounds):
             first_round.setdefault(self.schedule.period_of(r), r)
@@ -772,8 +967,6 @@ class GossipEngine:
             [slot[self.schedule.period_of(r)] for r in range(rounds)], np.int32
         )
         gossip_mask = np.array([self.is_gossip_round(r) for r in range(rounds)], bool)
-        ws = [np.asarray(self.w_at(first_round[p])) for p in period_list]
-        self.refresh(0)  # leave the engine where a fresh run expects it
         cadence = (
             "never" if self.gossip_every < 1
             else "always" if self.gossip_every == 1
@@ -781,21 +974,81 @@ class GossipEngine:
         )
         common = dict(
             n=self.num_nodes,
-            num_periods=len(ws),
+            num_periods=len(period_list),
             cadence=cadence,
             period_idx=jnp.asarray(period_idx),
             gossip_mask=jnp.asarray(gossip_mask),
         )
         if kind == "dense":
+            ws = [np.asarray(self.w_at(first_round[p])) for p in period_list]
+            self.refresh(0)  # leave the engine where a fresh run expects it
             return MixingProgram(kind="dense", w=jnp.asarray(np.stack(ws)), **common)
-        csrs = [sparse.csr_from_dense(w) for w in ws]
+        # Sparse kinds: per-period CSR straight from the graphs — no dense
+        # (N, N) staging, no engine period churn (graph_at reads the
+        # schedule's own period cache).
+        csrs = [
+            sparse.csr_from_graph(
+                self.schedule.graph_at(first_round[p]), self.data_sizes,
+                matrix=self.matrix,
+            )
+            for p in period_list
+        ]
+        if self.validate:
+            for c in csrs:  # O(E) row-stochasticity check, no dense rebuild
+                rs = np.bincount(
+                    np.asarray(c.rows),
+                    weights=np.asarray(c.values, np.float64),
+                    minlength=self.num_nodes,
+                )
+                if not np.allclose(rs, 1.0, atol=1e-5):
+                    raise ValueError("staged mixing rows must sum to 1")
+        real_nnz = sum(c.nnz for c in csrs)
         e_max = max(c.nnz for c in csrs)
         p_chunk = self.sparse_p_chunk
+        n = self.num_nodes
+        if kind == "sparse_pallas":
+            from repro.kernels import ops
+
+            interp = (not ops.on_tpu()) if self.interpret is None else bool(self.interpret)
+            bell_idx, bell_val = sparse.stack_block_ell(csrs)
+            return MixingProgram(
+                kind="sparse_pallas",
+                bell_idx=jnp.asarray(bell_idx),
+                bell_val=jnp.asarray(bell_val),
+                interpret=interp,
+                pad_ratio=bell_val.size / real_nnz,
+                **common,
+            )
+        if kind == "sparse_sharded":
+            mesh = self.mesh if self.mesh is not None else self._default_node_mesh()
+            self.check("sparse_sharded", mesh)
+            shards = mesh.shape[self.node_axis]
+            st = sparse.stack_shard_csr([sparse.shard_csr(c, shards) for c in csrs])
+            if p_chunk == "auto":
+                # Per-device transient: size from the padded per-shard width.
+                p_chunk = sparse.auto_p_chunk(int(st["values"].shape[2]))
+            return MixingProgram(
+                kind="sparse_sharded",
+                sh_halo=jnp.asarray(st["halo"]),
+                sh_rows=jnp.asarray(st["rows"]),
+                sh_cols=jnp.asarray(st["cols"]),
+                sh_values=jnp.asarray(st["values"]),
+                sh_local_src=jnp.asarray(st["local_src"]),
+                sh_local_dst=jnp.asarray(st["local_dst"]),
+                sh_ring_send=tuple(jnp.asarray(a) for a in st["ring_send"]),
+                sh_ring_recv=tuple(jnp.asarray(a) for a in st["ring_recv"]),
+                mesh=mesh,
+                node_axis=self.node_axis,
+                shards=shards,
+                halo_schedule=self.halo_schedule,
+                p_chunk=None if p_chunk is None else int(p_chunk),
+                pad_ratio=st["values"].size / real_nnz,
+                **common,
+            )
         if p_chunk == "auto":
             # Size from the padded entry count: the in-scan gather transient
             # is O(e_max * chunk) per leaf, same bound as the loop path's.
             p_chunk = sparse.auto_p_chunk(e_max)
-        n = self.num_nodes
         rows = np.full((len(csrs), e_max), n - 1, np.int32)
         cols = np.zeros((len(csrs), e_max), np.int32)
         values = np.zeros((len(csrs), e_max), np.float32)
@@ -811,6 +1064,7 @@ class GossipEngine:
             cols=jnp.asarray(cols),
             values=jnp.asarray(values),
             p_chunk=None if p_chunk is None else int(p_chunk),
+            pad_ratio=(len(csrs) * e_max) / real_nnz,
             **common,
         )
 

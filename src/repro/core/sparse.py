@@ -37,10 +37,13 @@ __all__ = [
     "ShardedCSR",
     "BlockELL",
     "csr_from_dense",
+    "csr_from_graph",
     "csr_to_dense",
     "ell_from_csr",
     "block_ell_from_csr",
+    "stack_block_ell",
     "shard_csr",
+    "stack_shard_csr",
     "halo_wire_bytes",
     "mix_sparse",
     "mix_sparse_pallas",
@@ -109,6 +112,83 @@ def csr_from_dense(w: np.ndarray | jax.Array, *, tol: float = 0.0) -> CSR:
         rows=jnp.asarray(rows.astype(np.int32)),
         values=jnp.asarray(wd[rows, cols]),
         shape=wd.shape,
+    )
+
+
+def csr_from_graph(
+    g,
+    data_sizes: np.ndarray | None = None,
+    *,
+    matrix: str = "decavg",
+    self_trust: float = 1.0,
+) -> CSR:
+    """Build the mixing-matrix CSR straight from a graph's edge list.
+
+    Equivalent (same support, values allclose at f32) to
+    ``csr_from_dense(mixing.decavg_matrix(g, sizes))`` et al., but never
+    materializes the dense (N, N) float matrix: the only transient is the
+    O(E) entry list plus a boolean adjacency view. This is what lets
+    ``GossipEngine.program`` stage every ``@rewire`` period of an N=4096 run
+    without O(T * N^2) host memory.
+
+    ``matrix``: "decavg" (paper Eq. 1 — weights omega * |D_j|, row-
+    normalized; isolated zero-data rows keep their own model), "uniform"
+    (closed-neighborhood mean) or "mh" (Metropolis-Hastings). Exact zeros
+    (zero-size sources, zero MH diagonals) are dropped, matching
+    ``csr_from_dense``'s support. Entries come out row-major sorted.
+    """
+    n = g.num_nodes
+    if matrix == "mh":
+        deg = g.adj.sum(axis=1).astype(np.float64)
+        rr, cc = np.nonzero(g.adj)  # off-diagonal edges, no self loops
+        off = 1.0 / (1.0 + np.maximum(deg[rr], deg[cc]))
+        diag = 1.0 - np.bincount(rr, weights=off, minlength=n)
+        rows = np.concatenate([rr, np.arange(n)])
+        cols = np.concatenate([cc, np.arange(n)])
+        vals = np.concatenate([off, diag])
+    else:
+        closed = g.adj.copy()
+        np.fill_diagonal(closed, True)
+        rows, cols = np.nonzero(closed)  # row-major: rows sorted ascending
+        if matrix == "uniform":
+            inv = 1.0 / np.bincount(rows, minlength=n).astype(np.float64)
+            vals = inv[rows]
+        elif matrix == "decavg":
+            sizes = (
+                np.ones(n) if data_sizes is None
+                else np.asarray(data_sizes, dtype=np.float64)
+            )
+            if sizes.shape != (n,):
+                raise ValueError(f"data_sizes must be ({n},), got {sizes.shape}")
+            omega = np.where(rows == cols, float(self_trust), 1.0)
+            vals = omega * sizes[cols]
+            rowsum = np.bincount(rows, weights=vals, minlength=n)
+            bad = rowsum == 0
+            if bad.any():
+                # Isolated node with zero data: keep its own model unchanged.
+                vals = np.where(
+                    bad[rows], np.where(rows == cols, 1.0, 0.0), vals
+                )
+                rowsum = np.where(bad, 1.0, rowsum)
+            vals = vals / rowsum[rows]
+        else:
+            raise ValueError(
+                f"matrix must be 'decavg', 'uniform' or 'mh', got {matrix!r}"
+            )
+    keep = vals != 0.0  # match csr_from_dense's |w| > 0 support
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    order = np.lexsort((cols, rows))  # mh appends the diagonal out of order
+    rows = rows[order].astype(np.int32)
+    cols = cols[order].astype(np.int32)
+    vals = vals[order].astype(np.float32)
+    indptr = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(np.bincount(rows, minlength=n), out=indptr[1:])
+    return CSR(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(cols),
+        rows=jnp.asarray(rows),
+        values=jnp.asarray(vals),
+        shape=(n, n),
     )
 
 
@@ -320,6 +400,73 @@ def shard_csr(csr: CSR, shards: int) -> ShardedCSR:
     )
 
 
+def stack_shard_csr(shcsrs: list[ShardedCSR]) -> dict[str, Any]:
+    """Pad per-period ShardedCSRs to common widths and stack on a period axis.
+
+    The fused sharded scan body selects the current period by index, so every
+    period's layout must share one shape: halo padded to the max halo width
+    (repeating id 0 — extra gathered rows are simply never referenced), CSR
+    entries padded with zero-weight rows at the shard's last local row (after
+    the sorted real entries, so segment ids stay sorted), and ring/local
+    tables padded per step to the max step width. Ring steps keep their
+    per-period zero-width collapse only when the width is zero across *all*
+    periods (shapes are shared), which also keeps ``ring_width`` — and hence
+    the ``halo_schedule="auto"`` decision — common to the whole program.
+
+    Padded local/ring *destination* slots point at the scratch slot; because
+    the halo widens to ``h_max``, each period's own scratch slot
+    (``halo_width_t``) is remapped to the stacked scratch ``h_max`` so padded
+    writes keep landing one past the halo.
+
+    Returns a dict of stacked arrays: halo/rows/cols/values/local_src/
+    local_dst with leading (T, S, ...) axes and ring_send/ring_recv as tuples
+    of (T, S, K_d) arrays, mirroring the ShardedCSR fields.
+    """
+    s0 = shcsrs[0]
+    if any(s.shards != s0.shards or s.shape != s0.shape for s in shcsrs):
+        raise ValueError("all periods must share shape and shard count")
+    h_max = max(s.halo_width for s in shcsrs)
+    e_max = max(int(s.rows.shape[1]) for s in shcsrs)
+    l_max = max(int(s.local_src.shape[1]) for s in shcsrs)
+    steps = s0.shards - 1
+    k_max = [max(int(s.ring_send[d].shape[1]) for s in shcsrs) for d in range(steps)]
+
+    def pad(a: jax.Array, width: int, fill) -> np.ndarray:
+        a = np.asarray(a)
+        return np.pad(a, ((0, 0), (0, width - a.shape[1])), constant_values=fill)
+
+    def remap_scratch(a: jax.Array, s: ShardedCSR) -> np.ndarray:
+        # Destination slots: the period's own scratch (== halo_width_t) must
+        # follow the halo as it widens to h_max; real slots are < halo_width_t
+        # and stay put.
+        a = np.asarray(a)
+        return np.where(a == s.halo_width, h_max, a).astype(a.dtype)
+
+    return {
+        "halo": np.stack([pad(s.halo, h_max, 0) for s in shcsrs]),
+        "rows": np.stack(
+            [pad(s.rows, e_max, s0.rows_per_shard - 1) for s in shcsrs]
+        ),
+        "cols": np.stack([pad(s.cols, e_max, 0) for s in shcsrs]),
+        "values": np.stack([pad(s.values, e_max, 0.0) for s in shcsrs]),
+        "local_src": np.stack([pad(s.local_src, l_max, 0) for s in shcsrs]),
+        "local_dst": np.stack(
+            [pad(remap_scratch(s.local_dst, s), l_max, h_max) for s in shcsrs]
+        ),
+        "ring_send": tuple(
+            np.stack([pad(s.ring_send[d], k_max[d], 0) for s in shcsrs])
+            for d in range(steps)
+        ),
+        "ring_recv": tuple(
+            np.stack(
+                [pad(remap_scratch(s.ring_recv[d], s), k_max[d], h_max)
+                 for s in shcsrs]
+            )
+            for d in range(steps)
+        ),
+    }
+
+
 def halo_wire_bytes(shcsr: ShardedCSR, p: int, *, itemsize: int = 4) -> dict[str, int]:
     """Modeled per-device *receive* volume of one mixing round, per schedule.
 
@@ -407,6 +554,33 @@ def block_ell_from_csr(csr: CSR, *, block: int = 8, lane_pad: int = 16) -> Block
         for r, c, v in ent:
             val[r, c] = v
     return BlockELL(idx=idx, val=val, n=n, block=block)
+
+
+def stack_block_ell(
+    csrs: list[CSR], *, block: int = 8, lane_pad: int = 16
+) -> tuple[np.ndarray, np.ndarray]:
+    """Blocked-ELL layouts for every schedule period, padded to a common
+    block count and stacked on a leading period axis.
+
+    Periods with fewer source blocks per destination block are padded with
+    index-0 tiles whose weights are all zero (the kernel multiplies them in
+    as exact zeros, same convention as ``block_ell_from_csr``'s own lane
+    padding). Returns ``idx`` (T, NB, KB) int32 and ``val``
+    (T, NB*block, KB*block) f32 for the fused scan body to index by period.
+    """
+    if not csrs:
+        raise ValueError("need at least one period")
+    if any(c.shape != csrs[0].shape for c in csrs):
+        raise ValueError("all periods must share the matrix shape")
+    bells = [block_ell_from_csr(c, block=block, lane_pad=lane_pad) for c in csrs]
+    kb = max(b.max_blocks_per_row for b in bells)  # lane-aligned per period
+    idx = np.stack(
+        [np.pad(b.idx, ((0, 0), (0, kb - b.idx.shape[1]))) for b in bells]
+    )
+    val = np.stack(
+        [np.pad(b.val, ((0, 0), (0, (kb - b.idx.shape[1]) * block))) for b in bells]
+    )
+    return idx, val
 
 
 def _gather_segment_sum(csr: CSR, flat: jax.Array) -> jax.Array:

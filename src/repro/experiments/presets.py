@@ -10,6 +10,12 @@
   ``sparse_sharded`` backend (per-shard CSR row ranges + halo gathers over
   a mesh of all local devices — the node-sharded sparse path). Few rounds:
   this preset measures spread + wall-clock at scale, not final accuracy.
+  Both backends route through ``run_fused``, so each run — including the
+  node-sharded N=4096 one, ring halo exchange and all — executes as a
+  single compiled program per eval chunk.
+- ``large_n_smoke``: tiny-N stand-in for ``large_n`` (same backends, CI
+  minutes); the smoke-sweep job gates on its sparse_sharded run staying on
+  the fused path.
 """
 
 from __future__ import annotations
@@ -111,7 +117,45 @@ def _large_n() -> list[ExperimentSpec]:
     return specs
 
 
-PRESETS = {"smoke": _smoke, "paper": _paper, "large_n": _large_n}
+def _large_n_smoke() -> list[ExperimentSpec]:
+    # Tiny-N stand-in for the large_n preset shapes, runnable in CI minutes:
+    # same backends (sparse with chunking, sparse_sharded over the local
+    # device mesh) and a @rewire schedule so the fused MixingProgram stages
+    # multiple periods. The CI smoke-sweep job asserts the sparse_sharded
+    # run's final record has fused=True — the single-compiled-program path
+    # cannot silently regress to the per-round loop.
+    base = {
+        "rounds": 4,
+        "eval_every": 2,
+        "lr": 0.05,
+        "momentum": 0.9,
+        "batch_size": 8,
+        "backend": "sparse",
+        "data": {"train_per_class": 64, "test_per_class": 20},
+        "model": {"kind": "mlp", "hidden": [32], "sparse_p_chunk": "auto"},
+        "tag": "large_n_smoke",
+    }
+    specs = expand_grid(
+        base,
+        topology=["ws:n=32,k=4,beta=0.1"],
+        partitioner=["hub_focused"],
+        seed=[0],
+    )
+    specs += expand_grid(
+        {**base, "backend": "sparse_sharded"},
+        topology=["ba:n=32,m=2@rewire=2"],
+        partitioner=["hub_focused"],
+        seed=[0],
+    )
+    return specs
+
+
+PRESETS = {
+    "smoke": _smoke,
+    "paper": _paper,
+    "large_n": _large_n,
+    "large_n_smoke": _large_n_smoke,
+}
 
 
 def get_preset(name: str) -> list[ExperimentSpec]:

@@ -213,9 +213,12 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
             )
 
     # Fused single-scan path by default for the backends that support it
-    # (dense/sparse after "auto" resolution): one device dispatch per eval
-    # instead of one per round. model={"fused": False} opts a spec out
-    # (debugging, or backends the MixingProgram can't stage).
+    # (dense/sparse/sparse_pallas/sparse_sharded after "auto" resolution):
+    # one device dispatch per eval instead of one per round — for
+    # sparse_sharded the ring halo exchange runs inside the scan, so the
+    # whole run is one compiled SPMD program per chunk. model={"fused":
+    # False} opts a spec out (debugging, or backends the MixingProgram
+    # can't stage).
     use_fused = bool(spec.model.get("fused", True)) and trainer.supports_fused
     run = trainer.run_fused if use_fused else trainer.run
     run(
@@ -233,6 +236,10 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
         **_graph_records(trainer.engine, spec.rounds),
         "num_focus_nodes": int(len(focus_nodes)),
         "num_spread_nodes": int(len(spread_nodes)),
+        # Routing provenance, CI-gated: the large_n smoke asserts its
+        # sparse_sharded run actually took the fused path.
+        "backend": trainer.mix_impl,
+        "fused": use_fused,
     }
     # Community runs additionally record the paper's Table-1 confusion view.
     if trainer.graph.blocks is not None and trainer.graph.num_nodes <= 256:

@@ -25,7 +25,10 @@ Two execution paths over the same numerics:
   schedule period up front, the loader's dataset is staged on device and
   batch indices are generated *inside* the scan, and stacked round metrics
   stream to ``on_round`` between chunks. Same seed => same params/metrics as
-  ``run`` (tests pin allclose at 1e-6); dense and sparse backends only. The
+  ``run`` (tests pin allclose at 1e-6; sparse and sparse_sharded are
+  bit-identical); dense, sparse, sparse_pallas and sparse_sharded backends —
+  sharded runs put the whole scan under one ``shard_map`` so each device
+  trains its node slab and only the halo exchange crosses devices. The
   Python loop remains the fallback for verbose/debug and the other backends.
 
 ``compress=`` (top-k fraction) turns on CHOCO-style gossip compression
@@ -49,6 +52,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import compress as compress_mod
 from repro.core import decavg
@@ -73,8 +77,18 @@ PyTree = Any
 _OPERAND_BACKENDS = ("dense", "pallas", "sparse")
 
 # Backends run_fused supports: those whose per-period operators stack into a
-# MixingProgram (core/decavg.py) selectable by index inside a lax.scan.
-_FUSED_BACKENDS = ("dense", "sparse")
+# MixingProgram (core/decavg.py) selectable by index inside a lax.scan —
+# dense W, padded CSR, blocked-ELL tiles, and per-shard ShardedCSR metadata
+# (whose ring/allgather halo exchange runs inside the scan under shard_map).
+_FUSED_BACKENDS = ("dense", "sparse", "sparse_pallas", "sparse_sharded")
+
+# Per-round threefry dispatch inside a lax.scan costs ~0.5 ms on CPU — a
+# fixed floor the fused path can hoist: one vmapped draw over the whole
+# chunk's rounds yields bit-identical indices (random primitives commute
+# with vmap) as scan xs. Hoisting is gated by the index-tensor element
+# count so a large-N thousands-of-rounds chunk falls back to in-scan
+# generation instead of staging a multi-GB (L, steps, N, B) tensor.
+_IDX_HOIST_MAX_ELEMS = 1 << 24  # 64 MB of int32
 
 
 @dataclasses.dataclass
@@ -280,11 +294,35 @@ class DecentralizedTrainer:
         draws the Python loop makes on the host.
         """
         steps = self.loader.steps_per_epoch() * self.local_epochs
+        if program.kind == "sparse_sharded":
+            params, opt_state, cstate = self._scan_rounds_sharded(
+                program, data, params, opt_state, cstate, start,
+                length=length, steps=steps,
+            )
+            if not do_eval:
+                return params, opt_state, cstate, None
+            if self.class_groups is not None:
+                accs, gaccs = self._group_eval(params, x_test, y_test)
+            else:
+                accs, _ = self._eval(params, x_test, y_test)
+                gaccs = None
+            cons = consensus_distance(params)
+            return params, opt_state, cstate, (accs, gaccs, cons)
         node = jnp.arange(self.num_nodes)
+        hoist = (
+            length * steps * self.num_nodes * self.loader.batch
+            <= _IDX_HOIST_MAX_ELEMS
+        )
 
-        def one_round(carry, r):
+        def one_round(carry, x):
             params, opt, cstate = carry
-            idx = round_batch_indices(data.key, r, steps, self.loader.batch, data.sizes)
+            if hoist:
+                r, idx = x
+            else:
+                r = x
+                idx = round_batch_indices(
+                    data.key, r, steps, self.loader.batch, data.sizes
+                )
 
             def one_step(c, idx_s):
                 p, o = c
@@ -318,8 +356,17 @@ class DecentralizedTrainer:
             return (params, opt, cstate), None
 
         rs = start + jnp.arange(length)
+        if hoist:
+            idx_all = jax.vmap(
+                lambda r: round_batch_indices(
+                    data.key, r, steps, self.loader.batch, data.sizes
+                )
+            )(rs)
+            xs = (rs, idx_all)
+        else:
+            xs = rs
         (params, opt_state, cstate), _ = jax.lax.scan(
-            one_round, (params, opt_state, cstate), rs
+            one_round, (params, opt_state, cstate), xs
         )
         if not do_eval:
             return params, opt_state, cstate, None
@@ -330,6 +377,122 @@ class DecentralizedTrainer:
             gaccs = None
         cons = consensus_distance(params)
         return params, opt_state, cstate, (accs, gaccs, cons)
+
+    def _scan_rounds_sharded(
+        self, program, data, params, opt_state, cstate, start, *, length, steps,
+    ):
+        """``length`` rounds with the node axis sharded END TO END.
+
+        ONE ``shard_map`` wraps the whole ``lax.scan``: each device trains
+        its N/S-node slab and the only cross-device traffic per round is the
+        mix's halo exchange (``program.apply_local``). The alternative — a
+        shard_map per mix *inside* the scan — turns the chunk into an SPMD
+        program whose train step runs replicated on every device and whose
+        carry is resharded at each iteration boundary: measured ~5x slower
+        than the Python loop at N=256 over 8 host devices, where this layout
+        is faster than the loop. Numerics are unchanged: the per-node train
+        step is elementwise over nodes, batch indices are the same
+        replicated draws sliced per slab, and the mix body is the same code
+        the loop path runs.
+        """
+        from repro.core.decavg import _shard_map
+
+        axes = (
+            (program.node_axis,) if isinstance(program.node_axis, str)
+            else tuple(program.node_axis)
+        )
+        blk = self.num_nodes // program.shards
+        batch = self.loader.batch
+
+        hoist = length * steps * self.num_nodes * batch <= _IDX_HOIST_MAX_ELEMS
+
+        def local_scan(program, data, start, params, opt, cstate):
+            sidx = jax.lax.axis_index(axes)
+            gnode = sidx * blk + jnp.arange(blk)  # slab's global node ids
+
+            def one_round(carry, x):
+                params, opt, cstate = carry
+                if hoist:
+                    r, idx = x
+                else:
+                    # The full (steps, N, B) index tensor is integer-only
+                    # and tiny; every device computes it replicated
+                    # (identical to the host/loop draws) and slices its own
+                    # slab's rows.
+                    r = x
+                    idx = round_batch_indices(
+                        data.key, r, steps, batch, data.sizes
+                    )
+                    idx = jax.lax.dynamic_slice_in_dim(
+                        idx, sidx * blk, blk, axis=1
+                    )
+
+                def one_step(c, idx_s):
+                    p, o = c
+                    rows = data.parts[gnode[:, None], idx_s]  # (blk, B)
+                    x = data.x[rows]
+                    y = data.y[rows]
+
+                    def node_loss(pp, xb, yb):
+                        return softmax_xent(self.forward(pp, xb), yb)
+
+                    grads = jax.vmap(jax.grad(node_loss))(p, x, y)
+                    p, o = sgd.update(grads, o, p, lr=self.lr, mu=self.mu)
+                    return (p, o), None
+
+                (params, opt), _ = jax.lax.scan(one_step, (params, opt), idx)
+                if self.compress is None:
+                    params = program.mix_at_local(params, r)
+                else:
+                    def do(args):
+                        p, cs = args
+                        return self._gossip(
+                            lambda q: program.apply_local(q, r), p, cs
+                        )
+
+                    if program.cadence == "always":
+                        params, cstate = do((params, cstate))
+                    elif program.cadence == "mask":
+                        params, cstate = jax.lax.cond(
+                            program.gossip_mask[r], do, lambda a: a,
+                            (params, cstate),
+                        )
+                return (params, opt, cstate), None
+
+            rs = start + jnp.arange(length)
+            if hoist:
+                # One vmapped draw for the whole chunk (bit-identical to
+                # the per-round draws), pre-sliced to this device's slab so
+                # the staged xs tensor is 1/S the replicated size.
+                idx_all = jax.vmap(
+                    lambda r: round_batch_indices(
+                        data.key, r, steps, batch, data.sizes
+                    )
+                )(rs)
+                idx_all = jax.lax.dynamic_slice_in_dim(
+                    idx_all, sidx * blk, blk, axis=2
+                )
+                xs = (rs, idx_all)
+            else:
+                xs = rs
+            (params, opt, cstate), _ = jax.lax.scan(
+                one_round, (params, opt, cstate), xs
+            )
+            return params, opt, cstate
+
+        def node_specs(tree):
+            return jax.tree.map(
+                lambda l: P(axes, *([None] * (l.ndim - 1))), tree
+            )
+
+        pspec = node_specs(params)
+        ospec = node_specs(opt_state)
+        cspec = node_specs(cstate)
+        return _shard_map(
+            local_scan, mesh=program.mesh,
+            in_specs=(P(), P(), P(), pspec, ospec, cspec),
+            out_specs=(pspec, ospec, cspec),
+        )(program, data, start, params, opt_state, cstate)
 
     def _jit_for_period(self, period: int):
         """The round step for a new schedule period.
@@ -344,7 +507,15 @@ class DecentralizedTrainer:
             return self._round_jit
         jitted = self._round_jit_cache.get(period)
         if jitted is None:
-            jitted = jax.jit(self._round, donate_argnums=(1, 2, 3))
+            # NOT jax.jit(self._round): equal bound methods share one pjit
+            # cache entry, so a "fresh" jit after a period change would
+            # silently reuse the executable traced with the previous
+            # period's engine state. A nested function is a distinct cache
+            # key, forcing the retrace that bakes in the new period.
+            def _round_fn(op, params, opt_state, cstate, xs, ys):
+                return self._round(op, params, opt_state, cstate, xs, ys)
+
+            jitted = jax.jit(_round_fn, donate_argnums=(1, 2, 3))
             if len(self._round_jit_cache) >= 64:
                 # Bound compiled-program memory on long @regen runs (same cap
                 # as the engine's coloring cache); re-entering an evicted
@@ -458,8 +629,13 @@ class DecentralizedTrainer:
         entire run is a single scan.
 
         Same seed => same params and metrics as ``run`` (allclose at f32
-        1e-6; pinned by tests/test_fused.py). Supported for the dense and
-        sparse backends; others raise (use ``run``).
+        1e-6, bit-identical for the sparse/sparse_sharded backends whose
+        loop and fused paths share one CSR construction; pinned by
+        tests/test_fused.py and tests/test_fused_sharded.py). Supported for
+        the dense, sparse, sparse_pallas and sparse_sharded backends;
+        others raise (use ``run``). For sparse_sharded the halo exchange
+        (ring ppermutes or allgather) runs inside the scan body, so the
+        whole multi-host run is one compiled SPMD program per chunk.
         """
         if not self.supports_fused:
             raise ValueError(
@@ -470,6 +646,34 @@ class DecentralizedTrainer:
             return []
         program = self.engine.program(rounds, kind=self.mix_impl)
         data = self.loader.device_data()
+        if program.kind == "sparse_sharded":
+            # Commit the node-stacked state to its in-scan layout (node axis
+            # sharded over the mesh) before the first chunk: the fused chunk
+            # both consumes and produces this layout, so without the upfront
+            # put the first call compiles for replicated inputs and the
+            # second call recompiles for sharded ones.
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as _P
+
+            axes = (
+                (program.node_axis,) if isinstance(program.node_axis, str)
+                else tuple(program.node_axis)
+            )
+
+            def _put(tree):
+                return jax.tree.map(
+                    lambda l: jax.device_put(
+                        l,
+                        NamedSharding(
+                            program.mesh, _P(axes, *([None] * (l.ndim - 1)))
+                        ),
+                    ),
+                    tree,
+                )
+
+            self.params = _put(self.params)
+            self.opt_state = _put(self.opt_state)
+            self.cstate = _put(self.cstate)
         t0 = time.perf_counter()
         if gossip_first:
             self.params = self._mix(self._mix_op(), self.params)

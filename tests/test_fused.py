@@ -16,6 +16,7 @@ import pytest
 from repro.core import decavg
 from repro.core import partition as P
 from repro.data.loader import NodeLoader, round_batch_indices
+from repro.models.mlp import init_mlp
 from repro.train.trainer import DecentralizedTrainer
 
 N_NODES = 10
@@ -110,6 +111,12 @@ class TestFusedLoopEquivalence:
         with pytest.raises(ValueError, match="run_fused supports"):
             tr.run_fused(2)
 
+    def test_fused_backends_mirror_capability_matrix(self):
+        from repro.train.trainer import _FUSED_BACKENDS
+
+        caps = decavg.GossipEngine.capabilities()
+        assert set(_FUSED_BACKENDS) == {b for b, c in caps.items() if c["fused"]}
+
     def test_streams_chunks_to_on_round(self, setup):
         """eval_every chunking: one scan dispatch per eval round, callbacks
         in the same order/rounds as the loop, wall clock monotone."""
@@ -129,6 +136,64 @@ class TestFusedLoopEquivalence:
         tr = make_trainer(setup)
         assert tr.run_fused(4) == []
         assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(tr.params))
+
+
+class TestFusedEngineBackends:
+    """Fused-vs-loop for the engine-held backends the tentpole adds.
+
+    ``sparse_sharded`` must be BIT-identical (ring/allgather halo assembly is
+    pure data movement and both paths build W via csr_from_graph); locally the
+    mesh has one device, so this exercises the degenerate 1-shard layout —
+    tests/test_fused_sharded.py covers 8 shards in a subprocess.
+    ``sparse_pallas`` fuses the 8-row-blocked kernel while the loop runs the
+    scalar interpret kernel off-TPU: the two sum in different orders, and the
+    ~1e-7 per-mix gap is amplified by the SGD rounds *between* mixes, so the
+    sparser the cadence the looser the budget. A small member model keeps the
+    interpret-mode kernels affordable.
+    """
+
+    SMALL = dict(init_fn=lambda k: init_mlp(k, in_dim=DIM, hidden=(16,)))
+
+    @pytest.mark.parametrize("backend", ["sparse_pallas", "sparse_sharded"])
+    @pytest.mark.parametrize(
+        "topology", ["er:n=10,p=0.5", "er:n=10,p=0.5@rewire=2"],
+        ids=["static", "rewire"],
+    )
+    @pytest.mark.parametrize("gossip_every", [1, 3])
+    def test_params_and_metrics_match(self, setup, backend, topology, gossip_every):
+        ds, _ = setup
+        kw = dict(topology=topology, mix_impl=backend, gossip_every=gossip_every,
+                  **self.SMALL)
+        if backend == "sparse_sharded":
+            loop = make_trainer(setup, **kw)
+            ha = loop.run(4, eval_every=2, x_test=ds.x_test, y_test=ds.y_test)
+            fused = make_trainer(setup, **kw)
+            hb = fused.run_fused(4, eval_every=2, x_test=ds.x_test, y_test=ds.y_test)
+            assert_trees_close(loop.params, fused.params, rtol=0, atol=0)
+            assert_trees_close(loop.opt_state, fused.opt_state, rtol=0, atol=0)
+            assert_histories_close(ha, hb)
+        else:
+            loop = make_trainer(setup, **kw)
+            loop.run(4)
+            fused = make_trainer(setup, **kw)
+            fused.run_fused(4)
+            tol = 1e-6 if gossip_every == 1 else 5e-4
+            assert_trees_close(loop.params, fused.params, rtol=tol, atol=tol)
+            assert_trees_close(loop.opt_state, fused.opt_state, rtol=tol, atol=tol)
+
+    def test_loop_backends_agree_across_periods(self, setup):
+        """Regression: ``_jit_for_period`` once jitted the bound method, and
+        equal bound methods share one pjit cache entry — after the first
+        period change the loop silently reused the executable traced with the
+        OLD period's engine state. All loop backends must agree on a @rewire
+        schedule."""
+        kw = dict(topology="er:n=10,p=0.5@rewire=2", gossip_every=1, **self.SMALL)
+        ref = make_trainer(setup, mix_impl="sparse", **kw)
+        ref.run(4)  # crosses the period-1 boundary at round 2
+        for backend in ("sparse_pallas", "sparse_sharded"):
+            tr = make_trainer(setup, mix_impl=backend, **kw)
+            tr.run(4)
+            assert_trees_close(tr.params, ref.params, rtol=1e-6, atol=1e-6)
 
 
 class TestMixingProgram:
@@ -176,6 +241,54 @@ class TestMixingProgram:
         a = jax.jit(lambda p: prog.apply(p, jnp.int32(0)))(params)
         b = jax.jit(lambda p: plain.apply(p, jnp.int32(0)))(params)
         np.testing.assert_allclose(np.asarray(a["p"]), np.asarray(b["p"]), atol=1e-6)
+
+    def test_all_sparse_kinds_apply_match_dense(self):
+        """One engine, four staged kinds: every period's in-scan mix agrees
+        with the dense reference program (sparse/sparse_sharded exactly —
+        same csr_from_graph values, exact-zero padding — pallas at 1e-6)."""
+        e = decavg.GossipEngine("er:n=8,p=0.5@rewire=1", seed=7)
+        dense = e.program(3, kind="dense")
+        params = {"p": jax.random.normal(jax.random.PRNGKey(2), (8, 9))}
+        tol = {"sparse": 5e-7, "sparse_pallas": 1e-6, "sparse_sharded": 5e-7}
+        for kind, atol in tol.items():
+            prog = e.program(3, kind=kind)
+            assert prog.kind == kind and prog.num_periods == 3
+            for r in range(3):
+                a = jax.jit(lambda p, r=r: dense.apply(p, jnp.int32(r)))(params)
+                b = jax.jit(lambda p, r=r, prog=prog: prog.apply(p, jnp.int32(r)))(params)
+                np.testing.assert_allclose(
+                    np.asarray(a["p"]), np.asarray(b["p"]), atol=atol
+                )
+
+    def test_stacked_layout_staging_invariants(self):
+        """The period axis of every staged layout matches num_periods, and
+        padding is uniform across periods (one shape for the whole scan)."""
+        e = decavg.GossipEngine("er:n=16,p=0.3@rewire=1", seed=11)
+        bell = e.program(3, kind="sparse_pallas")
+        assert bell.bell_idx.shape[0] == 3 and bell.bell_val.shape[0] == 3
+        assert bell.bell_val.shape[1:] == (
+            bell.bell_idx.shape[1] * 8, bell.bell_idx.shape[2] * 8,
+        )
+        assert bell.w is None and bell.rows is None  # no dense/CSR staging
+        sh = e.program(3, kind="sparse_sharded")
+        assert sh.sh_values.shape[0] == 3
+        assert sh.sh_rows.shape == sh.sh_cols.shape == sh.sh_values.shape
+        assert sh.shards == sh.sh_halo.shape[1]
+        assert len(sh.sh_ring_send) == len(sh.sh_ring_recv) == sh.shards - 1
+        assert sh.mesh is not None and sh.halo_schedule == "auto"
+
+    def test_pad_ratio_logged(self):
+        """pad_ratio = staged operator slots per real W entry — 1.0 when
+        nothing is padded (dense, single-period sparse), > 1 for blocked/
+        sharded layouts, and finite always (ISSUE 6 satellite)."""
+        static = decavg.GossipEngine("er:n=8,p=0.5", seed=0)
+        assert static.program(2, kind="dense").pad_ratio == 1.0
+        assert static.program(2, kind="sparse").pad_ratio == 1.0
+        for kind in ("sparse", "sparse_pallas", "sparse_sharded"):
+            r = decavg.GossipEngine(
+                "er:n=8,p=0.4@rewire=1", seed=4
+            ).program(3, kind=kind).pad_ratio
+            assert np.isfinite(r) and r >= 1.0
 
     def test_program_validates_args(self):
         e = decavg.GossipEngine("ring:n=8")

@@ -61,6 +61,33 @@ def test_ell_from_csr_padding_invariants(n, p, seed):
     np.testing.assert_allclose(rec, w.astype(np.float32), atol=1e-7)
 
 
+@given(
+    st.integers(2, 40),
+    st.floats(0.05, 0.9),
+    st.integers(0, 10**6),
+    st.sampled_from(["decavg", "uniform", "mh"]),
+)
+@settings(max_examples=25, deadline=None)
+def test_csr_from_graph_matches_dense_route(n, p, seed, kind):
+    """The edge-list staging path (what program() uses to avoid O(T*N^2)
+    host memory) carries the same support and values as going through the
+    dense matrix — for every matrix kind and ragged data sizes."""
+    g = T.erdos_renyi(n, p, seed=seed)
+    sizes = np.random.default_rng(seed).uniform(0.5, 5.0, size=n)
+    dense = {
+        "decavg": lambda: M.decavg_matrix(g, sizes),
+        "uniform": lambda: M.uniform_neighbor_matrix(g),
+        "mh": lambda: M.metropolis_hastings_matrix(g),
+    }[kind]()
+    ref = S.csr_from_dense(dense)
+    got = S.csr_from_graph(g, sizes if kind == "decavg" else None, matrix=kind)
+    np.testing.assert_array_equal(np.asarray(got.indptr), np.asarray(ref.indptr))
+    np.testing.assert_array_equal(np.asarray(got.indices), np.asarray(ref.indices))
+    np.testing.assert_allclose(
+        np.asarray(got.values), np.asarray(ref.values), atol=1e-6
+    )
+
+
 @given(st.integers(2, 40), st.floats(0.05, 0.9), st.integers(0, 10**6))
 @settings(max_examples=15, deadline=None)
 def test_shard_csr_round_trip(n, p, seed):

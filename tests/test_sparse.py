@@ -52,6 +52,133 @@ class TestCSR:
         assert np.all(val[1] [2:] == 0.0)
 
 
+class TestCSRFromGraph:
+    """Direct edge-list CSR construction — same support and allclose values
+    as compressing the dense matrix, without materializing it."""
+
+    @pytest.mark.parametrize("kind", ["decavg", "uniform", "mh"])
+    @pytest.mark.parametrize("spec", SPECS)
+    def test_matches_dense_reference(self, kind, spec):
+        g = T.make(spec, seed=3)
+        n = g.num_nodes
+        sizes = np.random.default_rng(7).uniform(0.5, 5.0, size=n)
+        dense = {
+            "decavg": lambda: M.decavg_matrix(g, sizes),
+            "uniform": lambda: M.uniform_neighbor_matrix(g),
+            "mh": lambda: M.metropolis_hastings_matrix(g),
+        }[kind]()
+        ref = S.csr_from_dense(dense)
+        got = S.csr_from_graph(g, sizes, matrix=kind)
+        np.testing.assert_array_equal(np.asarray(got.rows), np.asarray(ref.rows))
+        np.testing.assert_array_equal(
+            np.asarray(got.indices), np.asarray(ref.indices)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.indptr), np.asarray(ref.indptr)
+        )
+        np.testing.assert_allclose(
+            np.asarray(got.values), np.asarray(ref.values), rtol=2e-7, atol=0
+        )
+
+    def test_zero_size_sources_dropped(self):
+        """Zero-|D_j| neighbors get weight 0 in Eq. 1 — the direct build must
+        drop them exactly like csr_from_dense's |w| > 0 support rule."""
+        g = T.make("er:n=12,p=0.5", seed=0)
+        sizes = np.ones(12)
+        sizes[3] = sizes[7] = 0.0
+        ref = S.csr_from_dense(M.decavg_matrix(g, sizes))
+        got = S.csr_from_graph(g, sizes, matrix="decavg")
+        assert got.nnz == ref.nnz
+        np.testing.assert_array_equal(np.asarray(got.indices), np.asarray(ref.indices))
+
+    def test_isolated_zero_data_row_keeps_own_model(self):
+        """A node whose closed neighborhood has zero total data keeps its own
+        model (dense path's bad-row fix)."""
+        adj = np.zeros((4, 4), bool)
+        adj[0, 1] = adj[1, 0] = True  # node 2, 3 isolated
+        g = T.Graph(adj=adj, name="pair")
+        sizes = np.array([1.0, 1.0, 0.0, 1.0])
+        got = S.csr_from_graph(g, sizes, matrix="decavg")
+        np.testing.assert_allclose(
+            S.csr_to_dense(got)[2], np.eye(4, dtype=np.float32)[2]
+        )
+
+    def test_default_sizes_uniform(self):
+        g = T.make("ring:n=8")
+        a = S.csr_from_graph(g)
+        b = S.csr_from_graph(g, np.ones(8))
+        np.testing.assert_array_equal(np.asarray(a.values), np.asarray(b.values))
+
+    def test_rejects_bad_args(self):
+        g = T.make("ring:n=8")
+        with pytest.raises(ValueError, match="matrix"):
+            S.csr_from_graph(g, matrix="nope")
+        with pytest.raises(ValueError, match="data_sizes"):
+            S.csr_from_graph(g, np.ones(5))
+
+
+class TestStackedLayouts:
+    """Cross-period padding for the fused program: stacked blocked-ELL and
+    stacked ShardedCSR reconstruct every period's W exactly."""
+
+    def _csrs(self):
+        return [
+            S.csr_from_graph(T.make(f"er:n=24,p={p}", seed=s))
+            for s, p in enumerate((0.15, 0.5, 0.08))
+        ]
+
+    def test_stack_block_ell_reconstructs(self):
+        csrs = self._csrs()
+        idx, val = S.stack_block_ell(csrs)
+        assert idx.shape[0] == val.shape[0] == 3
+        assert (idx.shape[2] * 8) % 128 == 0  # lane alignment survives stacking
+        assert val.shape[1:] == (idx.shape[1] * 8, idx.shape[2] * 8)
+        for t, c in enumerate(csrs):
+            rec = np.zeros((24, 24), np.float32)
+            for b in range(idx.shape[1]):
+                for s in range(idx.shape[2]):
+                    sb = idx[t, b, s]
+                    rec[b * 8:(b + 1) * 8, sb * 8:(sb + 1) * 8] += (
+                        val[t, b * 8:(b + 1) * 8, s * 8:(s + 1) * 8]
+                    )
+            np.testing.assert_allclose(rec, S.csr_to_dense(c), atol=0)
+
+    def test_stack_shard_csr_reconstructs_with_scratch_remap(self):
+        csrs = self._csrs()
+        shcsrs = [S.shard_csr(c, 4) for c in csrs]
+        st = S.stack_shard_csr(shcsrs)
+        h_max = st["halo"].shape[2]
+        assert h_max == max(s.halo_width for s in shcsrs)
+        blk = 6
+        for t, c in enumerate(csrs):
+            rec = np.zeros((24, 24), np.float32)
+            for s in range(4):
+                np.add.at(
+                    rec,
+                    (st["rows"][t, s] + s * blk,
+                     st["halo"][t, s][st["cols"][t, s]]),
+                    st["values"][t, s],
+                )
+            np.testing.assert_allclose(rec, S.csr_to_dense(c), atol=0)
+            # scratch slots follow the widened halo: every destination is a
+            # real slot < halo_width_t or exactly the stacked scratch h_max
+            ld = st["local_dst"][t]
+            assert np.all((ld < shcsrs[t].halo_width) | (ld == h_max))
+            for d in range(3):
+                rr = st["ring_recv"][d][t]
+                assert np.all((rr < shcsrs[t].halo_width) | (rr == h_max))
+            # per-shard padded entries keep segment ids sorted
+            assert np.all(np.diff(st["rows"][t], axis=1) >= 0)
+
+    def test_stack_rejects_mismatched_periods(self):
+        a = S.csr_from_graph(T.make("ring:n=8"))
+        b = S.csr_from_graph(T.make("ring:n=16"))
+        with pytest.raises(ValueError, match="share"):
+            S.stack_block_ell([a, b])
+        with pytest.raises(ValueError, match="share"):
+            S.stack_shard_csr([S.shard_csr(a, 2), S.shard_csr(b, 2)])
+
+
 class TestSparseEquivalence:
     @pytest.mark.parametrize("spec", SPECS)
     def test_segment_sum_matches_dense(self, spec):
