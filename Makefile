@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test coverage bench-mixing bench-wire bench-rounds bench quickstart install sweep-smoke sweep-paper
+.PHONY: verify test coverage bench-mixing bench-wire bench-rounds bench quickstart install sweep-smoke sweep-paper sweep-churn-smoke
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -20,6 +20,11 @@ sweep-large-n-smoke:  ## tiny-N large_n stand-in: fused sparse_sharded end to en
 	$(PY) -m repro.experiments.sweep --preset large_n_smoke \
 	    --store results/sweep_large_n_smoke.jsonl \
 	    --bench-out BENCH_large_n_smoke.json
+
+sweep-churn-smoke:  ## hub-kill vs leaf-kill churn gate (faults subsystem)
+	$(PY) -m repro.experiments.sweep --preset churn_smoke \
+	    --store results/sweep_churn_smoke.jsonl \
+	    --bench-out BENCH_churn_smoke.json
 
 sweep-paper:  ## the paper's N=100 matrix (ER/BA/SBM x splits x 3 seeds)
 	$(PY) -m repro.experiments.sweep --preset paper \

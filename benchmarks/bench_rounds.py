@@ -67,7 +67,8 @@ SHARDED_ROUNDS = 100
 
 
 def make_trainer(
-    n: int, backend: str, ds, seed: int = 0, topology: str | None = None
+    n: int, backend: str, ds, seed: int = 0, topology: str | None = None,
+    faults: str | None = None,
 ) -> DecentralizedTrainer:
     parts = P.iid(ds.y_train, n, seed=seed)
     loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=BATCH, seed=seed)
@@ -78,6 +79,7 @@ def make_trainer(
         momentum=0.9,
         mix_impl=backend,
         seed=seed,
+        faults=faults,
         init_fn=lambda k: init_mlp(k, in_dim=DIM, hidden=HIDDEN, num_classes=10),
     )
 
@@ -179,6 +181,54 @@ def _sharded_worker() -> None:
     print(json.dumps(row))
 
 
+# The faulted fused row's fault spec: all three clause kinds active so the
+# row pays every mask (per-round renormalization, dead-node where, straggler
+# ring buffer) — the worst case the CI overhead guard (<= 1.3x fault-free)
+# is meant to bound.
+FAULT_SPEC = "churn:p_leave=0.05,p_join=0.5;straggler:frac=0.2,delay=3;drop:p_edge=0.1"
+
+
+def bench_faulted(n: int, rounds: int, ds, baseline: dict) -> dict:
+    """Fused dense row under a full fault schedule, vs its fault-free twin.
+
+    ``fault_overhead`` = fault-free fused rounds/s over faulted fused
+    rounds/s (>= 1.0 means masking costs throughput; CI guards <= 1.3x).
+    """
+    fused_s = _time_run(
+        make_trainer(n, "dense", ds, faults=FAULT_SPEC).run_fused, rounds
+    )
+    loop_s = _time_run(
+        make_trainer(n, "dense", ds, faults=FAULT_SPEC).run, rounds
+    )
+    a = make_trainer(n, "dense", ds, faults=FAULT_SPEC)
+    a.run(rounds)
+    b = make_trainer(n, "dense", ds, faults=FAULT_SPEC)
+    b.run_fused(rounds)
+    err = max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params))
+    )
+    row = {
+        "n": n,
+        "backend": "dense",
+        "faults": FAULT_SPEC,
+        "rounds": rounds,
+        "loop_rounds_per_s": round(rounds / loop_s, 1),
+        "fused_rounds_per_s": round(rounds / fused_s, 1),
+        "speedup": round(loop_s / fused_s, 2),
+        "fault_overhead": round(
+            baseline["fused_rounds_per_s"] / (rounds / fused_s), 3
+        ),
+        "max_abs_param_err": err,
+    }
+    print(
+        f"n={n:4d} dense+faults loop {row['loop_rounds_per_s']:8.1f} r/s   "
+        f"fused {row['fused_rounds_per_s']:8.1f} r/s   "
+        f"overhead {row['fault_overhead']:.3f}x   err {row['max_abs_param_err']:.2e}"
+    )
+    return row
+
+
 def bench_sharded() -> dict:
     """The sparse_sharded row, via a subprocess with an 8-device mesh."""
     env = dict(os.environ)
@@ -219,9 +269,10 @@ def main() -> None:
         return
 
     ds = make_mnist_like(train_per_class=200, test_per_class=50, dim=DIM, seed=0)
+    dense_row = bench_one(100, "dense", args.rounds, ds)
     rows = [
         # the acceptance row: N=100 dense at the full round count
-        bench_one(100, "dense", args.rounds, ds),
+        dense_row,
         # informational: the sparse program at larger N, fewer rounds
         bench_one(256, "sparse", max(args.rounds // 2, 10), ds),
         # the Pallas blocked-ELL program (interpret mode on CPU, so small
@@ -230,6 +281,9 @@ def main() -> None:
         bench_one(64, "sparse_pallas", max(args.rounds // 10, 5), ds),
         # the sharded acceptance row: CI guards >= 2x and err == 0.0
         bench_sharded(),
+        # full fault schedule on the dense acceptance config: CI guards
+        # fault_overhead <= 1.3x the fault-free fused rate
+        bench_faulted(100, args.rounds, ds, dense_row),
     ]
     out = {
         "bench": "fused vs loop training rounds/s (benchmarks/bench_rounds.py)",

@@ -69,6 +69,7 @@ __all__ = [
     "mix_pallas",
     "mix_sharded",
     "mix_sharded_sparse",
+    "mix_sharded_sparse_faulted",
     "mix_permute",
     "gossip_error",
 ]
@@ -222,6 +223,33 @@ def _mix_leaves_concatenated(params: PyTree, n: int, mix_cat) -> PyTree:
     )
 
 
+def _mix_leaves_concatenated2(params: PyTree, pub: PyTree, n: int, mix_cat2) -> PyTree:
+    """Two-tree variant of ``_mix_leaves_concatenated`` for faulted mixing:
+    flattens ``params`` (current) and ``pub`` (published snapshots) into
+    identically laid out (n, P_total) f32 matrices and runs ``mix_cat2``
+    once over both — the faulted round needs both because stragglers gossip
+    stale snapshots while the diagonal self-term stays fresh."""
+    leaves, treedef = jax.tree.flatten(params)
+    pleaves = jax.tree.leaves(pub)
+    for leaf in leaves:
+        if leaf.shape[0] != n:
+            raise ValueError(f"leaf leading axis {leaf.shape[0]} != num_nodes {n}")
+    flats = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+    pflats = [l.reshape(n, -1).astype(jnp.float32) for l in pleaves]
+    cat = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=1)
+    pcat = pflats[0] if len(pflats) == 1 else jnp.concatenate(pflats, axis=1)
+    out = mix_cat2(cat, pcat)
+    if len(flats) == 1:
+        outs = [out]
+    else:
+        splits = np.cumsum([f.shape[1] for f in flats])[:-1]
+        outs = jnp.split(out, splits, axis=1)
+    return jax.tree.unflatten(
+        treedef,
+        [o.reshape(l.shape).astype(l.dtype) for o, l in zip(outs, leaves)],
+    )
+
+
 def _sharded_mix_leaf(
     halo, rows, cols, values, local_src, local_dst, ring_send, ring_recv,
     leaf, *, axes, shards, blk, h, ring, p_chunk,
@@ -363,6 +391,130 @@ def mix_sharded_sparse(
     return _mix_leaves_concatenated(params, n, mix_cat)
 
 
+def _sharded_mix_leaf_faulted(
+    halo, rows, cols, values, keep, alive, local_src, local_dst,
+    ring_send, ring_recv, cur, pub, *, axes, shards, blk, h, ring,
+):
+    """Faulted twin of ``_sharded_mix_leaf``: one shard's renormalized mix.
+
+    Two data slabs instead of one: ``cur`` (this shard's current params)
+    and ``pub`` (its *published* snapshots — stale for stragglers). The
+    halo exchange moves published rows; ``keep`` arrives as the round's
+    (S, E) entry mask and ``alive`` as the replicated (N,) node mask. The
+    round per shard is ``segment_sum(pub_halo * W_renorm) + diag * (cur -
+    pub)`` with dead / empty rows passing ``cur`` through bit-unchanged —
+    identical semantics to ``faults.mix_faulted_csr`` on global ids, so
+    loop and fused faulted sharded runs agree exactly.
+    """
+    from repro.core import faults as _faults
+
+    idx = jax.lax.axis_index(axes)
+    curf = cur.reshape(cur.shape[0], -1).astype(jnp.float32)  # (blk, p)
+    pubf = pub.reshape(pub.shape[0], -1).astype(jnp.float32)
+    halo_s = jax.lax.dynamic_index_in_dim(halo, idx, 0, keepdims=False)
+    if ring:
+        buf = jnp.zeros((h + 1, pubf.shape[1]), jnp.float32)
+        ls = jax.lax.dynamic_index_in_dim(local_src, idx, 0, keepdims=False)
+        ld = jax.lax.dynamic_index_in_dim(local_dst, idx, 0, keepdims=False)
+        buf = buf.at[ld].set(pubf[ls])
+        for d, (sidx, rslot) in enumerate(zip(ring_send, ring_recv), 1):
+            if sidx.shape[1] == 0:
+                continue
+            send = jax.lax.dynamic_index_in_dim(sidx, idx, 0, keepdims=False)
+            got = jax.lax.ppermute(
+                pubf[send], axes,
+                [(s, (s + d) % shards) for s in range(shards)],
+            )
+            slot = jax.lax.dynamic_index_in_dim(rslot, idx, 0, keepdims=False)
+            buf = buf.at[slot].set(got)
+        buf = buf[:h]
+    else:
+        full = jax.lax.all_gather(pubf, axes, axis=0, tiled=True)  # (n, p)
+        buf = full[halo_s]
+    r = jax.lax.dynamic_index_in_dim(rows, idx, 0, keepdims=False)
+    c = jax.lax.dynamic_index_in_dim(cols, idx, 0, keepdims=False)
+    v = jax.lax.dynamic_index_in_dim(values, idx, 0, keepdims=False)
+    k = jax.lax.dynamic_index_in_dim(keep, idx, 0, keepdims=False)
+    vn, ok = _faults.renorm_values(v, k, r, blk)
+    # Diagonal coefficient per local row: entries whose global source is
+    # the destination itself (padded slots carry v == 0, so a spurious
+    # halo-pad match contributes nothing).
+    is_diag = halo_s[c] == idx * blk + r
+    dcoef = jax.ops.segment_sum(
+        jnp.where(is_diag, vn, 0.0), r, num_segments=blk,
+        indices_are_sorted=True,
+    )
+    # Off-diagonal rewrite (cf. faults.mix_faulted_csr): stale publishes
+    # flow through non-self entries only, the fresh self term is added
+    # directly — one fewer params-sized elementwise pass per round.
+    vn_od = jnp.where(is_diag, 0.0, vn)
+    out = jax.ops.segment_sum(
+        buf[c] * vn_od[:, None], r, num_segments=blk, indices_are_sorted=True
+    )
+    out = out + dcoef[:, None] * curf
+    alive_s = jax.lax.dynamic_slice_in_dim(alive, idx * blk, blk)
+    okr = ok & alive_s
+    out = jnp.where(okr[:, None], out, curf)
+    return out.reshape(cur.shape).astype(cur.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "node_axis", "halo_schedule")
+)
+def mix_sharded_sparse_faulted(
+    shcsr,
+    params: PyTree,
+    pub: PyTree,
+    keep: jax.Array,
+    alive: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    node_axis: str | tuple[str, ...] = "data",
+    halo_schedule: Literal["allgather", "ring", "auto"] = "allgather",
+) -> PyTree:
+    """One faulted sharded sparse DecAvg round (cf. ``mix_sharded_sparse``).
+
+    ``keep`` is the round's (S, E) per-shard entry mask and ``alive`` the
+    (N,) node mask (both replicated — they are tiny next to P). ``pub`` is
+    the published-snapshot pytree (pass ``params`` when no stragglers).
+    Feature-axis chunking is not supported under faults (the engine rejects
+    the combination): the renormalization is per-entry, so the chunked
+    serialization would recompute it per chunk for no transient win.
+    """
+    axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
+    if shcsr.shards != shards:
+        raise ValueError(
+            f"ShardedCSR built for {shcsr.shards} shards but mesh axis "
+            f"{axes} has {shards}"
+        )
+    n = shcsr.shape[0]
+    blk = shcsr.rows_per_shard
+    h = shcsr.halo_width
+    if halo_schedule == "auto":
+        halo_schedule = "ring" if shcsr.ring_width < n - blk else "allgather"
+    ring = halo_schedule == "ring"
+    body = functools.partial(
+        _sharded_mix_leaf_faulted, axes=axes, shards=shards, blk=blk, h=h,
+        ring=ring,
+    )
+
+    def mix_cat2(cat: jax.Array, pcat: jax.Array) -> jax.Array:
+        spec = P(axes, None)
+        return _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(),) * 10 + (spec, spec),
+            out_specs=spec,
+        )(shcsr.halo, shcsr.rows, shcsr.cols, shcsr.values, keep, alive,
+          shcsr.local_src, shcsr.local_dst, shcsr.ring_send, shcsr.ring_recv,
+          cat, pcat)
+
+    return _mix_leaves_concatenated2(params, pub, n, mix_cat2)
+
+
 def mix_permute(
     w: jax.Array | Any,
     params: PyTree,
@@ -432,10 +584,12 @@ def mix_permute(
         "pad_ratio", "bell_idx", "bell_val",
         "sh_halo", "sh_rows", "sh_cols", "sh_values",
         "sh_local_src", "sh_local_dst", "sh_ring_send", "sh_ring_recv",
+        "f_alive", "f_keep", "f_delay",
     ),
     meta_fields=(
         "kind", "n", "num_periods", "cadence", "p_chunk",
         "interpret", "mesh", "node_axis", "shards", "halo_schedule",
+        "faulted", "delay_max",
     ),
 )
 @dataclasses.dataclass(frozen=True)
@@ -512,6 +666,13 @@ class MixingProgram:
     node_axis: str | None = None
     shards: int | None = None
     halo_schedule: str | None = None
+    # Fault-injection axis (core/faults.py), staged by round rather than by
+    # period — masks are drawn per round even within one schedule period.
+    faulted: bool = False
+    delay_max: int = 0  # straggler ring-buffer depth is delay_max + 1
+    f_alive: jax.Array | None = None  # (rounds, N) bool
+    f_keep: jax.Array | None = None  # (rounds,N,N) | (rounds,E) | (rounds,S,E)
+    f_delay: jax.Array | None = None  # (N,) int32 per-node staleness
 
     @property
     def rounds(self) -> int:
@@ -536,10 +697,36 @@ class MixingProgram:
             rows_per_shard=self.n // self.shards,
         )
 
-    def apply(self, params: PyTree, r: jax.Array) -> PyTree:
+    def apply(self, params: PyTree, r: jax.Array, pub: PyTree | None = None) -> PyTree:
         """One unconditional mixing round with round ``r``'s operator
-        (``r`` may be a tracer inside a scan body)."""
+        (``r`` may be a tracer inside a scan body).
+
+        When the program is ``faulted``, round ``r``'s alive / entry-keep
+        masks renormalize the operator on the fly and ``pub`` supplies the
+        published snapshots stragglers gossip (defaults to ``params``)."""
         t = self.period_idx[r]
+        if self.faulted:
+            from repro.core import faults as _faults
+
+            keep, alive = self.f_keep[r], self.f_alive[r]
+            if pub is None:
+                pub = params
+            if self.kind == "dense":
+                return _faults.mix_faulted_dense(
+                    self.w[t], keep, alive, params, pub
+                )
+            if self.kind == "sparse":
+                return _faults.mix_faulted_csr(
+                    self.rows[t], self.cols[t], self.values[t],
+                    keep, alive, self.n, params, pub,
+                )
+            if self.kind == "sparse_sharded":
+                return mix_sharded_sparse_faulted(
+                    self._shcsr_at(t), params, pub, keep, alive,
+                    mesh=self.mesh, node_axis=self.node_axis,
+                    halo_schedule=self.halo_schedule,
+                )
+            raise ValueError(f"kind {self.kind!r} does not support faults")
         if self.kind == "dense":
             return mix_dense(self.w[t], params)
         if self.kind == "sparse_pallas":
@@ -588,14 +775,19 @@ class MixingProgram:
 
         return jax.tree.map(leaf, params)
 
-    def mix_at(self, params: PyTree, r: jax.Array) -> PyTree:
+    def mix_at(self, params: PyTree, r: jax.Array, pub: PyTree | None = None) -> PyTree:
         """``apply`` gated by the gossip cadence (identity on skip rounds)."""
         if self.cadence == "never":
             return params
         if self.cadence == "always":
-            return self.apply(params, r)
+            return self.apply(params, r, pub)
+        if pub is None:
+            return jax.lax.cond(
+                self.gossip_mask[r], lambda p: self.apply(p, r), lambda p: p, params
+            )
         return jax.lax.cond(
-            self.gossip_mask[r], lambda p: self.apply(p, r), lambda p: p, params
+            self.gossip_mask[r],
+            lambda a: self.apply(a[0], r, a[1]), lambda a: a[0], (params, pub),
         )
 
     def _sharded_static(self) -> tuple[tuple[str, ...], bool, int]:
@@ -614,10 +806,11 @@ class MixingProgram:
             sched = "ring" if ring_width < self.n - blk else "allgather"
         return axes, sched == "ring", blk
 
-    def apply_local(self, params: PyTree, r: jax.Array) -> PyTree:
+    def apply_local(self, params: PyTree, r: jax.Array, pub: PyTree | None = None) -> PyTree:
         """Kind "sparse_sharded" only: round ``r``'s mix on this device's
         LOCAL (N/S, ...) slab — must be called inside a ``shard_map`` over
-        ``node_axis``.
+        ``node_axis``. Under ``faulted`` programs, ``pub`` is the local slab
+        of published snapshots (defaults to ``params``).
 
         This is what lets the fused trainer keep the ENTIRE round scan under
         one shard_map (train step genuinely node-sharded, carry never
@@ -632,6 +825,20 @@ class MixingProgram:
             )
         t = self.period_idx[r]
         axes, ring, blk = self._sharded_static()
+        if self.faulted:
+            mix = functools.partial(
+                _sharded_mix_leaf_faulted,
+                self.sh_halo[t], self.sh_rows[t], self.sh_cols[t],
+                self.sh_values[t], self.f_keep[r], self.f_alive[r],
+                self.sh_local_src[t], self.sh_local_dst[t],
+                tuple(a[t] for a in self.sh_ring_send),
+                tuple(a[t] for a in self.sh_ring_recv),
+                axes=axes, shards=self.shards, blk=blk,
+                h=int(self.sh_halo.shape[2]), ring=ring,
+            )
+            return _mix_leaves_concatenated2(
+                params, params if pub is None else pub, blk, mix
+            )
         mix = functools.partial(
             _sharded_mix_leaf,
             self.sh_halo[t], self.sh_rows[t], self.sh_cols[t],
@@ -643,15 +850,21 @@ class MixingProgram:
         )
         return _mix_leaves_concatenated(params, blk, mix)
 
-    def mix_at_local(self, params: PyTree, r: jax.Array) -> PyTree:
+    def mix_at_local(self, params: PyTree, r: jax.Array, pub: PyTree | None = None) -> PyTree:
         """``apply_local`` gated by the gossip cadence (cf. ``mix_at``)."""
         if self.cadence == "never":
             return params
         if self.cadence == "always":
-            return self.apply_local(params, r)
+            return self.apply_local(params, r, pub)
+        if pub is None:
+            return jax.lax.cond(
+                self.gossip_mask[r],
+                lambda p: self.apply_local(p, r), lambda p: p, params,
+            )
         return jax.lax.cond(
             self.gossip_mask[r],
-            lambda p: self.apply_local(p, r), lambda p: p, params,
+            lambda a: self.apply_local(a[0], r, a[1]), lambda a: a[0],
+            (params, pub),
         )
 
 
@@ -661,25 +874,31 @@ class MixingProgram:
 
 _MATRIX_KINDS = ("decavg", "uniform", "mh")
 
-# Backend -> (requirement summary, large-N cost of one round, fused). Source
-# of truth for GossipEngine.capabilities() and the README matrix. ``fused``
-# means program() can stage every schedule period for this backend, so
-# DecentralizedTrainer.run_fused covers it (its _FUSED_BACKENDS mirrors this
-# flag, pinned by test).
+# Backend -> (requirement summary, large-N cost of one round, fused, faults).
+# Source of truth for GossipEngine.capabilities() and the README matrix.
+# ``fused`` means program() can stage every schedule period for this backend,
+# so DecentralizedTrainer.run_fused covers it (its _FUSED_BACKENDS mirrors
+# this flag, pinned by test). ``faults`` means the backend supports the
+# core/faults.py renormalized-mixing semantics (per-round alive / edge-drop
+# masks + straggler snapshots): the Pallas kernels bake W values into tiles
+# and the dense-sharded / permute paths precompute their collective
+# coefficients, so per-round renormalization is dense/sparse/sparse_sharded
+# territory.
 _BACKEND_INFO = {
-    "dense": ("any backend; W materialized (N,N)", "O(N^2 * P)", True),
-    "pallas": ("TPU (interpret elsewhere); W materialized (N,N)", "O(N^2 * P), zero W tiles skipped", False),
-    "sparse": ("any backend; W stored CSR, O(E) memory", "O(E * P)", True),
-    "sparse_pallas": ("TPU (interpret elsewhere); W stored blocked ELL", "O(E * P)", True),
-    "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device", False),
+    "dense": ("any backend; W materialized (N,N)", "O(N^2 * P)", True, True),
+    "pallas": ("TPU (interpret elsewhere); W materialized (N,N)", "O(N^2 * P), zero W tiles skipped", False, False),
+    "sparse": ("any backend; W stored CSR, O(E) memory", "O(E * P)", True, True),
+    "sparse_pallas": ("TPU (interpret elsewhere); W stored blocked ELL", "O(E * P)", True, False),
+    "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device", False, False),
     "sparse_sharded": (
         "mesh with node axis (default: all local devices); N divisible by "
         "shards; W stored per-shard CSR with halo columns; halo_schedule "
         "allgather|ring|auto",
         "O(E * P / S) work per device; wire O(N * P) allgather / O(H * P) ring",
         True,
+        True,
     ),
-    "permute": ("mesh with node axis; N == |axis|; recolors per schedule period", "O(degree * P) wire per device", False),
+    "permute": ("mesh with node axis; N == |axis|; recolors per schedule period", "O(degree * P) wire per device", False, False),
 }
 
 
@@ -713,6 +932,11 @@ class GossipEngine:
       sparse_p_chunk: feature-axis chunk for the sparse gather — an int,
         "auto" (sized from nnz to a ~16 MiB transient), or None (off).
         Bounds the O(nnz * P) gather buffer for very large per-leaf P.
+      faults: a fault spec string or ``FaultSchedule`` (core/faults.py) —
+        per-round churn / straggler / edge-drop injection, expanded
+        deterministically from ``seed``. Only the fault-capable backends
+        (``capabilities()[b]["faults"]``) accept it, and it does not
+        compose with ``sparse_p_chunk``.
       **topology_defaults: fallback spec params (e.g. ``n=...``) when
         ``topology`` is a spec string.
     """
@@ -737,6 +961,7 @@ class GossipEngine:
         interpret: bool | None = None,
         sparse_threshold: int = 512,
         sparse_p_chunk: int | Literal["auto"] | None = None,
+        faults: Any = None,
         validate: bool = True,
         seed: int = 0,
         **topology_defaults,
@@ -774,6 +999,21 @@ class GossipEngine:
         # sizes the chunk from nnz so the transient buffer stays ~16 MiB).
         self.sparse_p_chunk = sparse_p_chunk
         self.validate = validate
+        self.seed = int(seed)
+        if faults is not None:
+            from repro.core import faults as faults_mod
+
+            self.faults = faults_mod.FaultSchedule.parse(faults)
+            if sparse_p_chunk is not None:
+                raise ValueError(
+                    "faults do not compose with sparse_p_chunk: the faulted "
+                    "mix renormalizes per entry, so chunked gathers would "
+                    "redo it per chunk for no transient win"
+                )
+        else:
+            self.faults = None
+        self._fault_trace = None
+        self._fault_hist = None  # loop-path straggler ring buffer (mix())
         self.backend = self._resolve_backend(backend)
         if self.backend == "sparse_sharded" and self.mesh is None:
             self.mesh = self._default_node_mesh()
@@ -795,10 +1035,10 @@ class GossipEngine:
 
     @classmethod
     def capabilities(cls) -> dict[str, dict[str, str | bool]]:
-        """Backend -> {requires, cost, fused} (the README capability matrix)."""
+        """Backend -> {requires, cost, fused, faults} (the README matrix)."""
         return {
-            b: {"requires": req, "cost": cost, "fused": fused}
-            for b, (req, cost, fused) in _BACKEND_INFO.items()
+            b: {"requires": req, "cost": cost, "fused": fused, "faults": flt}
+            for b, (req, cost, fused, flt) in _BACKEND_INFO.items()
         }
 
     def _resolve_backend(self, backend: str) -> str:
@@ -811,7 +1051,8 @@ class GossipEngine:
         if self.mesh is not None:
             return (
                 "sparse_sharded"
-                if self.num_nodes >= self.sparse_threshold
+                if self.faults is not None  # dense-sharded can't renormalize
+                or self.num_nodes >= self.sparse_threshold
                 else "sharded"
             )
         return "sparse" if self.num_nodes >= self.sparse_threshold else "dense"
@@ -841,6 +1082,12 @@ class GossipEngine:
                     f"backend {backend!r}: num_nodes {self.num_nodes} not divisible "
                     f"by node shards {shards}"
                 )
+        if self.faults is not None and not _BACKEND_INFO[backend][3]:
+            capable = tuple(b for b, info in _BACKEND_INFO.items() if info[3])
+            raise ValueError(
+                f"backend {backend!r} does not support faults; "
+                f"fault-capable backends: {capable}"
+            )
 
     # -- per-period state ----------------------------------------------------
 
@@ -926,6 +1173,32 @@ class GossipEngine:
             return False
         return self.gossip_every == 1 or round % self.gossip_every == 0
 
+    @property
+    def fault_trace(self):
+        """The engine's deterministic ``FaultTrace`` (requires ``faults=``).
+        Lazy and cached: loop mixing, fused staging, and runner analytics
+        all read the same per-round masks."""
+        if self.faults is None:
+            raise ValueError("engine has no fault schedule (faults=...)")
+        if self._fault_trace is None:
+            from repro.core import faults as faults_mod
+
+            self._fault_trace = faults_mod.FaultTrace(
+                self.faults, self.schedule, seed=self.seed
+            )
+        return self._fault_trace
+
+    def sharded_csr(self, mesh: jax.sharding.Mesh | None = None):
+        """Current period's ``ShardedCSR`` for the mesh's shard count
+        (cached; rebuilt on a new period or a different shard count)."""
+        from repro.core import sparse
+
+        mesh = self.mesh if mesh is None else mesh
+        shards = mesh.shape[self.node_axis]
+        if self._shcsr is None or self._shcsr.shards != shards:
+            self._shcsr = sparse.shard_csr(self.csr, shards)
+        return self._shcsr
+
     def program(self, rounds: int, *, kind: str | None = None) -> MixingProgram:
         """Stage every schedule period of a ``rounds``-long run up front.
 
@@ -934,6 +1207,11 @@ class GossipEngine:
         single-``lax.scan`` training path. ``kind`` defaults to the backend's
         own kind for the sparse backends ("sparse", "sparse_pallas",
         "sparse_sharded") and "dense" otherwise.
+
+        With ``faults=`` set, the program additionally stages the whole
+        run's per-round alive and entry-keep masks (``f_alive``/``f_keep``,
+        one more stacked axis) plus the static per-node staleness delays —
+        a faulty multi-host run stays one compiled SPMD ``lax.scan``.
 
         The sparse kinds build each period's CSR straight from the
         schedule's graphs (``sparse.csr_from_graph``) — the dense (N, N)
@@ -945,6 +1223,59 @@ class GossipEngine:
         interleaved Python-loop run sees the same state it would have
         without this call.
         """
+        prog = self._program_operators(rounds, kind=kind)
+        if self.faults is None:
+            return prog
+        return self._attach_faults(prog, int(rounds))
+
+    def _attach_faults(self, prog: MixingProgram, rounds: int) -> MixingProgram:
+        """Stage the fault axis onto a built program: per-round alive masks
+        and entry-keep masks in the program's own operator layout."""
+        if prog.kind not in ("dense", "sparse", "sparse_sharded"):
+            raise ValueError(
+                f"program kind {prog.kind!r} does not support faults"
+            )
+        trace = self.fault_trace
+        trace.ensure(rounds)
+        f_alive = trace.alive_matrix(rounds)
+        pid = np.asarray(prog.period_idx)
+        if prog.kind == "dense":
+            keep = np.stack([trace.dense_keep(r) for r in range(rounds)])
+        elif prog.kind == "sparse":
+            rows = np.asarray(prog.rows)
+            cols = np.asarray(prog.cols)
+            values = np.asarray(prog.values)
+            keep = np.stack([
+                trace.entry_keep(r, rows[pid[r]], cols[pid[r]], values[pid[r]])
+                for r in range(rounds)
+            ])
+        else:  # sparse_sharded: per-shard layout with halo-local columns
+            halo = np.asarray(prog.sh_halo)
+            rows = np.asarray(prog.sh_rows)
+            cols = np.asarray(prog.sh_cols)
+            values = np.asarray(prog.sh_values)
+            blk = prog.n // prog.shards
+            offs = np.arange(prog.shards)[:, None] * blk
+            keep = np.stack([
+                trace.entry_keep(
+                    r,
+                    rows[pid[r]] + offs,  # local row -> global id
+                    np.take_along_axis(halo[pid[r]], cols[pid[r]], axis=1),
+                    values[pid[r]],
+                )
+                for r in range(rounds)
+            ])
+        return dataclasses.replace(
+            prog,
+            faulted=True,
+            delay_max=trace.delay_max,
+            f_alive=jnp.asarray(f_alive),
+            f_keep=jnp.asarray(keep),
+            f_delay=jnp.asarray(trace.delay),
+        )
+
+    def _program_operators(self, rounds: int, *, kind: str | None = None) -> MixingProgram:
+        """The fault-free operator staging behind ``program`` (docs there)."""
         from repro.core import sparse
 
         rounds = int(rounds)
@@ -1086,7 +1417,18 @@ class GossipEngine:
         current-period matrix is applied unconditionally (callers that
         manage ``refresh`` themselves, e.g. the trainer's jitted closure,
         must not have their period reset here). ``backend`` (alias
-        ``spec``) overrides the engine's backend for this call."""
+        ``spec``) overrides the engine's backend for this call.
+
+        With ``faults=`` set the engine runs the faulted round instead:
+        renormalized mixing over surviving neighbors, straggler snapshots
+        from an internal ring buffer (which assumes one ``mix`` call per
+        round, in round order — the lm loop's contract), dead/empty rows
+        passing through bit-unchanged. Freezing dead nodes' *training* is
+        the trainer's job; the engine only governs gossip."""
+        if self.faults is not None:
+            if round is None:
+                raise ValueError("faulted mixing needs round= (per-round masks)")
+            return self._mix_faulted(params, round, backend or spec or self.backend)
         if round is not None:
             if not self.is_gossip_round(round):
                 return params
@@ -1134,11 +1476,7 @@ class GossipEngine:
         if backend == "sparse_sharded":
             from repro.core import sparse
 
-            shards = mesh.shape[self.node_axis]
-            if self._shcsr is None or self._shcsr.shards != shards:
-                # Period-constant (and override-safe): rebuilt only on a new
-                # period or a different shard count.
-                self._shcsr = sparse.shard_csr(self.csr, shards)
+            self.sharded_csr(mesh)
             p_chunk = self.sparse_p_chunk
             if p_chunk == "auto":
                 # Size from the per-shard entry count: the gather transient
@@ -1156,6 +1494,60 @@ class GossipEngine:
                 node_axis=self.node_axis,
             )
         raise ValueError(f"unknown backend {backend!r}")
+
+    def _mix_faulted(self, params: PyTree, round: int, backend: str) -> PyTree:
+        """One faulted loop-path round (see ``mix``)."""
+        from repro.core import faults as faults_mod
+
+        self.check(backend, self.mesh)
+        self.refresh(round)
+        trace = self.fault_trace
+        # Push into the straggler ring buffer BEFORE the cadence gate: a
+        # straggler's history advances whether or not this round gossips.
+        pub = None
+        if trace.delay_max > 0:
+            if self._fault_hist is None:
+                self._fault_hist = faults_mod.init_history(
+                    params, trace.delay_max + 1
+                )
+            pub, self._fault_hist = faults_mod.push_and_publish(
+                params, self._fault_hist, jnp.int32(round),
+                jnp.asarray(trace.delay),
+            )
+        if not self.is_gossip_round(round):
+            return params
+        alive = jnp.asarray(trace.alive(round))
+        if backend == "dense":
+            keep = jnp.asarray(trace.dense_keep(round))
+            return faults_mod.mix_faulted_dense(
+                self._w, keep, alive, params, pub
+            )
+        if backend == "sparse":
+            csr = self.csr
+            keep = jnp.asarray(trace.entry_keep(
+                round, np.asarray(csr.rows), np.asarray(csr.indices),
+                np.asarray(csr.values),
+            ))
+            return faults_mod.mix_faulted_csr(
+                csr.rows, csr.indices, csr.values, keep, alive,
+                self.num_nodes, params, pub,
+            )
+        if backend == "sparse_sharded":
+            shcsr = self.sharded_csr()
+            blk = shcsr.rows_per_shard
+            rows_g = np.asarray(shcsr.rows) + np.arange(shcsr.shards)[:, None] * blk
+            cols_g = np.take_along_axis(
+                np.asarray(shcsr.halo), np.asarray(shcsr.cols), axis=1
+            )
+            keep = jnp.asarray(trace.entry_keep(
+                round, rows_g, cols_g, np.asarray(shcsr.values)
+            ))
+            return mix_sharded_sparse_faulted(
+                shcsr, params, params if pub is None else pub, keep, alive,
+                mesh=self.mesh, node_axis=self.node_axis,
+                halo_schedule=self.halo_schedule,
+            )
+        raise ValueError(f"backend {backend!r} does not support faults")
 
     def __repr__(self) -> str:
         return (

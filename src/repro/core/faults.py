@@ -1,0 +1,583 @@
+"""Seeded, fully traceable fault injection: churn, stragglers, edge drops.
+
+The paper's DecAvg rounds are perfectly synchronous over a fixed node set;
+real networks of user devices are not.  This module turns three fault
+families into first-class, *deterministic* experiment axes:
+
+- ``churn`` — nodes leave and rejoin mid-run.  Dead nodes freeze their
+  parameters (mask-based ``where``, no shape changes) and drop out of every
+  neighbor's mixing row.
+- ``straggler`` — a static subset of nodes publishes *stale* parameter
+  snapshots: each straggler gossips the params it held ``delay`` rounds ago
+  (a bounded ring buffer of past params — an asynchronous-gossip
+  approximation with per-node logical lag).
+- ``drop`` — each undirected edge independently fails for one round with
+  probability ``p_edge`` (message loss); both directions drop together.
+
+Spec grammar mirrors :mod:`repro.core.topology`'s schedule strings —
+clauses joined by ``";"``, each ``kind[:k=v,...][@targeted=...]``::
+
+    "churn:p_leave=0.05,p_join=0.5@targeted=hubs"
+    "straggler:frac=0.2,delay=3"
+    "drop:p_edge=0.1"
+    "churn:p_leave=1.0,p_join=0.0,frac=0.25,start=8@targeted=hubs;drop:p_edge=0.05"
+
+``targeted`` restricts churn/straggler candidacy to the top (``hubs``) or
+bottom (``leaves``) ``frac`` of nodes by degree; ``uniform`` (default)
+draws from everyone.  ``churn`` extras: ``frac`` bounds the candidate pool
+and ``start`` delays the first departure (so a run can train cleanly, take
+a churn hit, and expose a measurable recovery).  ``drop`` takes no target.
+
+Everything expands deterministically from ``(seed, spec, topology)`` via a
+dedicated ``SeedSequence`` stream on the host (:class:`FaultTrace`); the
+resulting per-round masks are plain arrays, so the fused trainer stages
+them as one more stacked axis on ``MixingProgram`` and a faulty multi-host
+run stays a single SPMD ``lax.scan``.
+
+Renormalization semantics (shared by every backend, loop and fused): given
+the round's entry-keep mask, each W row is rescaled over its surviving
+entries so row-stochasticity holds; a row left with *no* surviving mass
+falls back to identity (the node keeps its own params), and dead nodes'
+params pass through bit-unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import TopologySchedule, _parse_value
+
+__all__ = [
+    "FaultClause",
+    "FaultSchedule",
+    "FaultTrace",
+    "parse_faults",
+    "renorm_dense",
+    "renorm_values",
+    "mix_faulted_dense",
+    "mix_faulted_csr",
+    "faulted_dense_w",
+    "init_history",
+    "push_and_publish",
+    "where_alive",
+    "churn_rounds",
+    "recovery_rounds",
+]
+
+_KINDS = ("churn", "straggler", "drop")
+_TARGETS = ("uniform", "hubs", "leaves")
+_DEFAULTS: dict[str, dict[str, Any]] = {
+    "churn": {"p_leave": 0.1, "p_join": 0.5, "frac": 0.25, "start": 0},
+    "straggler": {"frac": 0.2, "delay": 2},
+    "drop": {"p_edge": 0.1},
+}
+
+# Domain tag mixed into the SeedSequence so fault draws never collide with
+# topology/init/batch streams derived from the same run seed.
+_FAULT_STREAM = 0xFA017
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultClause:
+    """One parsed clause: ``kind`` + resolved params + targeting mode."""
+
+    kind: str
+    params: Mapping[str, Any]
+    target: str = "uniform"
+
+
+def _parse_clause(text: str) -> FaultClause:
+    text = text.strip()
+    target = "uniform"
+    if "@" in text:
+        text, _, mod = text.partition("@")
+        key, _, val = mod.partition("=")
+        if key.strip() != "targeted":
+            raise ValueError(f"unknown fault modifier {mod!r} (only @targeted=...)")
+        target = val.strip()
+        if target not in _TARGETS:
+            raise ValueError(f"unknown fault target {target!r}; one of {_TARGETS}")
+    kind, _, rest = text.partition(":")
+    kind = kind.strip()
+    if kind not in _KINDS:
+        raise ValueError(f"unknown fault kind {kind!r}; one of {_KINDS}")
+    if kind == "drop" and target != "uniform":
+        raise ValueError("drop faults hit edges, not nodes: @targeted is invalid")
+    params = dict(_DEFAULTS[kind])
+    if rest.strip():
+        for item in rest.split(","):
+            key, eq, val = item.partition("=")
+            key = key.strip()
+            if not eq or key not in params:
+                raise ValueError(
+                    f"bad {kind} param {item.strip()!r}; known: {sorted(params)}"
+                )
+            params[key] = type(_DEFAULTS[kind][key])(_parse_value(val.strip()))
+    for key in ("p_leave", "p_join", "frac", "p_edge"):
+        if key in params and not 0.0 <= float(params[key]) <= 1.0:
+            raise ValueError(f"{kind}:{key}={params[key]} outside [0, 1]")
+    if kind == "straggler" and int(params["delay"]) < 1:
+        raise ValueError(f"straggler delay must be >= 1, got {params['delay']}")
+    return FaultClause(kind, params, target)
+
+
+def parse_faults(spec: str) -> tuple[FaultClause, ...]:
+    """Parse a fault spec string into clauses (see module docstring)."""
+    clauses = tuple(
+        _parse_clause(part) for part in spec.split(";") if part.strip()
+    )
+    if not clauses:
+        raise ValueError(f"empty fault spec {spec!r}")
+    return clauses
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A parsed fault spec — the static half of the subsystem.
+
+    Hashable/comparable on the raw spec string, so it can ride in jit
+    static args and experiment configs alike.
+    """
+
+    spec: str
+    clauses: tuple[FaultClause, ...]
+
+    @classmethod
+    def parse(cls, spec: "str | FaultSchedule") -> "FaultSchedule":
+        if isinstance(spec, FaultSchedule):
+            return spec
+        return cls(spec=spec, clauses=parse_faults(spec))
+
+    @property
+    def has_churn(self) -> bool:
+        return any(c.kind == "churn" for c in self.clauses)
+
+    @property
+    def has_drop(self) -> bool:
+        return any(c.kind == "drop" for c in self.clauses)
+
+    @property
+    def has_stragglers(self) -> bool:
+        return any(c.kind == "straggler" for c in self.clauses)
+
+    @property
+    def max_delay(self) -> int:
+        return max(
+            (int(c.params["delay"]) for c in self.clauses if c.kind == "straggler"),
+            default=0,
+        )
+
+
+def _target_pool(clause: FaultClause, degrees: np.ndarray) -> np.ndarray:
+    """Boolean candidate mask for a targeted churn/straggler clause."""
+    n = degrees.shape[0]
+    if clause.target == "uniform" and clause.kind == "churn":
+        # churn's frac only narrows *targeted* pools; uniform churn may
+        # touch anyone (p_leave already rate-limits departures).
+        return np.ones(n, bool)
+    k = max(1, int(np.ceil(float(clause.params["frac"]) * n)))
+    # lexsort tie-break on node id keeps hub/leaf pools deterministic on
+    # regular graphs where many degrees tie.
+    if clause.target == "hubs":
+        order = np.lexsort((np.arange(n), -degrees))
+    elif clause.target == "leaves":
+        order = np.lexsort((np.arange(n), degrees))
+    else:  # uniform straggler: handled by the caller's rng.choice
+        return np.ones(n, bool)
+    pool = np.zeros(n, bool)
+    pool[order[:k]] = True
+    return pool
+
+
+class FaultTrace:
+    """Deterministic host-side expansion of a :class:`FaultSchedule`.
+
+    Sequentially materializes per-round aliveness and edge-drop masks from
+    ``np.random.SeedSequence([seed, _FAULT_STREAM])``; every consumer (loop
+    trainer, fused program staging, runner analytics) sees byte-identical
+    masks for the same ``(seed, spec, topology)``.
+    """
+
+    def __init__(
+        self,
+        schedule: FaultSchedule | str,
+        topo: TopologySchedule,
+        *,
+        seed: int = 0,
+    ):
+        self.schedule = FaultSchedule.parse(schedule)
+        self.topo = topo
+        self.seed = int(seed)
+        self._rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, _FAULT_STREAM])
+        )
+        g0 = topo.graph_at(0)
+        self.n = g0.num_nodes
+        deg0 = g0.degrees().astype(np.int64)
+        # Straggler delays are static for the run, drawn from the period-0
+        # graph (a straggler is a slow *device*, not a slow round).
+        delay = np.zeros(self.n, np.int32)
+        for clause in self.schedule.clauses:
+            if clause.kind != "straggler":
+                continue
+            d = int(clause.params["delay"])
+            if clause.target == "uniform":
+                k = max(1, int(np.ceil(float(clause.params["frac"]) * self.n)))
+                picks = self._rng.choice(self.n, size=k, replace=False)
+                mask = np.zeros(self.n, bool)
+                mask[picks] = True
+            else:
+                mask = _target_pool(clause, deg0)
+            delay = np.maximum(delay, np.where(mask, d, 0).astype(np.int32))
+        self.delay = delay
+        self.delay_max = int(delay.max()) if self.n else 0
+        self._alive = np.ones(self.n, bool)
+        self._alive_rows: list[np.ndarray] = []
+        self._drop_rows: list[np.ndarray] = []
+        self._edge_cache: dict[int, np.ndarray] = {}
+
+    def _edges(self, period: int) -> np.ndarray:
+        """Sorted encoded (i*n+j, i<j) undirected edge keys for a period."""
+        if period not in self._edge_cache:
+            g = self.topo.graph_at(period * self.topo.every)
+            i, j = np.nonzero(np.triu(np.asarray(g.adj, bool), 1))
+            self._edge_cache[period] = (i.astype(np.int64) * self.n + j)
+        return self._edge_cache[period]
+
+    def _step(self, r: int) -> None:
+        period = self.topo.period_of(r)
+        g = self.topo.graph_at(r)
+        degrees = g.degrees().astype(np.int64)
+        alive = self._alive
+        for clause in self.schedule.clauses:
+            if clause.kind != "churn":
+                continue
+            # Draw both uniforms every round regardless of `start` so the
+            # stream (and thus every later round's masks) doesn't depend on
+            # when churn activates.
+            u_leave = self._rng.random(self.n)
+            u_join = self._rng.random(self.n)
+            if r < int(clause.params["start"]):
+                continue
+            pool = _target_pool(clause, degrees)
+            leave = alive & pool & (u_leave < float(clause.params["p_leave"]))
+            join = ~alive & (u_join < float(clause.params["p_join"]))
+            alive = (alive & ~leave) | join
+        self._alive = alive
+        self._alive_rows.append(alive.copy())
+
+        edges = self._edges(period)
+        dropped = np.zeros(edges.shape[0], bool)
+        for clause in self.schedule.clauses:
+            if clause.kind != "drop":
+                continue
+            dropped |= self._rng.random(edges.shape[0]) < float(
+                clause.params["p_edge"]
+            )
+        self._drop_rows.append(edges[dropped])
+
+    def ensure(self, rounds: int) -> None:
+        """Extend the trace through round ``rounds - 1`` (incremental)."""
+        while len(self._alive_rows) < rounds:
+            self._step(len(self._alive_rows))
+
+    def alive(self, r: int) -> np.ndarray:
+        """(N,) bool aliveness after round ``r``'s churn transitions."""
+        self.ensure(r + 1)
+        return self._alive_rows[r]
+
+    def alive_matrix(self, rounds: int) -> np.ndarray:
+        """(rounds, N) bool alive masks, one row per round."""
+        self.ensure(rounds)
+        return np.stack(self._alive_rows[:rounds]) if rounds else np.zeros(
+            (0, self.n), bool
+        )
+
+    def _dropped_keys(self, r: int) -> np.ndarray:
+        self.ensure(r + 1)
+        return self._drop_rows[r]
+
+    def edge_kept(self, r: int, i: int, j: int) -> bool:
+        """Did the undirected edge (i, j) survive round ``r``'s drops?"""
+        lo, hi = (i, j) if i < j else (j, i)
+        if lo == hi:
+            return True
+        key = lo * self.n + hi
+        dropped = self._dropped_keys(r)
+        pos = np.searchsorted(dropped, key)
+        return not (pos < dropped.shape[0] and dropped[pos] == key)
+
+    def dense_keep(self, r: int) -> np.ndarray:
+        """(N, N) bool entry-keep mask for round ``r`` (dense W layout).
+
+        Entry (i, j) survives iff both endpoints are alive and the edge was
+        not dropped; the diagonal follows aliveness alone.
+        """
+        alive = self.alive(r)
+        keep = alive[:, None] & alive[None, :]
+        dropped = self._dropped_keys(r)
+        if dropped.size:
+            lo, hi = dropped // self.n, dropped % self.n
+            keep[lo, hi] = False
+            keep[hi, lo] = False
+        return keep
+
+    def entry_keep(
+        self,
+        r: int,
+        rows_g: np.ndarray,
+        cols_g: np.ndarray,
+        values: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """Entry-keep mask for arbitrary-shaped global-id (row, col) arrays.
+
+        Covers every sparse layout in one helper: loop CSR, the fused
+        stacked CSR, and the stacked ShardedCSR (where padded slots carry
+        value 0.0 — pass ``values`` to force those slots kept, i.e. inert:
+        0-valued entries contribute nothing either way, and keeping them
+        avoids renormalizing over a phantom loss).
+        """
+        alive = self.alive(r)
+        rows_g = np.asarray(rows_g)
+        cols_g = np.asarray(cols_g)
+        keep = alive[rows_g] & alive[cols_g]
+        dropped = self._dropped_keys(r)
+        offdiag = rows_g != cols_g
+        if dropped.size and offdiag.any():
+            lo = np.minimum(rows_g, cols_g).astype(np.int64)
+            hi = np.maximum(rows_g, cols_g).astype(np.int64)
+            key = lo * self.n + hi
+            pos = np.searchsorted(dropped, key)
+            pos = np.minimum(pos, dropped.shape[0] - 1)
+            hit = (dropped[pos] == key) & offdiag
+            keep = keep & ~hit
+        if values is not None:
+            keep = keep | (np.asarray(values) == 0.0)
+        return keep
+
+
+# ---------------------------------------------------------------------------
+# Device-side (jnp) fault mixing — shared by loop and fused paths
+# ---------------------------------------------------------------------------
+
+
+def renorm_dense(w: jax.Array, keep: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Zero masked entries and rescale each row to sum 1.
+
+    Returns ``(w_renorm, row_ok)`` where ``row_ok[i]`` is False iff row i
+    lost *all* its mass (the caller must fall back to identity there).
+    """
+    wk = w * keep
+    rowsum = wk.sum(axis=1)
+    ok = rowsum > 0
+    return wk / jnp.where(ok, rowsum, 1.0)[:, None], ok
+
+
+def renorm_values(
+    values: jax.Array, keep: jax.Array, rows: jax.Array, n: int
+) -> tuple[jax.Array, jax.Array]:
+    """CSR-layout row renormalization (``rows`` sorted ascending)."""
+    vk = values * keep
+    rowsum = jax.ops.segment_sum(vk, rows, num_segments=n, indices_are_sorted=True)
+    ok = rowsum > 0
+    inv = jnp.where(ok, 1.0, 0.0) / jnp.where(ok, rowsum, 1.0)
+    return vk * inv[rows], ok
+
+
+def mix_faulted_dense(
+    w: jax.Array,
+    keep: jax.Array,
+    alive: jax.Array,
+    params: Any,
+    pub: Any = None,
+) -> Any:
+    """One faulted dense DecAvg round on a node-stacked pytree.
+
+    Mixes the *published* snapshots ``pub`` (stale for stragglers; defaults
+    to ``params``) under the renormalized surviving W, while each node's own
+    contribution stays fresh: ``out = Wf @ pub + diag(Wf) * (cur - pub)``.
+    Rows with no surviving mass, and dead destination nodes, pass their
+    current params through bit-unchanged.
+    """
+    wn, ok = renorm_dense(w, keep)
+    okr = ok & alive
+
+    if pub is None:
+        # Every publish is fresh (no stragglers): the diagonal correction is
+        # identically zero, so mix per leaf with no pytree flatten copies.
+        def leaf(p: jax.Array) -> jax.Array:
+            pf = p.reshape(p.shape[0], -1).astype(jnp.float32)
+            out = jnp.where(okr[:, None], wn @ pf, pf)
+            return out.reshape(p.shape).astype(p.dtype)
+
+        return jax.tree_util.tree_map(leaf, params)
+
+    # Stale publishes: mix them through the OFF-diagonal weights only and
+    # add each node's fresh self-contribution directly —
+    # ``(Wf - diag(Wf)) @ pub + diag(Wf) * cur`` is algebraically
+    # ``Wf @ pub + diag(Wf) * (cur - pub)`` with one fewer params-sized
+    # elementwise pass through the scan body.
+    diag = jnp.diagonal(wn)
+    wn_od = wn - jnp.diag(diag)
+
+    def leaf2(p: jax.Array, q: jax.Array) -> jax.Array:
+        pf = p.reshape(p.shape[0], -1).astype(jnp.float32)
+        qf = q.reshape(q.shape[0], -1).astype(jnp.float32)
+        out = wn_od @ qf + diag[:, None] * pf
+        out = jnp.where(okr[:, None], out, pf)
+        return out.reshape(p.shape).astype(p.dtype)
+
+    return jax.tree_util.tree_map(leaf2, params, pub)
+
+
+def mix_faulted_csr(
+    rows: jax.Array,
+    cols: jax.Array,
+    values: jax.Array,
+    keep: jax.Array,
+    alive: jax.Array,
+    n: int,
+    params: Any,
+    pub: Any = None,
+) -> Any:
+    """CSR twin of :func:`mix_faulted_dense` (entries sorted by row)."""
+    vn, ok = renorm_values(values, keep, rows, n)
+    okr = ok & alive
+
+    if pub is None:
+        def leaf(p: jax.Array) -> jax.Array:
+            pf = p.reshape(p.shape[0], -1).astype(jnp.float32)
+            out = jax.ops.segment_sum(
+                pf[cols] * vn[:, None], rows, num_segments=n,
+                indices_are_sorted=True,
+            )
+            out = jnp.where(okr[:, None], out, pf)
+            return out.reshape(p.shape).astype(p.dtype)
+
+        return jax.tree_util.tree_map(leaf, params)
+
+    # Same off-diagonal rewrite as the dense path: gather stale publishes
+    # through the non-self entries, add the fresh self term directly.
+    is_diag = rows == cols
+    dcoef = jax.ops.segment_sum(
+        jnp.where(is_diag, vn, 0.0),
+        rows,
+        num_segments=n,
+        indices_are_sorted=True,
+    )
+    vn_od = jnp.where(is_diag, 0.0, vn)
+
+    def leaf2(p: jax.Array, q: jax.Array) -> jax.Array:
+        pf = p.reshape(p.shape[0], -1).astype(jnp.float32)
+        qf = q.reshape(q.shape[0], -1).astype(jnp.float32)
+        out = jax.ops.segment_sum(
+            qf[cols] * vn_od[:, None], rows, num_segments=n,
+            indices_are_sorted=True,
+        )
+        out = out + dcoef[:, None] * pf
+        out = jnp.where(okr[:, None], out, pf)
+        return out.reshape(p.shape).astype(p.dtype)
+
+    return jax.tree_util.tree_map(leaf2, params, pub)
+
+
+def faulted_dense_w(
+    w: np.ndarray | jax.Array, keep: np.ndarray | jax.Array, alive: np.ndarray
+) -> np.ndarray:
+    """The effective mixing matrix a faulted round applies (test/analysis
+    helper): renormalized surviving rows, identity rows for dead nodes and
+    for rows that lost all mass."""
+    wn, ok = renorm_dense(jnp.asarray(w, jnp.float32), jnp.asarray(keep, bool))
+    wn = np.array(wn)
+    identity = ~(np.asarray(ok) & np.asarray(alive, bool))
+    wn[identity] = 0.0
+    wn[identity, np.flatnonzero(identity)] = 1.0
+    return wn
+
+
+def init_history(params: Any, depth: int) -> Any:
+    """Zeroed ring buffer of past params: each leaf (N, ...) -> (N, depth, ...).
+
+    Node-first layout so the trainer's per-node sharding specs cover
+    history leaves unchanged.  Zero-init is safe: reads clamp the effective
+    delay to ``min(delay, round)``, so unwritten slots are never consumed.
+    """
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros((l.shape[0], depth) + l.shape[1:], l.dtype), params
+    )
+
+
+def push_and_publish(
+    params: Any, hist: Any, r: jax.Array, delay: jax.Array
+) -> tuple[Any, Any]:
+    """Write this round's params into the ring buffer, read stale snapshots.
+
+    ``hist`` leaves are (N, D, ...) with ``D = delay_max + 1`` — enough
+    depth that a slot is never overwritten before its last reader: node i
+    reads slot ``(r - min(delay_i, r)) % D``, and ``(r - d) % D == r % D``
+    only at ``d = 0`` (whose slot was *just* written, so delay-0 nodes
+    publish bit-fresh params).
+    """
+    slot_w = jnp.mod(r, jax.tree_util.tree_leaves(hist)[0].shape[1])
+    hist = jax.tree_util.tree_map(
+        lambda h, p: jax.lax.dynamic_update_index_in_dim(h, p, slot_w, 1),
+        hist,
+        params,
+    )
+    depth = jax.tree_util.tree_leaves(hist)[0].shape[1]
+    eff = jnp.minimum(delay, r)
+    slot_r = jnp.mod(r - eff, depth)
+    pub = jax.tree_util.tree_map(
+        lambda h: h[jnp.arange(h.shape[0]), slot_r], hist
+    )
+    return pub, hist
+
+
+def where_alive(alive: jax.Array, new: Any, old: Any) -> Any:
+    """Per-node select over node-stacked pytrees: dead nodes keep ``old``."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(
+            alive.reshape((-1,) + (1,) * (a.ndim - 1)), a, b
+        ),
+        new,
+        old,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytics helpers (host side)
+# ---------------------------------------------------------------------------
+
+
+def churn_rounds(alive_counts: np.ndarray | list[int], n: int) -> list[int]:
+    """Rounds where the alive count strictly dropped (churn events)."""
+    counts = np.asarray(alive_counts, np.int64)
+    prev = np.concatenate([[n], counts[:-1]])
+    return np.flatnonzero(counts < prev).tolist()
+
+
+def recovery_rounds(
+    eval_rounds: list[int],
+    accs: list[float | None],
+    event_round: int,
+) -> int | None:
+    """Rounds until accuracy recovers to its best pre-event level.
+
+    Over a (round, acc) eval curve: take the max acc strictly before
+    ``event_round``; return ``first eval round >= event_round with
+    acc >= that max (minus epsilon)`` minus ``event_round``.  ``None`` if
+    there is no pre-event eval or the run never recovers.
+    """
+    pre = [a for r, a in zip(eval_rounds, accs) if r < event_round and a is not None]
+    if not pre:
+        return None
+    target = max(pre) - 1e-9
+    for r, a in zip(eval_rounds, accs):
+        if r >= event_round and a is not None and a >= target:
+            return r - event_round
+    return None

@@ -91,6 +91,10 @@ def summarize(store: ResultsStore) -> list[dict[str, Any]]:
             # curve stats
             "auc_acc": _auc([r.get("mean_acc") for r in curve]),
             "auc_g2_spread": _auc([r.get("g2_acc_spread") for r in curve]),
+            # fault side (None for fault-free runs)
+            "faults": spec.get("faults"),
+            "alive_min": final.get("alive_min"),
+            "recovery_rounds": final.get("recovery_rounds"),
         }
         if "community_confusion_offdiag" in final:
             row["community_confusion_offdiag"] = final["community_confusion_offdiag"]
@@ -127,6 +131,11 @@ def qualitative_checks(rows: list[dict[str, Any]]) -> dict[str, Any]:
     - gossip_learns_g2: under hub_focused splits, the nodes that never saw
       a G2 example end clearly above chance (1/10) on G2 — knowledge moved
       over the edges, not the data.
+    - hub_kill_hurts_more: across faulted runs, killing hubs damages G2
+      spread at least as much as killing leaves (hub-targeted churn's
+      ``auc_g2_spread`` <= leaf-targeted churn's) — the paper's hub-vs-leaf
+      centrality result, stress-tested under churn. None when the sweep has
+      no targeted-churn pair.
     """
     hub_edge = hub_vs_leaf_table(rows)
     per_family = {
@@ -142,10 +151,26 @@ def qualitative_checks(rows: list[dict[str, Any]]) -> dict[str, Any]:
         for r in rows
         if r.get("final_g2_spread") is not None and r["partitioner"] == "hub_focused"
     ]
+    def targeted_auc(target: str) -> float | None:
+        vals = [
+            r.get("auc_g2_spread")
+            for r in rows
+            if r.get("faults") and f"targeted={target}" in r["faults"]
+            and r.get("auc_g2_spread") is not None
+        ]
+        return float(np.mean(vals)) if vals else None
+
+    hub_kill, leaf_kill = targeted_auc("hubs"), targeted_auc("leaves")
     return {
         "hub_beats_edge": all(per_family.values()) if per_family else None,
         "hub_beats_edge_by_family": per_family,
         "gossip_learns_g2": (float(np.mean(hub_spread)) > 0.13) if hub_spread else None,
+        "hub_kill_hurts_more": (
+            None if hub_kill is None or leaf_kill is None
+            else bool(hub_kill <= leaf_kill)
+        ),
+        "hub_kill_auc_g2_spread": hub_kill,
+        "leaf_kill_auc_g2_spread": leaf_kill,
     }
 
 

@@ -16,6 +16,9 @@
 - ``large_n_smoke``: tiny-N stand-in for ``large_n`` (same backends, CI
   minutes); the smoke-sweep job gates on its sparse_sharded run staying on
   the fused path.
+- ``churn_smoke``: the fault subsystem's CI gate — hub-targeted vs
+  leaf-targeted mid-run churn on a small BA graph; analysis must reproduce
+  hub-kill >= leaf-kill damage on ``g2_acc_spread``.
 """
 
 from __future__ import annotations
@@ -150,11 +153,42 @@ def _large_n_smoke() -> list[ExperimentSpec]:
     return specs
 
 
+def _churn_smoke() -> list[ExperimentSpec]:
+    # The fault subsystem's CI gate: one BA graph, hub-focused G2 data, and
+    # a deterministic mid-run kill (p_leave=1, p_join=0) of the top-degree
+    # quarter vs the bottom-degree quarter of nodes. Killing the hubs that
+    # hold AND route G2 knowledge must damage ``g2_acc_spread`` at least as
+    # much as killing leaves — the paper's centrality result under churn
+    # (analysis.qualitative_checks: hub_kill_hurts_more). Both runs take the
+    # fused path, so the masks ride the single lax.scan end to end.
+    base = {
+        "rounds": 16,
+        "eval_every": 2,
+        "lr": 0.05,
+        "momentum": 0.9,
+        "batch_size": 8,
+        "backend": "dense",
+        "data": {"train_per_class": 300, "test_per_class": 50},
+        "tag": "churn_smoke",
+    }
+    return expand_grid(
+        base,
+        topology=["ba:n=16,m=2"],
+        partitioner=["hub_focused"],
+        faults=[
+            "churn:p_leave=1.0,p_join=0.0,frac=0.25,start=8@targeted=hubs",
+            "churn:p_leave=1.0,p_join=0.0,frac=0.25,start=8@targeted=leaves",
+        ],
+        seed=[0, 1],
+    )
+
+
 PRESETS = {
     "smoke": _smoke,
     "paper": _paper,
     "large_n": _large_n,
     "large_n_smoke": _large_n_smoke,
+    "churn_smoke": _churn_smoke,
 }
 
 

@@ -176,13 +176,19 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
         sparse_p_chunk=spec.model.get("sparse_p_chunk"),
         gossip_every=spec.gossip_every,
         compress=spec.model.get("compress"),
+        faults=spec.faults,
         same_init=spec.same_init,
         seed=spec.seed,
         num_classes=num_classes,
         class_groups=groups,
         **extra,
     )
+    fault_trace = None
+    if trainer.faulted:
+        fault_trace = trainer.engine.fault_trace
+        fault_trace.ensure(spec.rounds)
     last: dict[str, Any] = {}
+    curve: list[tuple[int, float | None]] = []  # (round, g2_acc_spread) evals
 
     def on_round(m) -> None:
         rec: dict[str, Any] = {
@@ -203,6 +209,9 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
             "consensus_max": float(m.consensus.max()),
             "wall_s": round(m.wall_s, 4),
         }
+        if fault_trace is not None:
+            rec["alive_count"] = int(fault_trace.alive(m.round).sum())
+        curve.append((m.round, rec["g2_acc_spread"]))
         last.clear()
         last.update(rec)
         emit(rec)
@@ -241,6 +250,24 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
         "backend": trainer.mix_impl,
         "fused": use_fused,
     }
+    if fault_trace is not None:
+        from repro.core import faults as faults_mod
+
+        alive_counts = [
+            int(fault_trace.alive(r).sum()) for r in range(spec.rounds)
+        ]
+        events = faults_mod.churn_rounds(alive_counts, trainer.num_nodes)
+        final["faults"] = spec.faults
+        final["alive_min"] = min(alive_counts)
+        final["alive_final"] = alive_counts[-1]
+        final["churn_rounds"] = events
+        final["recovery_rounds"] = (
+            faults_mod.recovery_rounds(
+                [r for r, _ in curve], [a for _, a in curve], events[0]
+            )
+            if events
+            else None
+        )
     # Community runs additionally record the paper's Table-1 confusion view.
     if trainer.graph.blocks is not None and trainer.graph.num_nodes <= 256:
         from repro.train.metrics import community_confusion
@@ -290,7 +317,7 @@ def _run_lm(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
 
     engine = decavg.GossipEngine(
         spec.topology, backend=spec.backend, matrix=spec.matrix,
-        gossip_every=spec.gossip_every, seed=spec.seed, n=n,
+        gossip_every=spec.gossip_every, faults=spec.faults, seed=spec.seed, n=n,
     )
     if engine.num_nodes != n:
         raise ValueError(f"topology spec pins n={engine.num_nodes} but nodes is {n}")

@@ -60,6 +60,9 @@ class ExperimentSpec:
         single-``lax.scan`` run path, ``compress=float`` for top-k gossip
         delta compression), ``{"kind": "lm", "arch": ...}`` runs the
         LLM-cohort loop (launch/train.py is a thin wrapper over it).
+      faults: fault-injection spec string (core/faults.py grammar, e.g.
+        ``"churn:p_leave=0.05,p_join=0.5@targeted=hubs"``), or None for a
+        fault-free run. Expanded deterministically from ``seed``.
       tag: freeform grouping label — excluded from the run id.
     """
 
@@ -79,6 +82,7 @@ class ExperimentSpec:
     seed: int = 0
     data: dict[str, Any] = dataclasses.field(default_factory=dict)
     model: dict[str, Any] = dataclasses.field(default_factory=dict)
+    faults: str | None = None
     tag: str = ""
 
     def __post_init__(self):
@@ -86,6 +90,10 @@ class ExperimentSpec:
             raise ValueError(
                 f"unknown partitioner {self.partitioner!r}; one of {PARTITIONERS}"
             )
+        if self.faults is not None:
+            from repro.core.faults import parse_faults
+
+            parse_faults(self.faults)  # fail fast on a malformed spec
         if self.rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
         if self.eval_every < 1:
@@ -96,10 +104,20 @@ class ExperimentSpec:
 
     # -- identity -----------------------------------------------------------
 
+    # Fields added after the store format shipped: dropped from the content
+    # hash while they hold their default, so every pre-existing JSONL store's
+    # run ids — and their skip-completed semantics — survive the schema
+    # growing. A non-default value (an actual fault spec) still hashes.
+    _HASH_OPTIONAL = {"faults": None}
+
     def canonical(self) -> dict[str, Any]:
-        """Identity-bearing fields as a plain dict (tag excluded)."""
+        """Identity-bearing fields as a plain dict (tag excluded;
+        later-generation fields excluded while at their default)."""
         d = dataclasses.asdict(self)
         d.pop("tag")
+        for name, default in self._HASH_OPTIONAL.items():
+            if d.get(name) == default:
+                d.pop(name, None)
         return d
 
     @property

@@ -120,6 +120,7 @@ class DecentralizedTrainer:
         sparse_p_chunk=None,  # int | "auto": bound the sparse gather transient
         gossip_every: int = 1,  # mix on rounds r % k == 0; 0 = isolated (no gossip)
         compress: float | None = None,  # top-k fraction for gossip compression
+        faults: str | None = None,  # fault spec (core/faults.py), e.g. "churn:p_leave=0.1"
         same_init: bool = True,
         seed: int = 0,
         init_fn: Callable[..., PyTree] | None = None,
@@ -132,11 +133,18 @@ class DecentralizedTrainer:
         self.engine = decavg.GossipEngine(
             graph, data_sizes=loader.sizes.astype(np.float64), backend=mix_impl,
             matrix=matrix, sparse_p_chunk=sparse_p_chunk,
-            gossip_every=gossip_every, seed=seed, n=len(loader.sizes),
+            gossip_every=gossip_every, faults=faults, seed=seed,
+            n=len(loader.sizes),
         )
         if mix_impl == "auto":
             mix_impl = self.engine.backend
         self.mix_impl = mix_impl
+        self.faulted = self.engine.faults is not None
+        if self.faulted and compress is not None:
+            raise ValueError(
+                "faults do not compose with compress= gossip: the CHOCO "
+                "reference update assumes every published model is current"
+            )
         self.graph = self.engine.graph
         self.lr, self.mu = lr, momentum
         self.local_epochs = local_epochs
@@ -198,8 +206,18 @@ class DecentralizedTrainer:
         self._fused_chunk_jit = jax.jit(
             self._fused_chunk,
             static_argnames=("length", "do_eval"),
-            donate_argnums=(2, 3, 4),
+            donate_argnums=(2, 3, 4, 5),
         )
+        if self.faulted:
+            trace = self.engine.fault_trace
+            self._fault_delay = jnp.asarray(trace.delay)
+            self._has_hist = trace.delay_max > 0
+            self._round_faulted_jit = jax.jit(
+                self._round_faulted, donate_argnums=(4, 5, 6)
+            )
+            self._local_faulted_jit = jax.jit(
+                self._local_faulted, donate_argnums=(2, 3, 4)
+            )
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -262,6 +280,87 @@ class DecentralizedTrainer:
         )
         return params, opt_state, cstate
 
+    # -- faulted rounds (core/faults.py semantics) ---------------------------
+
+    def _mix_op_faulted(self):
+        """The traced mixing operand for the faulted round: every
+        fault-capable backend is operand-style here (``ShardedCSR`` is a
+        registered pytree), so one compiled round serves all periods."""
+        if self.mix_impl == "dense":
+            return self.w
+        if self.mix_impl == "sparse":
+            return self.engine.csr
+        return self.engine.sharded_csr()
+
+    def _fault_keep(self, r: int) -> np.ndarray:
+        """Round ``r``'s entry-keep mask in the backend's operand layout."""
+        trace = self.engine.fault_trace
+        if self.mix_impl == "dense":
+            return trace.dense_keep(r)
+        if self.mix_impl == "sparse":
+            csr = self.engine.csr
+            return trace.entry_keep(
+                r, np.asarray(csr.rows), np.asarray(csr.indices),
+                np.asarray(csr.values),
+            )
+        shcsr = self.engine.sharded_csr()
+        blk = shcsr.rows_per_shard
+        rows_g = np.asarray(shcsr.rows) + np.arange(shcsr.shards)[:, None] * blk
+        cols_g = np.take_along_axis(
+            np.asarray(shcsr.halo), np.asarray(shcsr.cols), axis=1
+        )
+        return trace.entry_keep(r, rows_g, cols_g, np.asarray(shcsr.values))
+
+    def _mix_faulted(self, op, keep, alive, cur, pub):
+        from repro.core import faults as faults_mod
+
+        if self.mix_impl == "dense":
+            return faults_mod.mix_faulted_dense(op, keep, alive, cur, pub)
+        if self.mix_impl == "sparse":
+            return faults_mod.mix_faulted_csr(
+                op.rows, op.indices, op.values, keep, alive,
+                self.num_nodes, cur, pub,
+            )
+        return decavg.mix_sharded_sparse_faulted(
+            op, cur, cur if pub is None else pub, keep, alive,
+            mesh=self.engine.mesh, node_axis=self.engine.node_axis,
+            halo_schedule=self.engine.halo_schedule,
+        )
+
+    def _round_faulted(self, op, keep, alive, r, params, opt_state, hist, xs, ys):
+        """One faulted gossip round: train, freeze dead nodes back to their
+        pre-round state (params AND momentum — exactly equivalent to never
+        training them), advance the straggler ring buffer, mix the published
+        snapshots over the surviving renormalized W."""
+        from repro.core import faults as faults_mod
+
+        p_in, o_in = params, opt_state
+        params, opt_state = self._local_steps(params, opt_state, xs, ys)
+        params = faults_mod.where_alive(alive, params, p_in)
+        opt_state = faults_mod.where_alive(alive, opt_state, o_in)
+        pub = None
+        if self._has_hist:
+            pub, hist = faults_mod.push_and_publish(
+                params, hist, r, self._fault_delay
+            )
+        params = self._mix_faulted(op, keep, alive, params, pub)
+        return params, opt_state, hist
+
+    def _local_faulted(self, r, alive, params, opt_state, hist, xs, ys):
+        """A faulted non-gossip round: train + freeze + history push (a
+        straggler's clock advances whether or not the round gossips)."""
+        from repro.core import faults as faults_mod
+
+        p_in, o_in = params, opt_state
+        params, opt_state = self._local_steps(params, opt_state, xs, ys)
+        params = faults_mod.where_alive(alive, params, p_in)
+        opt_state = faults_mod.where_alive(alive, opt_state, o_in)
+        if self._has_hist:
+            _, hist = faults_mod.push_and_publish(
+                params, hist, r, self._fault_delay
+            )
+        return params, opt_state, hist
+
     def _eval(self, params, x_test, y_test):
         def node_metrics(p):
             logits = self.forward(p, x_test)
@@ -283,31 +382,34 @@ class DecentralizedTrainer:
         return jax.vmap(node_metrics)(params)
 
     def _fused_chunk(
-        self, program, data, params, opt_state, cstate, start, x_test, y_test,
-        *, length: int, do_eval: bool,
+        self, program, data, params, opt_state, cstate, hist, start,
+        x_test, y_test, *, length: int, do_eval: bool,
     ):
         """``length`` rounds as one lax.scan, plus (optionally) one eval.
 
         ``program`` is the engine's MixingProgram (all schedule periods
         staged), ``data`` the loader's DeviceData; batch indices are
         generated inside the scan from ``(data.key, round)`` — the same
-        draws the Python loop makes on the host.
+        draws the Python loop makes on the host. ``hist`` is the straggler
+        ring buffer for faulted programs (``()`` when unused) and rides the
+        scan carry, so a faulty run — dead-node freezes, renormalized
+        mixing, stale snapshots and all — stays one compiled program.
         """
         steps = self.loader.steps_per_epoch() * self.local_epochs
         if program.kind == "sparse_sharded":
-            params, opt_state, cstate = self._scan_rounds_sharded(
-                program, data, params, opt_state, cstate, start,
+            params, opt_state, cstate, hist = self._scan_rounds_sharded(
+                program, data, params, opt_state, cstate, hist, start,
                 length=length, steps=steps,
             )
             if not do_eval:
-                return params, opt_state, cstate, None
+                return params, opt_state, cstate, hist, None
             if self.class_groups is not None:
                 accs, gaccs = self._group_eval(params, x_test, y_test)
             else:
                 accs, _ = self._eval(params, x_test, y_test)
                 gaccs = None
             cons = consensus_distance(params)
-            return params, opt_state, cstate, (accs, gaccs, cons)
+            return params, opt_state, cstate, hist, (accs, gaccs, cons)
         node = jnp.arange(self.num_nodes)
         hoist = (
             length * steps * self.num_nodes * self.loader.batch
@@ -315,7 +417,7 @@ class DecentralizedTrainer:
         )
 
         def one_round(carry, x):
-            params, opt, cstate = carry
+            params, opt, cstate, hist = carry
             if hoist:
                 r, idx = x
             else:
@@ -337,8 +439,21 @@ class DecentralizedTrainer:
                 p, o = sgd.update(grads, o, p, lr=self.lr, mu=self.mu)
                 return (p, o), None
 
+            p_in, o_in = params, opt
             (params, opt), _ = jax.lax.scan(one_step, (params, opt), idx)
-            if self.compress is None:
+            if self.faulted:
+                from repro.core import faults as faults_mod
+
+                alive = program.f_alive[r]
+                params = faults_mod.where_alive(alive, params, p_in)
+                opt = faults_mod.where_alive(alive, opt, o_in)
+                pub = None
+                if self._has_hist:
+                    pub, hist = faults_mod.push_and_publish(
+                        params, hist, r, program.f_delay
+                    )
+                params = program.mix_at(params, r, pub)
+            elif self.compress is None:
                 params = program.mix_at(params, r)
             else:
                 # Compression state must advance only on gossip rounds (the
@@ -353,7 +468,7 @@ class DecentralizedTrainer:
                     params, cstate = jax.lax.cond(
                         program.gossip_mask[r], do, lambda a: a, (params, cstate)
                     )
-            return (params, opt, cstate), None
+            return (params, opt, cstate, hist), None
 
         rs = start + jnp.arange(length)
         if hoist:
@@ -365,21 +480,22 @@ class DecentralizedTrainer:
             xs = (rs, idx_all)
         else:
             xs = rs
-        (params, opt_state, cstate), _ = jax.lax.scan(
-            one_round, (params, opt_state, cstate), xs
+        (params, opt_state, cstate, hist), _ = jax.lax.scan(
+            one_round, (params, opt_state, cstate, hist), xs
         )
         if not do_eval:
-            return params, opt_state, cstate, None
+            return params, opt_state, cstate, hist, None
         if self.class_groups is not None:
             accs, gaccs = self._group_eval(params, x_test, y_test)
         else:
             accs, _ = self._eval(params, x_test, y_test)
             gaccs = None
         cons = consensus_distance(params)
-        return params, opt_state, cstate, (accs, gaccs, cons)
+        return params, opt_state, cstate, hist, (accs, gaccs, cons)
 
     def _scan_rounds_sharded(
-        self, program, data, params, opt_state, cstate, start, *, length, steps,
+        self, program, data, params, opt_state, cstate, hist, start,
+        *, length, steps,
     ):
         """``length`` rounds with the node axis sharded END TO END.
 
@@ -406,12 +522,19 @@ class DecentralizedTrainer:
 
         hoist = length * steps * self.num_nodes * batch <= _IDX_HOIST_MAX_ELEMS
 
-        def local_scan(program, data, start, params, opt, cstate):
+        def local_scan(program, data, start, params, opt, cstate, hist):
             sidx = jax.lax.axis_index(axes)
             gnode = sidx * blk + jnp.arange(blk)  # slab's global node ids
+            if self.faulted:
+                from repro.core import faults as faults_mod
+
+                # Static per-node staleness, pre-sliced to this slab once.
+                delay_s = jax.lax.dynamic_slice_in_dim(
+                    program.f_delay, sidx * blk, blk
+                )
 
             def one_round(carry, x):
-                params, opt, cstate = carry
+                params, opt, cstate, hist = carry
                 if hoist:
                     r, idx = x
                 else:
@@ -440,8 +563,23 @@ class DecentralizedTrainer:
                     p, o = sgd.update(grads, o, p, lr=self.lr, mu=self.mu)
                     return (p, o), None
 
+                p_in, o_in = params, opt
                 (params, opt), _ = jax.lax.scan(one_step, (params, opt), idx)
-                if self.compress is None:
+                if self.faulted:
+                    # Slab view of the global masks; mixing still sees the
+                    # full alive vector via mix_at_local's own slicing.
+                    alive_s = jax.lax.dynamic_slice_in_dim(
+                        program.f_alive[r], sidx * blk, blk
+                    )
+                    params = faults_mod.where_alive(alive_s, params, p_in)
+                    opt = faults_mod.where_alive(alive_s, opt, o_in)
+                    pub = None
+                    if self._has_hist:
+                        pub, hist = faults_mod.push_and_publish(
+                            params, hist, r, delay_s
+                        )
+                    params = program.mix_at_local(params, r, pub)
+                elif self.compress is None:
                     params = program.mix_at_local(params, r)
                 else:
                     def do(args):
@@ -457,7 +595,7 @@ class DecentralizedTrainer:
                             program.gossip_mask[r], do, lambda a: a,
                             (params, cstate),
                         )
-                return (params, opt, cstate), None
+                return (params, opt, cstate, hist), None
 
             rs = start + jnp.arange(length)
             if hoist:
@@ -475,10 +613,10 @@ class DecentralizedTrainer:
                 xs = (rs, idx_all)
             else:
                 xs = rs
-            (params, opt, cstate), _ = jax.lax.scan(
-                one_round, (params, opt, cstate), xs
+            (params, opt, cstate, hist), _ = jax.lax.scan(
+                one_round, (params, opt, cstate, hist), xs
             )
-            return params, opt, cstate
+            return params, opt, cstate, hist
 
         def node_specs(tree):
             return jax.tree.map(
@@ -488,11 +626,12 @@ class DecentralizedTrainer:
         pspec = node_specs(params)
         ospec = node_specs(opt_state)
         cspec = node_specs(cstate)
+        hspec = node_specs(hist)
         return _shard_map(
             local_scan, mesh=program.mesh,
-            in_specs=(P(), P(), P(), pspec, ospec, cspec),
-            out_specs=(pspec, ospec, cspec),
-        )(program, data, start, params, opt_state, cstate)
+            in_specs=(P(), P(), P(), pspec, ospec, cspec, hspec),
+            out_specs=(pspec, ospec, cspec, hspec),
+        )(program, data, start, params, opt_state, cstate, hist)
 
     def _jit_for_period(self, period: int):
         """The round step for a new schedule period.
@@ -573,8 +712,21 @@ class DecentralizedTrainer:
         steps = self.loader.steps_per_epoch() * self.local_epochs
         t0 = time.perf_counter()
         if gossip_first:
+            if self.faulted:
+                raise ValueError(
+                    "gossip_first does not compose with faults= (there is no "
+                    "round index for the pre-round mix to draw masks from)"
+                )
             self.params = self._mix(self._mix_op(), self.params)
         round_jit = self._round_jit
+        hist = ()
+        if self.faulted:
+            from repro.core import faults as faults_mod
+
+            trace = self.engine.fault_trace
+            trace.ensure(rounds)
+            if self._has_hist:
+                hist = faults_mod.init_history(self.params, trace.delay_max + 1)
         for r in range(rounds):
             if self.engine.schedule.is_time_varying and self.engine.refresh(r):
                 # New schedule period: fresh W/CSR; one compiled program for
@@ -583,7 +735,20 @@ class DecentralizedTrainer:
                 self.graph = self.engine.graph
                 round_jit = self._jit_for_period(self.engine.schedule.period_of(r))
             xs, ys = self.loader.sample_round(steps, round=r)
-            if self.engine.is_gossip_round(r):
+            if self.faulted:
+                alive = jnp.asarray(trace.alive(r))
+                if self.engine.is_gossip_round(r):
+                    self.params, self.opt_state, hist = self._round_faulted_jit(
+                        self._mix_op_faulted(), jnp.asarray(self._fault_keep(r)),
+                        alive, jnp.int32(r), self.params, self.opt_state, hist,
+                        jnp.asarray(xs), jnp.asarray(ys),
+                    )
+                else:
+                    self.params, self.opt_state, hist = self._local_faulted_jit(
+                        jnp.int32(r), alive, self.params, self.opt_state, hist,
+                        jnp.asarray(xs), jnp.asarray(ys),
+                    )
+            elif self.engine.is_gossip_round(r):
                 self.params, self.opt_state, self.cstate = round_jit(
                     self._mix_op(), self.params, self.opt_state, self.cstate,
                     jnp.asarray(xs), jnp.asarray(ys),
@@ -646,6 +811,11 @@ class DecentralizedTrainer:
             return []
         program = self.engine.program(rounds, kind=self.mix_impl)
         data = self.loader.device_data()
+        hist = ()
+        if self.faulted and self._has_hist:
+            from repro.core import faults as faults_mod
+
+            hist = faults_mod.init_history(self.params, program.delay_max + 1)
         if program.kind == "sparse_sharded":
             # Commit the node-stacked state to its in-scan layout (node axis
             # sharded over the mesh) before the first chunk: the fused chunk
@@ -674,8 +844,14 @@ class DecentralizedTrainer:
             self.params = _put(self.params)
             self.opt_state = _put(self.opt_state)
             self.cstate = _put(self.cstate)
+            hist = _put(hist)
         t0 = time.perf_counter()
         if gossip_first:
+            if self.faulted:
+                raise ValueError(
+                    "gossip_first does not compose with faults= (there is no "
+                    "round index for the pre-round mix to draw masks from)"
+                )
             self.params = self._mix(self._mix_op(), self.params)
         do_eval = x_test is not None
         if do_eval:
@@ -689,8 +865,10 @@ class DecentralizedTrainer:
         for end in ends:
             start, length = prev + 1, end - prev
             prev = end
-            self.params, self.opt_state, self.cstate, metrics = self._fused_chunk_jit(
-                program, data, self.params, self.opt_state, self.cstate,
+            (
+                self.params, self.opt_state, self.cstate, hist, metrics,
+            ) = self._fused_chunk_jit(
+                program, data, self.params, self.opt_state, self.cstate, hist,
                 jnp.int32(start), x_t, y_t, length=length, do_eval=do_eval,
             )
             if not do_eval:

@@ -1,0 +1,469 @@
+"""Fault-injection subsystem (core/faults.py): parser, trace, mixing, trainer.
+
+Covers the ISSUE 7 acceptance surface end to end:
+
+- spec grammar parse/validation errors and clause defaults;
+- :class:`FaultTrace` determinism (same seed => byte-identical masks),
+  targeted pools, deterministic kills gated on ``start``, static straggler
+  delays, and ``drop`` edge semantics;
+- renormalized-mixing semantics on real ``decavg_matrix`` W and its CSR
+  twin — row-stochasticity under masks and the empty-neighborhood identity
+  fallback (the bugfix satellite);
+- dead nodes bit-unchanged and stragglers publishing genuinely stale
+  snapshots through the ring buffer;
+- engine/trainer gating (unsupported backends, faults+compress,
+  gossip_first) and the capability matrix's ``faults`` column;
+- the tentpole contract: trainer loop == fused under a combined
+  churn+straggler+drop schedule at 1e-6, including ``@rewire`` and
+  ``gossip_every=2`` (sharded twin lives in tests/test_fused_sharded.py's
+  subprocess harness);
+- run-id backward compatibility: a spec without ``faults`` hashes to its
+  pre-subsystem run_id (pinned literal).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decavg
+from repro.core import faults as F
+from repro.core import mixing as M
+from repro.core import partition as P
+from repro.core import sparse as S
+from repro.core import topology as T
+from repro.data.loader import NodeLoader
+from repro.train.trainer import DecentralizedTrainer
+
+N = 16
+DIM = 32
+COMBINED = "churn:p_leave=0.15,p_join=0.5;straggler:frac=0.3,delay=3;drop:p_edge=0.2"
+
+
+def sched(spec="ba:n=16,m=2", seed=0):
+    return T.make_schedule(spec, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Grammar
+# ---------------------------------------------------------------------------
+
+
+class TestParse:
+    def test_defaults_and_overrides(self):
+        (c,) = F.parse_faults("churn")
+        assert c.kind == "churn" and c.target == "uniform"
+        assert c.params["p_leave"] == pytest.approx(0.1)
+        (c,) = F.parse_faults("churn:p_leave=0.4,start=8@targeted=hubs")
+        assert c.params["p_leave"] == pytest.approx(0.4)
+        assert c.params["start"] == 8 and c.target == "hubs"
+
+    def test_multi_clause(self):
+        clauses = F.parse_faults(COMBINED)
+        assert [c.kind for c in clauses] == ["churn", "straggler", "drop"]
+        sch = F.FaultSchedule.parse(COMBINED)
+        assert sch.has_churn and sch.has_stragglers and sch.has_drop
+        assert sch.max_delay == 3
+
+    def test_parse_idempotent_on_schedule(self):
+        sch = F.FaultSchedule.parse("drop:p_edge=0.3")
+        assert F.FaultSchedule.parse(sch) is sch
+
+    @pytest.mark.parametrize(
+        "bad",
+        [
+            "",
+            " ; ",
+            "meteor:p=0.1",
+            "churn:p_leave=1.5",
+            "churn:bogus=1",
+            "churn@targeted=mediums",
+            "churn@flavor=hubs",
+            "straggler:delay=0",
+            "drop:p_edge=0.1@targeted=hubs",
+        ],
+    )
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            F.parse_faults(bad)
+
+
+# ---------------------------------------------------------------------------
+# FaultTrace
+# ---------------------------------------------------------------------------
+
+
+class TestTrace:
+    def test_deterministic_and_incremental(self):
+        a = F.FaultTrace(COMBINED, sched(), seed=7)
+        b = F.FaultTrace(COMBINED, sched(), seed=7)
+        a.ensure(12)  # bulk...
+        for r in range(12):  # ...vs incremental must agree byte-for-byte
+            np.testing.assert_array_equal(a.alive(r), b.alive(r))
+            np.testing.assert_array_equal(a.dense_keep(r), b.dense_keep(r))
+        c = F.FaultTrace(COMBINED, sched(), seed=8)
+        c.ensure(12)
+        assert any(
+            not np.array_equal(a.alive(r), c.alive(r)) for r in range(12)
+        )
+
+    def test_targeted_kill_start_gated(self):
+        spec = "churn:p_leave=1.0,p_join=0.0,frac=0.25,start=5@targeted=hubs"
+        tr = F.FaultTrace(spec, sched(), seed=0)
+        g = sched().graph_at(0)
+        deg = g.degrees()
+        k = int(np.ceil(0.25 * N))
+        hubs = np.lexsort((np.arange(N), -deg))[:k]
+        for r in range(5):
+            assert tr.alive(r).all(), "no one dies before start"
+        post = tr.alive(5)
+        assert not post[hubs].any(), "every hub dies at start"
+        assert post.sum() == N - k, "only hubs die"
+        for r in range(6, 10):  # p_join=0 => they stay dead
+            np.testing.assert_array_equal(tr.alive(r), post)
+
+    def test_leaves_target_complements_hubs(self):
+        kill = "churn:p_leave=1.0,p_join=0.0,frac=0.25,start=0@targeted={}"
+        dead_h = ~F.FaultTrace(kill.format("hubs"), sched(), seed=0).alive(0)
+        dead_l = ~F.FaultTrace(kill.format("leaves"), sched(), seed=0).alive(0)
+        deg = sched().graph_at(0).degrees()
+        assert deg[dead_h].min() >= deg[~dead_h].max()
+        assert deg[dead_l].max() <= deg[~dead_l].min()
+
+    def test_straggler_delays_static_and_bounded(self):
+        tr = F.FaultTrace("straggler:frac=0.25,delay=4", sched(), seed=0)
+        k = int(np.ceil(0.25 * N))
+        assert tr.delay_max == 4
+        assert (tr.delay == 4).sum() == k and set(np.unique(tr.delay)) <= {0, 4}
+
+    def test_drop_everything_keeps_diagonal_only(self):
+        tr = F.FaultTrace("drop:p_edge=1.0", sched(), seed=0)
+        keep = tr.dense_keep(0)
+        adj = np.asarray(sched().graph_at(0).adj, bool)
+        assert np.diag(keep).all()
+        assert not keep[adj & ~np.eye(N, dtype=bool)].any()
+        assert tr.alive(0).all(), "drop never kills nodes"
+
+    def test_drop_symmetric_and_seeded(self):
+        tr = F.FaultTrace("drop:p_edge=0.5", sched(), seed=3)
+        keep = tr.dense_keep(2)
+        np.testing.assert_array_equal(keep, keep.T)
+        assert tr.edge_kept(2, 0, 0) is True
+        i, j = np.nonzero(np.asarray(sched().graph_at(0).adj, bool))
+        kept = [tr.edge_kept(2, a, b) for a, b in zip(i, j)]
+        assert any(kept) and not all(kept)
+
+    def test_entry_keep_matches_dense_and_spares_padding(self):
+        tr = F.FaultTrace(COMBINED, sched(), seed=1)
+        w = M.decavg_matrix(sched().graph_at(0), np.ones(N))
+        csr = S.csr_from_dense(w)
+        rows, cols = np.asarray(csr.rows), np.asarray(csr.indices)
+        keep = tr.entry_keep(3, rows, cols)
+        np.testing.assert_array_equal(keep, tr.dense_keep(3)[rows, cols])
+        # zero-valued (padding) slots are forced kept => inert under renorm
+        vals = np.asarray(csr.values).copy()
+        vals[0] = 0.0
+        assert tr.entry_keep(3, rows, cols, vals)[0]
+
+
+# ---------------------------------------------------------------------------
+# Renormalized mixing on a real DecAvg matrix (bugfix satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestRenorm:
+    def _w(self, sizes=None):
+        g = sched().graph_at(0)
+        return g, M.decavg_matrix(
+            g, np.ones(N) if sizes is None else sizes
+        ).astype(np.float32)
+
+    def test_renorm_row_stochastic_under_mask(self):
+        _, w = self._w()
+        rng = np.random.default_rng(0)
+        keep = rng.random((N, N)) < 0.6
+        keep |= np.eye(N, dtype=bool)
+        wn, ok = F.renorm_dense(jnp.asarray(w), jnp.asarray(keep))
+        assert np.asarray(ok).all()
+        np.testing.assert_allclose(np.asarray(wn).sum(1), 1.0, atol=1e-6)
+        assert (np.asarray(wn)[~keep] == 0).all()
+
+    def test_empty_row_identity_fallback_dense(self):
+        """A node whose entire row is masked keeps its own params exactly —
+        the empty-neighborhood bug this PR fixes (previously a 0/0 row)."""
+        _, w = self._w()
+        keep = np.ones((N, N), bool)
+        keep[4, :] = False  # node 4 loses everything, incl. self-loop
+        alive = jnp.ones(N, bool)
+        params = {"w": jnp.asarray(np.random.default_rng(1).standard_normal((N, 3, 2)), jnp.float32)}
+        out = F.mix_faulted_dense(jnp.asarray(w), jnp.asarray(keep), alive, params)
+        assert not jnp.isnan(out["w"]).any()
+        np.testing.assert_array_equal(np.asarray(out["w"][4]), np.asarray(params["w"][4]))
+        # the effective-W helper shows the same identity row
+        eff = F.faulted_dense_w(w, keep, np.ones(N, bool))
+        np.testing.assert_array_equal(eff[4], np.eye(N, dtype=np.float32)[4])
+        np.testing.assert_allclose(eff.sum(1), 1.0, atol=1e-6)
+
+    def test_empty_row_identity_fallback_csr(self):
+        """Same fallback on the CSR path, triggered the realistic way: a
+        zero-data node (data_sizes[i]=0 => row mass only on neighbors) whose
+        neighbors all die."""
+        g = sched().graph_at(0)
+        sizes = np.ones(N)
+        sizes[0] = 0.0  # node 0 weights itself 0 in DecAvg
+        w = M.decavg_matrix(g, sizes).astype(np.float32)
+        assert w[0, 0] == 0.0
+        csr = S.csr_from_dense(w)
+        alive = np.ones(N, bool)
+        alive[np.flatnonzero(np.asarray(g.adj[0]))] = False  # kill 0's peers
+        keep = alive[np.asarray(csr.rows)] & alive[np.asarray(csr.indices)]
+        params = jnp.asarray(
+            np.random.default_rng(2).standard_normal((N, 5)), jnp.float32
+        )
+        out = F.mix_faulted_csr(
+            csr.rows, csr.indices, csr.values, jnp.asarray(keep),
+            jnp.asarray(alive), N, params,
+        )
+        assert not jnp.isnan(out).any()
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(params[0]))
+
+    def test_csr_matches_dense(self):
+        _, w = self._w(np.random.default_rng(3).uniform(0.5, 5.0, N))
+        tr = F.FaultTrace(COMBINED, sched(), seed=2)
+        csr = S.csr_from_dense(w)
+        alive = jnp.asarray(tr.alive(1))
+        params = jnp.asarray(
+            np.random.default_rng(4).standard_normal((N, 7)), jnp.float32
+        )
+        pub = params * 0.5  # pretend-stale snapshots exercise the two-operand path
+        a = F.mix_faulted_dense(
+            jnp.asarray(w), jnp.asarray(tr.dense_keep(1)), alive, params, pub
+        )
+        b = F.mix_faulted_csr(
+            csr.rows, csr.indices, csr.values,
+            jnp.asarray(tr.entry_keep(1, csr.rows, csr.indices)),
+            alive, N, params, pub,
+        )
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    def test_dead_nodes_bit_unchanged(self):
+        _, w = self._w()
+        tr = F.FaultTrace("churn:p_leave=0.5,p_join=0.0", sched(), seed=5)
+        alive = tr.alive(0)
+        assert not alive.all() and alive.any()
+        params = jnp.asarray(
+            np.random.default_rng(6).standard_normal((N, 4)), jnp.float32
+        )
+        out = F.mix_faulted_dense(
+            jnp.asarray(w), jnp.asarray(tr.dense_keep(0)),
+            jnp.asarray(alive), params,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out[~alive]), np.asarray(params[~alive])
+        )
+        assert not np.allclose(np.asarray(out[alive]), np.asarray(params[alive]))
+
+    def test_consensus_fixed_point_preserved_on_alive(self):
+        _, w = self._w()
+        tr = F.FaultTrace(COMBINED, sched(), seed=6)
+        const = jnp.ones((N, 3), jnp.float32) * 2.5
+        out = F.mix_faulted_dense(
+            jnp.asarray(w), jnp.asarray(tr.dense_keep(0)),
+            jnp.asarray(tr.alive(0)), const, const,
+        )
+        np.testing.assert_allclose(np.asarray(out), 2.5, atol=1e-6)
+
+
+class TestHistory:
+    def test_ring_buffer_publishes_stale_snapshots(self):
+        delay = jnp.asarray([0, 1, 3], jnp.int32)
+        hist = F.init_history(jnp.zeros((3, 2)), depth=4)
+        snaps = []
+        for r in range(6):
+            params = jnp.full((3, 2), float(r))
+            snaps.append(params)
+            pub, hist = F.push_and_publish(params, hist, jnp.int32(r), delay)
+            pub = np.asarray(pub)
+            # node i publishes its params from min(delay_i, r) rounds ago
+            for i, d in enumerate([0, 1, 3]):
+                np.testing.assert_array_equal(
+                    pub[i], np.asarray(snaps[r - min(d, r)][i])
+                )
+
+    def test_where_alive_freezes(self):
+        alive = jnp.asarray([True, False])
+        new = {"a": jnp.ones((2, 3)), "b": jnp.full((2,), 5.0)}
+        old = {"a": jnp.zeros((2, 3)), "b": jnp.zeros((2,))}
+        out = F.where_alive(alive, new, old)
+        np.testing.assert_array_equal(np.asarray(out["a"]), [[1, 1, 1], [0, 0, 0]])
+        np.testing.assert_array_equal(np.asarray(out["b"]), [5.0, 0.0])
+
+
+class TestAnalytics:
+    def test_churn_and_recovery_rounds(self):
+        assert F.churn_rounds([16, 16, 12, 12, 13, 10], 16) == [2, 5]
+        rounds = [0, 2, 4, 6, 8]
+        accs = [0.2, 0.5, 0.1, 0.3, 0.6]
+        assert F.recovery_rounds(rounds, accs, 3) == 5  # recovers at r=8
+        assert F.recovery_rounds(rounds, [0.2, 0.5, 0.1, 0.3, 0.4], 3) is None
+        assert F.recovery_rounds(rounds, accs, 0) is None  # no pre-event eval
+
+
+# ---------------------------------------------------------------------------
+# Engine / trainer gating
+# ---------------------------------------------------------------------------
+
+
+def _loader(seed=2):
+    from repro.data.synthetic import make_mnist_like
+
+    ds = make_mnist_like(train_per_class=40, test_per_class=10, dim=DIM, seed=0)
+    parts = P.iid(ds.y_train, N, seed=1)
+    return ds, NodeLoader(ds.x_train, ds.y_train, parts, batch_size=8, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _loader()
+
+
+def make_trainer(data, backend="dense", faults=COMBINED, **kw):
+    _, loader = data
+    return DecentralizedTrainer(
+        "ba:n=16,m=2", loader, seed=0, in_dim=DIM, lr=0.05, momentum=0.9,
+        mix_impl=backend, faults=faults, **kw
+    )
+
+
+class TestGating:
+    def test_capabilities_faults_column(self):
+        caps = decavg.GossipEngine.capabilities()
+        assert {b for b, c in caps.items() if c["faults"]} == {
+            "dense", "sparse", "sparse_sharded"
+        }
+
+    def test_engine_rejects_unsupported_backend(self):
+        with pytest.raises(ValueError, match="does not support faults"):
+            decavg.GossipEngine(
+                "ring:n=16", backend="pallas", faults="drop:p_edge=0.1"
+            )
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        with pytest.raises(ValueError, match="does not support faults"):
+            decavg.GossipEngine(
+                "ring:n=16", backend="sharded", mesh=mesh,
+                faults="drop:p_edge=0.1",
+            )
+
+    def test_engine_mix_requires_round(self):
+        eng = decavg.GossipEngine("ring:n=16", faults="drop:p_edge=0.1")
+        with pytest.raises(ValueError, match="round="):
+            eng.mix(jnp.zeros((16, 3)))
+
+    def test_fault_trace_requires_schedule(self):
+        eng = decavg.GossipEngine("ring:n=16")
+        with pytest.raises(ValueError, match="no fault schedule"):
+            eng.fault_trace
+
+    def test_trainer_rejects_compress(self, data):
+        with pytest.raises(ValueError, match="compose with compress"):
+            make_trainer(data, compress=0.5)
+
+    def test_trainer_rejects_gossip_first(self, data):
+        tr = make_trainer(data)
+        with pytest.raises(ValueError, match="gossip_first"):
+            tr.run(2, gossip_first=True)
+        tr = make_trainer(data)
+        with pytest.raises(ValueError, match="gossip_first"):
+            tr.run_fused(2, gossip_first=True)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: trainer loop == fused under faults
+# ---------------------------------------------------------------------------
+
+
+def assert_trees_close(a, b, **kw):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+class TestTrainerFaulted:
+    @pytest.mark.parametrize("backend", ["dense", "sparse"])
+    @pytest.mark.parametrize("gossip_every", [1, 2])
+    def test_loop_matches_fused(self, data, backend, gossip_every):
+        ds, _ = data
+        kw = dict(backend=backend, gossip_every=gossip_every)
+        loop = make_trainer(data, **kw)
+        loop.run(6, x_test=ds.x_test, y_test=ds.y_test, eval_every=3)
+        fused = make_trainer(data, **kw)
+        fused.run_fused(6, x_test=ds.x_test, y_test=ds.y_test, eval_every=3)
+        assert_trees_close(loop.params, fused.params, rtol=1e-6, atol=1e-6)
+        assert_trees_close(loop.opt_state, fused.opt_state, rtol=1e-6, atol=1e-6)
+
+    def test_loop_matches_fused_rewire(self, data):
+        for mode in ("loop", "fused"):
+            tr = DecentralizedTrainer(
+                "ba:n=16,m=2@rewire=3", data[1], seed=0, in_dim=DIM, lr=0.05,
+                momentum=0.9, mix_impl="sparse", faults=COMBINED,
+            )
+            (tr.run if mode == "loop" else tr.run_fused)(7)
+            if mode == "loop":
+                ref = tr.params
+        assert_trees_close(ref, tr.params, rtol=1e-6, atol=1e-6)
+
+    def test_dead_nodes_frozen_through_training(self, data):
+        """A node killed at round 2 holds exactly its post-round-1 params:
+        two trainers share seeds, one stops right before the kill."""
+        spec = "churn:p_leave=1.0,p_join=0.0,frac=0.25,start=2@targeted=hubs"
+        pre = make_trainer(data, faults=spec)
+        pre.run(2)  # rounds 0-1: everyone alive
+        full = make_trainer(data, faults=spec)
+        full.run(5)  # rounds 2-4: hubs dead (p_join=0)
+        dead = ~full.engine.fault_trace.alive(4)
+        assert dead.any() and not dead.all()
+        for a, b in zip(jax.tree.leaves(pre.params), jax.tree.leaves(full.params)):
+            np.testing.assert_array_equal(np.asarray(a)[dead], np.asarray(b)[dead])
+            assert not np.allclose(np.asarray(a)[~dead], np.asarray(b)[~dead])
+
+    def test_churn_only_runs_without_history(self, data):
+        tr = make_trainer(data, faults="churn:p_leave=0.3,p_join=0.5")
+        assert not tr._has_hist
+        tr.run_fused(4)
+        assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(tr.params))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: run-id backward compatibility
+# ---------------------------------------------------------------------------
+
+
+class TestSpecCompat:
+    def test_run_id_unchanged_without_faults(self):
+        """Adding the ``faults`` field must not re-hash existing stores:
+        the literal below was computed with a pre-subsystem spec.py."""
+        from repro.experiments import ExperimentSpec
+
+        s = ExperimentSpec(
+            topology="ba:n=16,m=2", partitioner="hub_focused", seed=3,
+            rounds=12, lr=0.05,
+        )
+        assert s.run_id == "ba-hub_focused-s3-b80c1156"
+        assert "faults" not in s.canonical()
+
+    def test_run_id_changes_with_faults(self):
+        from repro.experiments import ExperimentSpec
+
+        base = ExperimentSpec(topology="ba:n=16,m=2", seed=3)
+        faulted = ExperimentSpec(
+            topology="ba:n=16,m=2", seed=3, faults="drop:p_edge=0.1"
+        )
+        assert base.run_id != faulted.run_id
+        assert faulted.canonical()["faults"] == "drop:p_edge=0.1"
+
+    def test_spec_validates_faults_eagerly(self):
+        from repro.experiments import ExperimentSpec
+
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            ExperimentSpec(topology="ring:n=16", faults="meteor:p=1")

@@ -98,3 +98,36 @@ def test_fused_matches_loop_8_shards_rewire():
         assert err == 0.0, (ge, err)
     print("OK")
     """)
+
+
+def test_fused_matches_loop_8_shards_faulted():
+    """ISSUE 7 acceptance: a faulted sparse_sharded run — churn + stragglers
+    + edge drops, with the per-shard straggler ring buffer and halo'd
+    renormalized mix inside the scan body — is still a single SPMD
+    ``lax.scan`` that matches the Python loop at 1e-6, and matches the
+    dense reference at the usual cross-backend tolerance."""
+    _run("""
+    FAULTS = "churn:p_leave=0.15,p_join=0.5;straggler:frac=0.3,delay=3;drop:p_edge=0.2"
+    loop = trainer("ba:n=24,m=2@rewire=3", faults=FAULTS)
+    loop.run(7)
+    fused = trainer("ba:n=24,m=2@rewire=3", faults=FAULTS)
+    fused.run_fused(7)
+    prog = fused.engine.program(7)
+    assert prog.faulted and prog.shards == 8
+    assert prog.f_alive.shape == (7, N) and prog.delay_max == 3
+    err = max_err(loop.params, fused.params)
+    assert err <= 1e-6, err
+    assert max_err(loop.opt_state, fused.opt_state) <= 1e-6
+
+    def dense_trainer():
+        loader = NodeLoader(ds.x_train, ds.y_train, parts, batch_size=8, seed=2)
+        return DecentralizedTrainer(
+            "ba:n=24,m=2@rewire=3", loader, lr=0.05, momentum=0.9, seed=0,
+            in_dim=DIM, mix_impl="dense", faults=FAULTS,
+        )
+    ref = dense_trainer()
+    ref.run_fused(7)
+    cross = max_err(ref.params, fused.params)
+    assert cross <= 1e-5, cross
+    print("OK")
+    """)

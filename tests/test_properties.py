@@ -1,4 +1,4 @@
-"""Property tests for core/sparse.py layouts and core/mixing.py matrices.
+"""Property tests for core/sparse.py, core/mixing.py, and core/faults.py.
 
 Runs under hypothesis when installed; the conftest stub makes each
 ``@given`` test an explicit skip otherwise (the registry-sweep checks at the
@@ -13,6 +13,7 @@ import pytest
 hyp = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core import faults as F  # noqa: E402
 from repro.core import mixing as M  # noqa: E402
 from repro.core import sparse as S  # noqa: E402
 from repro.core import topology as T  # noqa: E402
@@ -185,6 +186,98 @@ def test_mh_symmetric_doubly_stochastic(n, p, seed):
     np.testing.assert_allclose(w, w.T, atol=1e-12)
     np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-9)
     np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# core/faults.py renormalized-mixing invariants
+# ---------------------------------------------------------------------------
+
+
+def _masks(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Arbitrary symmetric entry-keep + aliveness masks (worst case: allowed
+    to sever self-loops and whole neighborhoods, unlike real FaultTraces)."""
+    rng = np.random.default_rng(seed)
+    keep = rng.random((n, n)) < rng.uniform(0.1, 1.0)
+    keep = keep & keep.T
+    alive = rng.random(n) < rng.uniform(0.3, 1.0)
+    return keep, alive
+
+
+@given(st.integers(2, 24), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_faulted_w_row_stochastic_under_arbitrary_masks(n, p, seed):
+    """Whatever entries a round loses, the effective mixing matrix stays a
+    valid averaging operator: nonnegative, rows sum to 1, masked entries
+    zero, and rows with no surviving mass fall back to identity."""
+    w, _ = _random_w(n, p, seed)
+    keep, alive = _masks(n, seed + 1)
+    eff = F.faulted_dense_w(w, keep, alive)
+    assert np.all(eff >= -1e-12)
+    np.testing.assert_allclose(eff.sum(axis=1), 1.0, atol=1e-6)
+    dead_or_empty = ~alive | ~(np.asarray(w * keep).sum(axis=1) > 0)
+    np.testing.assert_array_equal(
+        eff[dead_or_empty], np.eye(n, dtype=eff.dtype)[dead_or_empty]
+    )
+    live = ~dead_or_empty
+    assert np.all(eff[live][~keep[live]] == 0.0)
+
+
+@given(st.integers(2, 24), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_faulted_mix_preserves_fixed_points_on_alive(n, p, seed):
+    """Consensus fixed point: if every node already holds the same params,
+    a faulted round changes nothing (renormalized rows still average)."""
+    w, _ = _random_w(n, p, seed)
+    keep, alive = _masks(n, seed + 2)
+    const = jnp.full((n, 3), 1.25, jnp.float32)
+    out = F.mix_faulted_dense(
+        jnp.asarray(w, jnp.float32), jnp.asarray(keep), jnp.asarray(alive),
+        const, const,
+    )
+    np.testing.assert_allclose(np.asarray(out), 1.25, atol=1e-6)
+
+
+@given(st.integers(2, 24), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_faulted_mix_dead_nodes_bit_unchanged(n, p, seed):
+    """Dead nodes' params pass through *bit*-identical — no epsilon — on
+    both the fresh-publish and stale-publish code paths."""
+    w, _ = _random_w(n, p, seed)
+    keep, alive = _masks(n, seed + 3)
+    rng = np.random.default_rng(seed)
+    params = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+    pub = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+    wj, kj, aj = jnp.asarray(w, jnp.float32), jnp.asarray(keep), jnp.asarray(alive)
+    for out in (
+        F.mix_faulted_dense(wj, kj, aj, params),
+        F.mix_faulted_dense(wj, kj, aj, params, pub),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(out)[~alive], np.asarray(params)[~alive]
+        )
+
+
+@given(st.integers(2, 24), st.floats(0.05, 0.9), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_faulted_csr_matches_dense_under_arbitrary_masks(n, p, seed):
+    """The CSR faulted mix agrees with the dense reference on its support
+    for any mask pair — the loop/fused sparse paths both ride on it."""
+    w, _ = _random_w(n, p, seed)
+    w = w.astype(np.float32)
+    keep, alive = _masks(n, seed + 4)
+    csr = S.csr_from_dense(w)
+    rows, cols = np.asarray(csr.rows), np.asarray(csr.indices)
+    rng = np.random.default_rng(seed)
+    params = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    pub = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    a = F.mix_faulted_dense(
+        jnp.asarray(w), jnp.asarray(keep), jnp.asarray(alive), params, pub
+    )
+    b = F.mix_faulted_csr(
+        csr.rows, csr.indices, csr.values, jnp.asarray(keep[rows, cols]),
+        jnp.asarray(alive), n, params, pub,
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
 def test_validate_mixing_accepts_every_registry_family():
