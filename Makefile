@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test coverage bench-mixing bench-wire bench-rounds bench quickstart install sweep-smoke sweep-paper sweep-churn-smoke
+.PHONY: verify test coverage bench-mixing bench-wire bench-rounds bench-lm-rounds bench quickstart install sweep-smoke sweep-paper sweep-churn-smoke sweep-lm-smoke
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -26,6 +26,11 @@ sweep-churn-smoke:  ## hub-kill vs leaf-kill churn gate (faults subsystem)
 	    --store results/sweep_churn_smoke.jsonl \
 	    --bench-out BENCH_churn_smoke.json
 
+sweep-lm-smoke:  ## LLM-cohort gate: ring/star gossip beats isolation on g2_token_spread
+	$(PY) -m repro.experiments.sweep --preset lm_smoke \
+	    --store results/sweep_lm_smoke.jsonl \
+	    --bench-out BENCH_lm_smoke.json
+
 sweep-paper:  ## the paper's N=100 matrix (ER/BA/SBM x splits x 3 seeds)
 	$(PY) -m repro.experiments.sweep --preset paper \
 	    --store results/sweep_paper.jsonl --bench-out BENCH_sweep.json
@@ -43,6 +48,9 @@ bench-wire:  ## wire-volume model only (allgather vs ring halo, S=8, fast)
 
 bench-rounds:  ## fused (one lax.scan) vs Python-loop rounds/s -> BENCH_rounds.json
 	$(PY) benchmarks/bench_rounds.py
+
+bench-lm-rounds:  ## fused vs loop LM cohort rounds/s -> BENCH_lm_rounds.json
+	$(PY) benchmarks/bench_lm_rounds.py
 
 bench:  ## quick paper-figure benchmark harness
 	$(PY) benchmarks/run.py

@@ -1,0 +1,172 @@
+"""Fused-vs-loop LM cohort throughput: rounds/s over a full training run.
+
+The lm analogue of bench_rounds.py: the Python-loop ``LMCohortTrainer.run``
+pays per round a host-side token generation, a device transfer, and a jit
+dispatch plus an eager ``engine.mix``; ``run_fused`` compiles the whole run
+into ``lax.scan`` chunks with the chunk's token slab staged as the scan's
+xs — one dispatch per eval boundary. The gap is pure orchestration
+overhead, the quantity this benchmark pins (CI guards >= 1.5x on the
+acceptance row).
+
+Rows (reduced transformer members, CPU-sized):
+
+  - the acceptance row: n=8 ring, dense backend, tiny members so per-round
+    compute doesn't drown the dispatch gap;
+  - an informational CHOCO row: same config with ``compress=0.25`` — the
+    top-k + reference update runs inside the scan body;
+  - an informational faulted row: churn masks + renormalized mixing inside
+    the scan.
+
+Each row also reports max_abs_param_err for fused-vs-loop on its exact
+config (same seed, fresh trainers) — the speed claim is only worth
+reporting if both paths still compute the same thing (CI guards <= 1e-6 on
+the acceptance row). Agreement is measured over a short horizon
+(``agreement_rounds``, default 8) separate from the timed runs: both paths
+do the same math in a different operation order, so float drift compounds
+round over round (~2e-5 after 40 rounds) and a long-horizon comparison
+would measure chaos amplification, not an implementation gap. The tests
+(tests/test_lm_fused.py) pin the same 1e-6 bound at comparable horizons.
+
+Emits BENCH_lm_rounds.json at the repo root.
+
+Run:  PYTHONPATH=src python benchmarks/bench_lm_rounds.py [--rounds 40]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.train.trainer import LMCohortTrainer
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_lm_rounds.json")
+
+# Micro transformer members on purpose (the test_system.py reduced config):
+# the bench isolates per-round orchestration overhead, so member compute
+# must not drown it — the fused win converges to 1x as members grow.
+# batch=1 keeps the per-round forward/backward small enough that the
+# dispatch gap stays the dominant term on an unloaded CPU.
+N_NODES = 8
+BATCH = 1
+SEQ = 32
+
+
+def micro_cfg():
+    base = cfgbase.get("llama32_1b")
+    return dataclasses.replace(
+        base.reduced(),
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256,
+    )
+
+
+def make_trainer(cfg, **kw) -> LMCohortTrainer:
+    kw.setdefault("compress", None)
+    return LMCohortTrainer(
+        f"ring:n={N_NODES}", cfg, nodes=N_NODES, batch=BATCH, seq=SEQ,
+        lr=1e-3, seed=0, **kw,
+    )
+
+
+def _time_run(run, rounds: int, reps: int = 3) -> float:
+    """Best-of-``reps`` whole-run wall clock (after one compile warm-up).
+
+    Best-of, not mean: transient CPU contention on shared runners only ever
+    slows a run down, and it biases both paths identically.
+    """
+    run(rounds, eval_every=rounds)  # warm-up: pays every compile in the path
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run(rounds, eval_every=rounds)
+        jax.block_until_ready(jax.tree.leaves(run.__self__.params))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _param_err(cfg, rounds: int, **kw) -> float:
+    a = make_trainer(cfg, **kw)
+    a.run(rounds, eval_every=rounds)
+    b = make_trainer(cfg, **kw)
+    b.run_fused(rounds, eval_every=rounds)
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params))
+    )
+
+
+def bench_one(
+    cfg, rounds: int, label: str, agreement_rounds: int = 8, **kw
+) -> dict:
+    loop_s = _time_run(make_trainer(cfg, **kw).run, rounds)
+    fused_s = _time_run(make_trainer(cfg, **kw).run_fused, rounds)
+    row = {
+        "label": label,
+        "n": N_NODES,
+        "backend": "dense",
+        "rounds": rounds,
+        "loop_rounds_per_s": round(rounds / loop_s, 1),
+        "fused_rounds_per_s": round(rounds / fused_s, 1),
+        "speedup": round(loop_s / fused_s, 2),
+        "agreement_rounds": agreement_rounds,
+        "max_abs_param_err": _param_err(cfg, agreement_rounds, **kw),
+        **{k: v for k, v in kw.items() if v is not None},
+    }
+    print(
+        f"{label:12s} loop {row['loop_rounds_per_s']:7.1f} r/s   "
+        f"fused {row['fused_rounds_per_s']:7.1f} r/s   "
+        f"speedup {row['speedup']:.2f}x   err {row['max_abs_param_err']:.2e}"
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    cfg = micro_cfg()
+    rows = [
+        # the acceptance row: CI guards speedup >= 1.5x and err <= 1e-6
+        bench_one(cfg, args.rounds, "lm"),
+        # CHOCO top-k gossip inside the scan body (informational). Short
+        # agreement horizon: the top-k mask is discontinuous, so once float
+        # drift flips one selected index the paths diverge chaotically.
+        bench_one(
+            cfg, max(args.rounds // 2, 10), "lm+choco",
+            agreement_rounds=6, compress=0.25,
+        ),
+        # churn masks + renormalized mixing inside the scan (informational)
+        bench_one(
+            cfg, max(args.rounds // 2, 10), "lm+faults",
+            faults="churn:p_leave=0.1,p_join=0.5",
+        ),
+    ]
+    out = {
+        "bench": "fused vs loop LM cohort rounds/s (benchmarks/bench_lm_rounds.py)",
+        "device": str(jax.devices()[0]),
+        "config": {
+            "topology": f"ring:n={N_NODES}",
+            "arch": "llama32_1b reduced micro (2L/64d, vocab 256)",
+            "nodes": N_NODES, "batch": BATCH, "seq": SEQ,
+            "lr": 1e-3, "schedule": "cosine", "optimizer": "adamw",
+            "eval": "none (pure training)",
+        },
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

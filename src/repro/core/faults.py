@@ -65,6 +65,7 @@ __all__ = [
     "init_history",
     "push_and_publish",
     "where_alive",
+    "where_alive_stacked",
     "churn_rounds",
     "recovery_rounds",
 ]
@@ -544,6 +545,21 @@ def where_alive(alive: jax.Array, new: Any, old: Any) -> Any:
         lambda a, b: jnp.where(
             alive.reshape((-1,) + (1,) * (a.ndim - 1)), a, b
         ),
+        new,
+        old,
+    )
+
+
+def where_alive_stacked(alive: jax.Array, new: Any, old: Any) -> Any:
+    """``where_alive`` for pytrees mixing node-stacked leaves with shared
+    state: leaves without a leading node axis (e.g. AdamW's global step
+    ``count``, shared by every cohort member) pass through unfrozen — a
+    per-node select over a scalar would silently reshape it to (N,)."""
+    n = alive.shape[0]
+    return jax.tree_util.tree_map(
+        lambda a, b: a
+        if a.ndim == 0 or a.shape[0] != n
+        else jnp.where(alive.reshape((-1,) + (1,) * (a.ndim - 1)), a, b),
         new,
         old,
     )

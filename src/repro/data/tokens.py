@@ -1,9 +1,20 @@
-"""Synthetic LM token pipeline for the LLM-cohort examples and smoke tests.
+"""Synthetic LM token pipeline for the LLM-cohort runner and smoke tests.
 
 Zipf-distributed unigrams with a per-node "domain" bias: node i's stream
 mixes a shared zipf background with a node-specific set of boosted tokens —
 the LLM analogue of the paper's non-IID label skew (different nodes see
 different data modes; gossip must spread the knowledge).
+
+The zipf background is truncated to the vocab by rejection resampling: a
+``zipf % vocab`` fold would alias the unbounded tail onto arbitrary token
+ids and flatten the intended head-heavy shape (at ``a=1.2`` and a 512-token
+vocab ~30% of the mass lands in the tail).
+
+Every batch is a pure function of ``(seed, node, round)`` — the Python loop
+and the fused ``lax.scan`` path draw bit-identical tokens, a resumed run
+re-derives exactly the batches the interrupted run would have seen, and the
+fused path can stage one chunk of rounds at a time (``round_token_slab``)
+instead of materializing the whole O(rounds·N·B·S) stream up front.
 
 Labels are next-token (shifted) — standard causal LM objective.
 """
@@ -12,7 +23,54 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["token_batches", "node_token_stream"]
+__all__ = [
+    "token_batches",
+    "node_token_stream",
+    "node_domain",
+    "round_token_batch",
+    "round_token_slab",
+    "domain_eval_batch",
+]
+
+# Seed-sequence stream tags: np.random.default_rng hashes the full tuple, so
+# the per-round training draws, the fixed domain sets, and the held-out
+# domain-eval draws are independent streams of one (seed, node) lineage.
+_STREAM_TRAIN = 0
+_STREAM_DOMAIN = 1
+_STREAM_EVAL = 2
+
+
+def _zipf_tokens(
+    rng: np.random.Generator, a: float, size: int, vocab: int, *, max_tries: int = 32
+) -> np.ndarray:
+    """Truncated-zipf token ids in ``[0, vocab)``.
+
+    Rejection-resamples draws past the vocab instead of folding them back
+    with ``%``, so the head-heavy ordering (P(0) > P(1) > ...) survives
+    truncation exactly. The residual tail after ``max_tries`` redraw passes
+    (~0.3^32 of the mass at a=1.2, vocab=512) is clamped to the last token.
+    """
+    draw = rng.zipf(a, size=size).astype(np.int64)
+    for _ in range(max_tries):
+        bad = draw > vocab
+        n_bad = int(bad.sum())
+        if not n_bad:
+            break
+        draw[bad] = rng.zipf(a, size=n_bad).astype(np.int64)
+    np.minimum(draw, vocab, out=draw)
+    return draw - 1  # zipf support starts at 1
+
+
+def node_domain(
+    node: int, vocab: int, *, seed: int, domain_size: int = 64
+) -> np.ndarray:
+    """Node ``node``'s boosted "domain" token set — fixed for the whole run.
+
+    Drawn from a dedicated stream so training batches, however many rounds
+    are generated, never perturb which tokens a node's domain holds.
+    """
+    rng = np.random.default_rng((seed, node, _STREAM_DOMAIN))
+    return rng.integers(0, vocab, size=domain_size)
 
 
 def node_token_stream(
@@ -26,12 +84,102 @@ def node_token_stream(
     domain_size: int = 64,
 ) -> np.ndarray:
     """Token stream for one node: zipf background + node-domain boosts."""
-    rng = np.random.default_rng(seed * 100003 + node)
-    bg = rng.zipf(zipf_a, size=length).astype(np.int64) % vocab
-    domain = rng.integers(0, vocab, size=domain_size)
+    rng = np.random.default_rng((seed, node, _STREAM_TRAIN))
+    bg = _zipf_tokens(rng, zipf_a, length, vocab)
+    domain = node_domain(node, vocab, seed=seed, domain_size=domain_size)
     mask = rng.random(length) < domain_frac
     bg[mask] = domain[rng.integers(0, domain_size, size=int(mask.sum()))]
     return bg
+
+
+def round_token_batch(
+    num_nodes: int,
+    round: int,
+    batch: int,
+    seq: int,
+    vocab: int,
+    *,
+    seed: int = 0,
+    zipf_a: float = 1.2,
+    domain_frac: float = 0.3,
+    domain_size: int = 64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """One round's (tokens, labels), each (N, B, S) int32.
+
+    A pure function of ``(seed, node, round)``: the per-round generator both
+    run paths (and checkpoint resume) key their draws from.
+    """
+    chunk = batch * (seq + 1)
+    toks = np.empty((num_nodes, batch, seq + 1), np.int32)
+    for node in range(num_nodes):
+        rng = np.random.default_rng((seed, node, _STREAM_TRAIN, round))
+        bg = _zipf_tokens(rng, zipf_a, chunk, vocab)
+        domain = node_domain(node, vocab, seed=seed, domain_size=domain_size)
+        mask = rng.random(chunk) < domain_frac
+        bg[mask] = domain[rng.integers(0, domain_size, size=int(mask.sum()))]
+        toks[node] = bg.reshape(batch, seq + 1)
+    return toks[:, :, :-1], toks[:, :, 1:]
+
+
+def round_token_slab(
+    num_nodes: int,
+    rounds,
+    batch: int,
+    seq: int,
+    vocab: int,
+    *,
+    seed: int = 0,
+    **kw,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ``round_token_batch`` over a chunk of rounds: (L, N, B, S) x2.
+
+    The fused lm path's DeviceData-style staging unit: one slab per scan
+    chunk rides in as the scan's xs, so device memory holds O(chunk) rounds
+    of tokens instead of the whole run.
+    """
+    ts, ls = zip(
+        *(
+            round_token_batch(
+                num_nodes, int(r), batch, seq, vocab, seed=seed, **kw
+            )
+            for r in rounds
+        )
+    )
+    return np.stack(ts), np.stack(ls)
+
+
+def domain_eval_batch(
+    num_nodes: int,
+    batch: int,
+    seq: int,
+    vocab: int,
+    *,
+    seed: int = 0,
+    domain_size: int = 64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Held-out per-node eval set of *other* nodes' domain tokens.
+
+    Row i holds (B, S) sequences drawn uniformly from the concatenation of
+    every domain set except node i's own — the token-task analogue of the
+    mlp path's G2-spread eval (how well does node i model the data modes it
+    never trained on?). Drawn from a dedicated stream, so it is disjoint
+    from every training draw at any seed.
+    """
+    if num_nodes < 2:
+        raise ValueError("domain_eval_batch needs >= 2 nodes (foreign domains)")
+    domains = np.stack(
+        [
+            node_domain(i, vocab, seed=seed, domain_size=domain_size)
+            for i in range(num_nodes)
+        ]
+    )
+    toks = np.empty((num_nodes, batch, seq + 1), np.int32)
+    for i in range(num_nodes):
+        rng = np.random.default_rng((seed, i, _STREAM_EVAL))
+        foreign = np.delete(domains, i, axis=0).reshape(-1)
+        draw = foreign[rng.integers(0, foreign.size, size=batch * (seq + 1))]
+        toks[i] = draw.reshape(batch, seq + 1)
+    return toks[:, :, :-1], toks[:, :, 1:]
 
 
 def token_batches(
@@ -43,18 +191,11 @@ def token_batches(
     steps: int,
     seed: int = 0,
 ):
-    """Yield ``steps`` batches of (tokens, labels), each (N, B, S) int32."""
-    streams = [
-        node_token_stream(n, steps * batch * (seq + 1), vocab, seed=seed)
-        for n in range(num_nodes)
-    ]
+    """Yield ``steps`` batches of (tokens, labels), each (N, B, S) int32.
+
+    Thin generator over ``round_token_batch`` — O(N·B·S) live memory
+    regardless of ``steps`` (the pre-PR-8 version materialized every node's
+    full stream up front).
+    """
     for s in range(steps):
-        toks = np.stack(
-            [
-                st[s * batch * (seq + 1) : (s + 1) * batch * (seq + 1)].reshape(
-                    batch, seq + 1
-                )
-                for st in streams
-            ]
-        ).astype(np.int32)
-        yield toks[:, :, :-1], toks[:, :, 1:]
+        yield round_token_batch(num_nodes, s, batch, seq, vocab, seed=seed)

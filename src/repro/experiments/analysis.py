@@ -69,6 +69,8 @@ def summarize(store: ResultsStore) -> list[dict[str, Any]]:
             "topology": spec.get("topology"),
             "partitioner": spec.get("partitioner"),
             "backend": spec.get("backend"),
+            "gossip_every": spec.get("gossip_every", 1),
+            "kind": (spec.get("model") or {}).get("kind", "mlp"),
             "seed": spec.get("seed"),
             "rounds": len(curve),
             "wall_s": end.get("wall_s"),
@@ -85,12 +87,22 @@ def summarize(store: ResultsStore) -> list[dict[str, Any]]:
             "final_acc": final.get("mean_acc"),
             "final_g1_acc": final.get("g1_acc"),
             "final_g2_acc": final.get("g2_acc"),
-            "final_g2_spread": final.get("g2_acc_spread"),
+            # lm runs report spread as g2_token_spread (mean true-token
+            # probability on foreign-domain tokens); the join treats the two
+            # as one quantity so hub-vs-leaf tables work for both kinds.
+            "final_g2_spread": final.get(
+                "g2_acc_spread", final.get("g2_token_spread")
+            ),
             "final_consensus": final.get("consensus_mean"),
             "final_loss": final.get("loss"),
             # curve stats
             "auc_acc": _auc([r.get("mean_acc") for r in curve]),
-            "auc_g2_spread": _auc([r.get("g2_acc_spread") for r in curve]),
+            "auc_g2_spread": _auc(
+                [
+                    r.get("g2_acc_spread", r.get("g2_token_spread"))
+                    for r in curve
+                ]
+            ),
             # fault side (None for fault-free runs)
             "faults": spec.get("faults"),
             "alive_min": final.get("alive_min"),
@@ -136,6 +148,11 @@ def qualitative_checks(rows: list[dict[str, Any]]) -> dict[str, Any]:
       ``auc_g2_spread`` <= leaf-targeted churn's) — the paper's hub-vs-leaf
       centrality result, stress-tested under churn. None when the sweep has
       no targeted-churn pair.
+    - lm_gossip_spreads: across lm runs, gossiped cohorts end with higher
+      ``g2_token_spread`` (mean true-token probability on *other* nodes'
+      domain tokens) than ``gossip_every=0`` isolation — domain knowledge
+      moved over the edges, the paper's spread question on the token task.
+      None when the sweep lacks either side of the comparison.
     """
     hub_edge = hub_vs_leaf_table(rows)
     per_family = {
@@ -161,6 +178,17 @@ def qualitative_checks(rows: list[dict[str, Any]]) -> dict[str, Any]:
         return float(np.mean(vals)) if vals else None
 
     hub_kill, leaf_kill = targeted_auc("hubs"), targeted_auc("leaves")
+
+    def lm_spread(gossiped: bool) -> float | None:
+        vals = [
+            r["final_g2_spread"]
+            for r in rows
+            if r.get("kind") == "lm" and r.get("final_g2_spread") is not None
+            and (r.get("gossip_every", 1) >= 1) == gossiped
+        ]
+        return float(np.mean(vals)) if vals else None
+
+    lm_gossip, lm_isolated = lm_spread(True), lm_spread(False)
     return {
         "hub_beats_edge": all(per_family.values()) if per_family else None,
         "hub_beats_edge_by_family": per_family,
@@ -171,6 +199,12 @@ def qualitative_checks(rows: list[dict[str, Any]]) -> dict[str, Any]:
         ),
         "hub_kill_auc_g2_spread": hub_kill,
         "leaf_kill_auc_g2_spread": leaf_kill,
+        "lm_gossip_spreads": (
+            None if lm_gossip is None or lm_isolated is None
+            else bool(lm_gossip > lm_isolated)
+        ),
+        "lm_gossip_g2_token_spread": lm_gossip,
+        "lm_isolated_g2_token_spread": lm_isolated,
     }
 
 

@@ -19,6 +19,10 @@
 - ``churn_smoke``: the fault subsystem's CI gate — hub-targeted vs
   leaf-targeted mid-run churn on a small BA graph; analysis must reproduce
   hub-kill >= leaf-kill damage on ``g2_acc_spread``.
+- ``lm_smoke``: the LLM-cohort CI gate — tiny transformers, n=4 ring vs
+  star vs gossip_every=0 isolation, 2 seeds; gossiped runs must beat
+  isolation on ``g2_token_spread`` (analysis.qualitative_checks:
+  lm_gossip_spreads). All runs ride the fused lm scan.
 """
 
 from __future__ import annotations
@@ -183,12 +187,46 @@ def _churn_smoke() -> list[ExperimentSpec]:
     )
 
 
+def _lm_smoke() -> list[ExperimentSpec]:
+    # The LLM-cohort CI gate: reduced transformer members on domain-skewed
+    # token streams (data/tokens.py), ring vs star gossip vs gossip_every=0
+    # isolation over 2 seeds. The gate (analysis.qualitative_checks:
+    # lm_gossip_spreads) asserts gossiped cohorts end with higher
+    # g2_token_spread — each node's mean true-token probability on *other*
+    # nodes' domain tokens — than isolated ones: domain knowledge moved over
+    # the edges. All runs take the fused lm scan. compress is pinned off:
+    # CHOCO top-k at these tiny horizons injects more reference error than
+    # the 60 rounds can average away, which would mask the spread signal.
+    base = {
+        "rounds": 60,
+        "eval_every": 30,
+        "lr": 1e-3,
+        "backend": "dense",
+        "model": {
+            "kind": "lm", "nodes": 4, "batch": 2, "seq": 32, "compress": None,
+        },
+        "tag": "lm_smoke",
+    }
+    specs = expand_grid(
+        base,
+        topology=["ring:n=4", "star:n=4"],
+        seed=[0, 1],
+    )
+    specs += expand_grid(
+        {**base, "gossip_every": 0},
+        topology=["ring:n=4"],
+        seed=[0, 1],
+    )
+    return specs
+
+
 PRESETS = {
     "smoke": _smoke,
     "paper": _paper,
     "large_n": _large_n,
     "large_n_smoke": _large_n_smoke,
     "churn_smoke": _churn_smoke,
+    "lm_smoke": _lm_smoke,
 }
 
 

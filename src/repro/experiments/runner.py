@@ -10,9 +10,14 @@ Two executors, dispatched on ``spec.model["kind"]``:
   and wall-clock. Runs through the fused single-``lax.scan`` trainer path
   (``run_fused``) whenever the resolved backend supports it; set
   ``model={"fused": False}`` to force the per-round Python loop.
-- ``lm``: the LLM-cohort loop (token batches, transformer members, AdamW /
-  SGD + LR schedule). ``launch/train.py`` is a thin CLI wrapper building one
-  such spec.
+- ``lm``: LLM cohorts via ``LMCohortTrainer`` — transformer members on
+  domain-skewed token streams, AdamW/SGD + LR schedule, per-round
+  ``domain_acc`` / ``g2_token_spread`` knowledge-spread metrics. Takes the
+  same fused single-scan path by default (``model={"fused": False}`` opts
+  out), defaults CHOCO ``compress=`` on for multi-megabyte members, and
+  checkpoints ``(params, opt, step)`` with ``model={"resume": True}``
+  restoring bit-identically. ``launch/train.py`` is a thin CLI wrapper
+  building one such spec.
 
 ``run_sweep`` adds skip-completed resume (a spec whose run_id already has a
 completed ``run_end`` in the store is skipped) and optional multi-process
@@ -297,17 +302,8 @@ def _run_mlp(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
 def _run_lm(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
     import dataclasses as _dc
 
-    import jax
-    import jax.numpy as jnp
-
-    from repro.checkpoint import ckpt
     from repro.configs import base as cfgbase
-    from repro.core import decavg
-    from repro.data import tokens as tok
-    from repro.launch import steps as ST
-    from repro.models import transformer as TF
-    from repro.optim import adamw, schedules, sgd
-    from repro.train.metrics import consensus_distance
+    from repro.train.trainer import LMCohortTrainer
 
     m = spec.model
     cfg = cfgbase.get(m.get("arch", "llama3.2-1b"))
@@ -315,71 +311,75 @@ def _run_lm(spec: ExperimentSpec, emit: Emit, verbose: bool) -> dict[str, Any]:
         cfg = _dc.replace(cfg.reduced(), param_dtype="float32", optimizer=cfg.optimizer)
     n = int(m.get("nodes", 4))
 
-    engine = decavg.GossipEngine(
-        spec.topology, backend=spec.backend, matrix=spec.matrix,
-        gossip_every=spec.gossip_every, faults=spec.faults, seed=spec.seed, n=n,
+    trainer = LMCohortTrainer(
+        spec.topology,
+        cfg,
+        nodes=n,
+        batch=int(m.get("batch", 4)),
+        seq=int(m.get("seq", 128)),
+        lr=spec.lr,
+        schedule=m.get("schedule", "cosine"),
+        backend=spec.backend,
+        matrix=spec.matrix,
+        gossip_every=spec.gossip_every,
+        compress=m.get("compress", "auto"),
+        faults=spec.faults,
+        seed=spec.seed,
     )
-    if engine.num_nodes != n:
-        raise ValueError(f"topology spec pins n={engine.num_nodes} but nodes is {n}")
-    sched = schedules.get(m.get("schedule", "cosine"), spec.lr, spec.rounds)
-
-    key = jax.random.PRNGKey(spec.seed)
-    per_node = TF.init_params(key, cfg)
-    params = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), per_node)
-    opt = adamw.init(params) if cfg.optimizer == "adamw" else sgd.init(params)
     if verbose:
         print(
-            f"arch={cfg.arch_id} members={TF.param_count(per_node)/1e6:.1f}M x {n} nodes "
-            f"topology={engine.graph.name} backend={engine.backend} "
-            f"optimizer={cfg.optimizer} schedule={m.get('schedule', 'cosine')}"
+            f"arch={cfg.arch_id} members={trainer.member_params/1e6:.1f}M x {n} nodes "
+            f"topology={trainer.graph.name} backend={trainer.mix_impl} "
+            f"optimizer={cfg.optimizer} schedule={m.get('schedule', 'cosine')} "
+            f"compress={trainer.compress}"
         )
 
-    loss_fn = ST.node_loss_fn(cfg)
-    opt_update = adamw.update if cfg.optimizer == "adamw" else sgd.update
-
-    @jax.jit
-    def train_step(params, opt, batch, lr):
-        b = jax.tree.map(lambda x: x[0], batch)
-        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, b)
-        params, opt = opt_update(grads, opt, params, lr=lr)
-        return params, opt, losses.mean()
-
-    batch_size, seq = int(m.get("batch", 4)), int(m.get("seq", 128))
     ckpt_every, ckpt_path = int(m.get("ckpt_every", 0)), m.get("ckpt_path", "")
-    data = tok.token_batches(
-        n, batch_size, seq, cfg.vocab_size, steps=spec.rounds, seed=spec.seed
+    if m.get("resume") and ckpt_path:
+        start = trainer.restore(ckpt_path)
+        if verbose:
+            print(f"resumed from {ckpt_path} at round {start}")
+
+    last: dict[str, Any] = {}
+
+    def on_round(rec: dict[str, Any]) -> None:
+        last.clear()
+        last.update(rec)
+        emit(rec)
+
+    # Fused MixingProgram-staged scan by default, mirroring _run_mlp:
+    # one dispatch per eval/checkpoint boundary with the chunk's token slab
+    # staged on device. model={"fused": False} opts out; backends outside
+    # _LM_FUSED_BACKENDS (e.g. sparse_sharded) fall back to the loop.
+    use_fused = bool(m.get("fused", True)) and trainer.supports_fused
+    run = trainer.run_fused if use_fused else trainer.run
+    run(
+        spec.rounds,
+        eval_every=spec.eval_every,
+        on_round=on_round,
+        ckpt_every=ckpt_every,
+        ckpt_path=ckpt_path,
+        verbose=verbose,
     )
-    t0 = time.perf_counter()
-    loss = None
-    for i, (toks, labels) in enumerate(data):
-        batch = {"tokens": jnp.asarray(toks)[None], "labels": jnp.asarray(labels)[None]}
-        params, opt, loss = train_step(params, opt, batch, float(sched(i)))
-        params = engine.mix(params, round=i)  # identity rounds are free
-        if i % spec.eval_every == 0 or i == spec.rounds - 1:
-            rec = {
-                "round": i,
-                "loss": float(loss),
-                "lr": float(sched(i)),
-                "wall_s": round(time.perf_counter() - t0, 4),
-            }
-            emit(rec)
-            if verbose:
-                print(
-                    f"step {i:4d}  loss {rec['loss']:.4f}  lr {rec['lr']:.2e}  "
-                    f"({rec['wall_s']:.0f}s)"
-                )
-        if ckpt_every and i and i % ckpt_every == 0:
-            ckpt.save(ckpt_path, {"params": params}, step=i)
-    cons = np.asarray(consensus_distance(params))
-    return {
-        "loss": float(loss) if loss is not None else None,
+    cons = trainer.consensus()
+    final: dict[str, Any] = {
+        **last,
         # (0,) for an empty pytree — no nodes, so no distance to report
         "consensus_mean": float(cons.mean()) if cons.size else 0.0,
         "consensus_max": float(cons.max()) if cons.size else 0.0,
-        "wall_s": round(time.perf_counter() - t0, 4),
-        **_graph_records(engine, spec.rounds),
-        "members_m": round(TF.param_count(per_node) / 1e6, 2),
+        **_graph_records(trainer.engine, spec.rounds),
+        "members_m": round(trainer.member_params / 1e6, 2),
+        "backend": trainer.mix_impl,
+        "fused": use_fused,
+        "compress": trainer.compress,
     }
+    if trainer.faulted:
+        trace = trainer.engine.fault_trace
+        alive_counts = [int(trace.alive(r).sum()) for r in range(spec.rounds)]
+        final["faults"] = spec.faults
+        final["alive_min"] = min(alive_counts)
+        final["alive_final"] = alive_counts[-1]
+    return final
 
 
 _EXECUTORS = {"mlp": _run_mlp, "lm": _run_lm}

@@ -110,6 +110,12 @@ class ExperimentSpec:
     # growing. A non-default value (an actual fault spec) still hashes.
     _HASH_OPTIONAL = {"faults": None}
 
+    # Same treatment for keys added to the ``model`` dict after the fact
+    # (the dict hashes as a whole, so a new default-valued key would shift
+    # every pre-existing run id). ``resume`` is always stripped: restoring a
+    # checkpoint is an execution detail of the same run, not a new identity.
+    _HASH_OPTIONAL_MODEL = {"compress": "auto", "fused": True}
+
     def canonical(self) -> dict[str, Any]:
         """Identity-bearing fields as a plain dict (tag excluded;
         later-generation fields excluded while at their default)."""
@@ -118,6 +124,12 @@ class ExperimentSpec:
         for name, default in self._HASH_OPTIONAL.items():
             if d.get(name) == default:
                 d.pop(name, None)
+        model = dict(d.get("model") or {})
+        model.pop("resume", None)
+        for name, default in self._HASH_OPTIONAL_MODEL.items():
+            if model.get(name, default) == default:
+                model.pop(name, None)
+        d["model"] = model
         return d
 
     @property

@@ -27,8 +27,40 @@ from repro.experiments.spec import ExperimentSpec
 from repro.experiments.store import ResultsStore
 
 
+def _parse_compress(value: str):
+    """--compress flag: 'auto' (default), 'none'/'off', or a top-k fraction."""
+    if value == "auto":
+        return "auto"
+    if value in ("none", "off"):
+        return None
+    return float(value)
+
+
 def build_spec(args: argparse.Namespace) -> ExperimentSpec:
-    """One LM-cohort ExperimentSpec from the CLI flags."""
+    """One LM-cohort ExperimentSpec from the CLI flags.
+
+    Non-default execution knobs (compress/fused/resume) are only added to
+    the model dict when set — combined with canonical()'s default-stripping
+    this keeps pre-existing run ids (and store resume semantics) stable.
+    """
+    model = {
+        "kind": "lm",
+        "arch": args.arch,
+        "nodes": args.nodes,
+        "batch": args.batch,
+        "seq": args.seq,
+        "schedule": args.schedule,
+        "full_scale": bool(args.full_scale),
+        "ckpt_every": args.ckpt_every,
+        "ckpt_path": args.ckpt_path,
+    }
+    compress = _parse_compress(args.compress)
+    if compress != "auto":
+        model["compress"] = compress
+    if not args.fused:
+        model["fused"] = False
+    if args.resume:
+        model["resume"] = True
     return ExperimentSpec(
         topology=args.topology,
         partitioner="iid",  # LM cohorts share the token stream (tokens.py)
@@ -37,18 +69,9 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
         eval_every=20,
         lr=args.lr,
         gossip_every=args.gossip_every,
+        faults=args.faults,
         seed=args.seed,
-        model={
-            "kind": "lm",
-            "arch": args.arch,
-            "nodes": args.nodes,
-            "batch": args.batch,
-            "seq": args.seq,
-            "schedule": args.schedule,
-            "full_scale": bool(args.full_scale),
-            "ckpt_every": args.ckpt_every,
-            "ckpt_path": args.ckpt_path,
-        },
+        model=model,
         tag="launch.train",
     )
 
@@ -70,8 +93,19 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--schedule", default="cosine", choices=["const", "cosine", "wsd"])
     ap.add_argument("--gossip-every", type=int, default=1)
+    ap.add_argument("--compress", default="auto",
+                    help="CHOCO top-k gossip fraction in (0,1], 'none'/'off', "
+                         "or 'auto' (on for members above ~1 MB of pytree)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="force the per-round Python loop instead of the "
+                         "fused lax.scan path")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec (core/faults.py grammar)")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-path", default="results/train_ckpt.npz")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore (params, opt, step) from --ckpt-path and "
+                         "continue bit-identically from the saved round")
     ap.add_argument("--full-scale", action="store_true",
                     help="use the unreduced arch config (requires TPU-scale memory)")
     ap.add_argument("--store", default="results/train_runs.jsonl",
@@ -82,9 +116,12 @@ def main() -> None:
     spec = build_spec(args)
     result = runner.run_spec(spec, ResultsStore(args.store), verbose=True)
     final = result["final"]
+    spread = final.get("g2_token_spread")
+    spread_s = f"  g2_spread {spread:.4f}" if spread is not None else ""
     print(
         f"done in {final['wall_s']:.0f}s  loss {final['loss']:.4f}  "
-        f"consensus {final['consensus_mean']:.3g}  -> {args.store} ({result['run_id']})"
+        f"consensus {final['consensus_mean']:.3g}{spread_s}  "
+        f"-> {args.store} ({result['run_id']})"
     )
 
 

@@ -38,8 +38,11 @@ of ``params - reference``, peers mix the shared *reference* models, and
 small k it cuts wire volume to k·|params| while reference tracking keeps the
 residual re-entering next round's selection.
 
-This trainer is the 100-node MNIST-scale reproduction engine; the LLM-cohort
-path with sharded nodes lives in launch/train.py.
+``DecentralizedTrainer`` is the 100-node MNIST-scale reproduction engine;
+``LMCohortTrainer`` (below) gives the LLM-cohort path — transformer members
+on domain-skewed token streams — the same two execution paths over one
+``GossipEngine``: a per-round Python loop and a fused ``MixingProgram``
+``lax.scan`` with AdamW + the LR schedule inside the scan body.
 """
 
 from __future__ import annotations
@@ -893,3 +896,504 @@ class DecentralizedTrainer:
     def confusion(self, x_test: np.ndarray, y_test: np.ndarray) -> np.ndarray:
         _, cms = self._eval_jit(self.params, jnp.asarray(x_test), jnp.asarray(y_test))
         return np.asarray(cms)
+
+
+# ---------------------------------------------------------------------------
+# LLM cohorts (model kind "lm"; experiments/runner.py dispatches here)
+# ---------------------------------------------------------------------------
+
+# Backends the fused lm scan supports: the program-stageable single-host
+# kinds. sparse_sharded's shard_map'd scan is mlp-specific today (the lm
+# runner falls back to the loop for it).
+_LM_FUSED_BACKENDS = ("dense", "sparse", "sparse_pallas")
+
+# compress="auto" threshold: members whose gossiped pytree exceeds this many
+# bytes default to CHOCO top-k gossip so wire volume stays sane (~1 MB — a
+# reduced 1B-class member is ~6 MB f32, the tiny test transformers ~100 KB).
+_COMPRESS_AUTO_BYTES = 1 << 20
+_COMPRESS_AUTO_K = 0.1
+
+
+class LMCohortTrainer:
+    """DecAvg over a cohort of transformer LMs on domain-skewed token streams.
+
+    The lm analogue of ``DecentralizedTrainer``: node-stacked transformer
+    params, per-round next-token training (AdamW or SGD under an LR
+    schedule), gossip through one ``GossipEngine``. Token batches are a pure
+    function of ``(seed, node, round)`` (data/tokens.py), so the two
+    execution paths draw bit-identical data:
+
+    - ``run``: one Python iteration per round (jitted train step + eager
+      ``engine.mix``) — the debug/fallback path, and the only path for
+      backends the MixingProgram can't stage.
+    - ``run_fused``: ``lax.scan`` chunks with the schedule's LR, the
+      optimizer update, fault freezes and the staged mixing program all
+      inside the scan body; each chunk's token slab is staged on device as
+      the scan's xs (O(chunk) rounds of tokens live at once). Chunks end at
+      eval and checkpoint rounds. Same seed => same params/loss as ``run``
+      (tests pin allclose at 1e-6).
+
+    ``compress="auto"`` (default) turns on CHOCO top-k gossip when the
+    member pytree exceeds ~1 MB (``_COMPRESS_AUTO_BYTES``); pass a float for
+    an explicit k fraction or ``None`` to force raw DecAvg. Faults never
+    compose with compression — "auto" resolves to off for faulted runs, an
+    explicit fraction raises.
+
+    With ``faults=`` set, dead nodes are frozen bit-exactly — params AND
+    optimizer moments (``where_alive_stacked``; AdamW's shared step count
+    passes through) — in both paths, matching ``DecentralizedTrainer``'s
+    PR 7 contract. Checkpoints save ``(params, opt[, cstate])`` plus the
+    step, and ``restore`` resumes bit-identically (round-keyed batches +
+    restored moments + the schedule being a pure function of the round).
+    """
+
+    def __init__(
+        self,
+        topology: Graph | TopologySchedule | str,
+        cfg,
+        *,
+        nodes: int,
+        batch: int = 4,
+        seq: int = 128,
+        lr: float = 3e-4,
+        schedule: str = "cosine",
+        backend: str = "auto",
+        matrix: str = "decavg",
+        gossip_every: int = 1,
+        compress: float | str | None = "auto",
+        faults: str | None = None,
+        seed: int = 0,
+        data_kwargs: dict | None = None,
+    ):
+        from repro.launch import steps as ST
+        from repro.models import transformer as TF
+        from repro.optim import adamw
+
+        self.cfg = cfg
+        self.num_nodes = int(nodes)
+        self.batch, self.seq = int(batch), int(seq)
+        self.lr, self.schedule_name, self.seed = lr, schedule, seed
+        self.data_kwargs = dict(data_kwargs or {})
+        self.engine = decavg.GossipEngine(
+            topology, backend=backend, matrix=matrix, gossip_every=gossip_every,
+            faults=faults, seed=seed, n=self.num_nodes,
+        )
+        if self.engine.num_nodes != self.num_nodes:
+            raise ValueError(
+                f"topology spec pins n={self.engine.num_nodes} but nodes is "
+                f"{self.num_nodes}"
+            )
+        self.mix_impl = self.engine.backend
+        self.graph = self.engine.graph
+        self.faulted = self.engine.faults is not None
+
+        key = jax.random.PRNGKey(seed)
+        per_node = TF.init_params(key, cfg)
+        self.member_params = TF.param_count(per_node)
+        self.member_bytes = int(
+            sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(per_node))
+        )
+        self.compress = self._resolve_compress(compress)
+        self.params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.num_nodes,) + x.shape).copy(),
+            per_node,
+        )
+        use_adamw = cfg.optimizer == "adamw"
+        from repro.optim import sgd as _sgd  # noqa: F401 (module-level import above)
+
+        self.opt_state = adamw.init(self.params) if use_adamw else sgd.init(self.params)
+        self.cstate = (
+            None if self.compress is None else compress_mod.init(self.params)
+        )
+        self.start_round = 0  # advanced by restore()
+        self._loss_fn = ST.node_loss_fn(cfg)
+        self._opt_update = adamw.update if use_adamw else sgd.update
+        self._sched = None  # built per run (total_steps = that run's rounds)
+        self._eval_data = None
+        self._train_jit = jax.jit(self._train, donate_argnums=(0, 1))
+        self._train_faulted_jit = jax.jit(self._train_faulted, donate_argnums=(1, 2))
+        self._compress_jit = jax.jit(self._compress_refs, donate_argnums=(1,))
+        self._choco_apply_jit = jax.jit(self._choco_apply, donate_argnums=(0,))
+        self._domain_eval_jit = jax.jit(self._domain_eval)
+        self._consensus_jit = jax.jit(consensus_distance)
+        self._fused_chunk_jit = jax.jit(
+            self._fused_chunk, donate_argnums=(1, 2, 3, 4)
+        )
+        if self.faulted:
+            self._has_hist = self.engine.fault_trace.delay_max > 0
+
+    def _resolve_compress(self, compress) -> float | None:
+        if compress == "auto":
+            if self.faulted or self.member_bytes <= _COMPRESS_AUTO_BYTES:
+                return None
+            return _COMPRESS_AUTO_K
+        if compress is None or compress is False:
+            return None
+        k = float(compress)
+        if not 0.0 < k <= 1.0:
+            raise ValueError(
+                f"compress (top-k fraction) must be in (0, 1], got {compress}"
+            )
+        if self.faulted:
+            raise ValueError(
+                "faults do not compose with compress= gossip: the CHOCO "
+                "reference update assumes every published model is current"
+            )
+        return k
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _train(self, params, opt, toks, labels, lr):
+        losses, grads = jax.vmap(jax.value_and_grad(self._loss_fn))(
+            params, {"tokens": toks, "labels": labels}
+        )
+        params, opt = self._opt_update(grads, opt, params, lr=lr)
+        return params, opt, losses.mean()
+
+    def _train_faulted(self, alive, params, opt, toks, labels, lr):
+        """Train + freeze: dead nodes keep pre-round params AND moments
+        bit-exactly (equivalent to never training them this round)."""
+        from repro.core import faults as faults_mod
+
+        p_in, o_in = params, opt
+        params, opt, loss = self._train(params, opt, toks, labels, lr)
+        params = faults_mod.where_alive(alive, params, p_in)
+        opt = faults_mod.where_alive_stacked(alive, opt, o_in)
+        return params, opt, loss
+
+    def _compress_refs(self, params, cstate):
+        _, cstate = jax.vmap(
+            functools.partial(compress_mod.compress, k_frac=self.compress)
+        )(params, cstate)
+        return cstate
+
+    @staticmethod
+    def _choco_apply(params, mixed, ref):
+        return jax.tree.map(
+            lambda p, m, r: (p.astype(jnp.float32) + (m - r)).astype(p.dtype),
+            params, mixed, ref,
+        )
+
+    def _choco_step(self, mix, params, cstate):
+        """One CHOCO gossip exchange (cf. DecentralizedTrainer._gossip)."""
+        cstate = self._compress_refs(params, cstate)
+        ref = cstate.reference
+        mixed = mix(ref)
+        return self._choco_apply(params, mixed, ref), cstate
+
+    def _domain_eval(self, params, toks, labels):
+        """Per-node mean true-token probability on the held-out foreign-domain
+        eval batch — ``domain_acc``: expected next-token accuracy under
+        sampling decode, the quantity that rises as other nodes' domain
+        knowledge reaches this member through gossip."""
+        from repro.models import transformer as TF
+
+        def node_eval(p, tk, lb):
+            logits, _ = TF.forward(p, self.cfg, tk, remat=False)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+            return jnp.exp(ll).mean()
+
+        return jax.vmap(node_eval)(params, toks, labels)
+
+    def _fused_chunk(self, program, params, opt, cstate, hist, start, toks, labels):
+        """One scan over ``toks.shape[0]`` rounds: grads + optimizer + LR
+        schedule + (fault freeze | staged mix | CHOCO gossip) per step.
+        Returns the carried state and the per-round mean losses."""
+        from repro.core import faults as faults_mod
+
+        def one_round(carry, x):
+            params, opt, cstate, hist = carry
+            r, tk, lb = x
+            lr = self._sched(r)
+            p_in, o_in = params, opt
+            losses, grads = jax.vmap(jax.value_and_grad(self._loss_fn))(
+                params, {"tokens": tk, "labels": lb}
+            )
+            params, opt = self._opt_update(grads, opt, params, lr=lr)
+            if self.faulted:
+                alive = program.f_alive[r]
+                params = faults_mod.where_alive(alive, params, p_in)
+                opt = faults_mod.where_alive_stacked(alive, opt, o_in)
+                pub = None
+                if self._has_hist:
+                    pub, hist = faults_mod.push_and_publish(
+                        params, hist, r, program.f_delay
+                    )
+                params = program.mix_at(params, r, pub)
+            elif self.compress is None:
+                params = program.mix_at(params, r)
+            else:
+                # Compression state advances only on gossip rounds (the loop
+                # path's non-gossip rounds never touch it).
+                def do(args):
+                    p, cs = args
+                    return self._choco_step(lambda q: program.apply(q, r), p, cs)
+
+                if program.cadence == "always":
+                    params, cstate = do((params, cstate))
+                elif program.cadence == "mask":
+                    params, cstate = jax.lax.cond(
+                        program.gossip_mask[r], do, lambda a: a, (params, cstate)
+                    )
+            return (params, opt, cstate, hist), losses.mean()
+
+        rs = start + jnp.arange(toks.shape[0])
+        (params, opt, cstate, hist), losses = jax.lax.scan(
+            one_round, (params, opt, cstate, hist), (rs, toks, labels)
+        )
+        return (params, opt, cstate, hist), losses
+
+    # -- metrics / checkpoint ------------------------------------------------
+
+    def consensus(self) -> np.ndarray:
+        return np.asarray(self._consensus_jit(self.params))
+
+    def domain_metrics(self) -> dict:
+        """G2-style knowledge-spread metrics on the token task: per-node
+        ``domain_acc`` on *other* nodes' domain tokens, and their cohort
+        mean ``g2_token_spread`` (the store/analysis join key)."""
+        if self.num_nodes < 2:
+            return {}
+        from repro.data import tokens as tok
+
+        if self._eval_data is None:
+            toks, labels = tok.domain_eval_batch(
+                self.num_nodes, self.batch, self.seq, self.cfg.vocab_size,
+                seed=self.seed,
+                **{k: v for k, v in self.data_kwargs.items() if k == "domain_size"},
+            )
+            self._eval_data = (jnp.asarray(toks), jnp.asarray(labels))
+        accs = np.asarray(self._domain_eval_jit(self.params, *self._eval_data))
+        return {
+            "domain_acc": [round(float(a), 6) for a in accs],
+            "g2_token_spread": float(accs.mean()),
+        }
+
+    def save(self, path: str, *, step: int) -> None:
+        """Checkpoint ``(params, opt[, cstate])`` + step — everything a
+        bit-identical resume needs (pre-PR-8 checkpoints saved params only,
+        silently restarting AdamW moments on restore)."""
+        from repro.checkpoint import ckpt
+
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.cstate is not None:
+            tree["cstate"] = self.cstate
+        ckpt.save(path, tree, step=step)
+
+    def restore(self, path: str) -> int:
+        """Restore a ``save`` checkpoint; the next ``run``/``run_fused``
+        continues from the round after the saved step, re-deriving the same
+        batches and LR the uninterrupted run would have seen."""
+        from repro.checkpoint import ckpt
+
+        if self.faulted and self._has_hist:
+            raise ValueError(
+                "resume does not compose with straggler faults: the "
+                "delayed-snapshot ring buffer is not checkpointed"
+            )
+        like = {"params": self.params, "opt": self.opt_state}
+        if self.cstate is not None:
+            like["cstate"] = self.cstate
+        tree, step = ckpt.restore(path, like)
+        if step is None:
+            raise ValueError(f"checkpoint {path!r} carries no step")
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        if self.cstate is not None:
+            self.cstate = tree["cstate"]
+        self.start_round = int(step) + 1
+        return self.start_round
+
+    @staticmethod
+    def _ckpt_rounds(rounds: int, ckpt_every: int) -> set[int]:
+        """Checkpoint cadence: every ``ckpt_every`` rounds AND the final
+        round (pre-PR-8 the final round was skipped unless divisible)."""
+        if not ckpt_every:
+            return set()
+        s = {r for r in range(1, rounds) if r % ckpt_every == 0}
+        s.add(rounds - 1)
+        return s
+
+    @property
+    def supports_fused(self) -> bool:
+        """True when ``run_fused`` can execute this trainer's backend."""
+        return self.mix_impl in _LM_FUSED_BACKENDS
+
+    def _round_record(self, r: int, loss, lr, t0: float) -> dict:
+        rec = {
+            "round": r,
+            "loss": float(loss),
+            "lr": float(lr),
+            "wall_s": round(time.perf_counter() - t0, 4),
+            **self.domain_metrics(),
+        }
+        if self.faulted:
+            rec["alive_count"] = int(self.engine.fault_trace.alive(r).sum())
+        return rec
+
+    def _finished_resume(self, rounds, on_round, verbose, t0) -> list[dict]:
+        """A resume that restored the final checkpoint has nothing left to
+        train; still emit one eval record at the restored state so the run's
+        final record (loss, spread metrics, wall clock) exists."""
+        from repro.data import tokens as tok
+
+        toks, labels = tok.round_token_batch(
+            self.num_nodes, rounds - 1, self.batch, self.seq,
+            self.cfg.vocab_size, seed=self.seed, **self.data_kwargs,
+        )
+        losses = jax.vmap(self._loss_fn)(
+            self.params,
+            {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)},
+        )
+        rec = self._round_record(
+            rounds - 1, losses.mean(), self._sched(rounds - 1), t0
+        )
+        if on_round is not None:
+            on_round(rec)
+        if verbose:
+            print(
+                f"step {rounds - 1:4d}  loss {rec['loss']:.4f}  "
+                f"lr {rec['lr']:.2e}  (resume already complete)"
+            )
+        return [rec]
+
+    # -- run paths ----------------------------------------------------------
+
+    def run(
+        self,
+        rounds: int,
+        *,
+        eval_every: int = 1,
+        on_round: Callable[[dict], None] | None = None,
+        ckpt_every: int = 0,
+        ckpt_path: str = "",
+        verbose: bool = False,
+    ) -> list[dict]:
+        """Per-round Python loop (jitted train step + eager engine.mix)."""
+        from repro.data import tokens as tok
+        from repro.optim import schedules
+
+        self._sched = schedules.get(self.schedule_name, self.lr, rounds)
+        if self.start_round >= rounds:
+            return self._finished_resume(
+                rounds, on_round, verbose, time.perf_counter()
+            )
+        evals = set(DecentralizedTrainer._eval_rounds(rounds, eval_every))
+        cpts = self._ckpt_rounds(rounds, ckpt_every)
+        trace = None
+        if self.faulted:
+            trace = self.engine.fault_trace
+            trace.ensure(rounds)
+        history: list[dict] = []
+        t0 = time.perf_counter()
+        for r in range(self.start_round, rounds):
+            toks, labels = tok.round_token_batch(
+                self.num_nodes, r, self.batch, self.seq, self.cfg.vocab_size,
+                seed=self.seed, **self.data_kwargs,
+            )
+            toks, labels = jnp.asarray(toks), jnp.asarray(labels)
+            lr = self._sched(r)
+            if self.faulted:
+                alive = jnp.asarray(trace.alive(r))
+                self.params, self.opt_state, loss = self._train_faulted_jit(
+                    alive, self.params, self.opt_state, toks, labels, lr
+                )
+                # Renormalized faulted mixing + the engine's internal
+                # straggler buffer (one mix per round, in order).
+                self.params = self.engine.mix(self.params, round=r)
+            else:
+                self.params, self.opt_state, loss = self._train_jit(
+                    self.params, self.opt_state, toks, labels, lr
+                )
+                if self.compress is None:
+                    self.params = self.engine.mix(self.params, round=r)
+                elif self.engine.is_gossip_round(r):
+                    self.cstate = self._compress_jit(self.params, self.cstate)
+                    ref = self.cstate.reference
+                    mixed = self.engine.mix(ref, round=r)
+                    self.params = self._choco_apply_jit(self.params, mixed, ref)
+            if r in evals:
+                rec = self._round_record(r, loss, lr, t0)
+                history.append(rec)
+                if on_round is not None:
+                    on_round(rec)
+                if verbose:
+                    print(
+                        f"step {r:4d}  loss {rec['loss']:.4f}  "
+                        f"lr {rec['lr']:.2e}  ({rec['wall_s']:.0f}s)"
+                    )
+            if r in cpts:
+                self.save(ckpt_path, step=r)
+        return history
+
+    def run_fused(
+        self,
+        rounds: int,
+        *,
+        eval_every: int = 1,
+        on_round: Callable[[dict], None] | None = None,
+        ckpt_every: int = 0,
+        ckpt_path: str = "",
+        verbose: bool = False,
+    ) -> list[dict]:
+        """``run`` compiled into ``lax.scan`` chunks — one dispatch per
+        eval/checkpoint boundary. Each chunk's token slab is generated on
+        the host for just that chunk's rounds and staged as the scan's xs
+        (never the full O(rounds·N·B·S) stream)."""
+        if not self.supports_fused:
+            raise ValueError(
+                f"run_fused supports backends {_LM_FUSED_BACKENDS}, not "
+                f"{self.mix_impl!r}; use run()"
+            )
+        from repro.data import tokens as tok
+        from repro.optim import schedules
+
+        self._sched = schedules.get(self.schedule_name, self.lr, rounds)
+        if self.start_round >= rounds:
+            return self._finished_resume(
+                rounds, on_round, verbose, time.perf_counter()
+            )
+        program = self.engine.program(rounds, kind=self.mix_impl)
+        hist = ()
+        if self.faulted and self._has_hist:
+            from repro.core import faults as faults_mod
+
+            hist = faults_mod.init_history(self.params, program.delay_max + 1)
+        evals = set(DecentralizedTrainer._eval_rounds(rounds, eval_every))
+        cpts = self._ckpt_rounds(rounds, ckpt_every)
+        # Chunks end at eval AND checkpoint rounds, so fused checkpoints
+        # land at exact round boundaries (bit-identical resume).
+        ends = sorted(evals | cpts)
+        history: list[dict] = []
+        t0 = time.perf_counter()
+        prev = self.start_round - 1
+        for end in ends:
+            if end < self.start_round:
+                continue
+            start, length = prev + 1, end - prev
+            prev = end
+            toks, labels = tok.round_token_slab(
+                self.num_nodes, range(start, end + 1), self.batch, self.seq,
+                self.cfg.vocab_size, seed=self.seed, **self.data_kwargs,
+            )
+            (
+                (self.params, self.opt_state, self.cstate, hist), losses
+            ) = self._fused_chunk_jit(
+                program, self.params, self.opt_state, self.cstate, hist,
+                jnp.int32(start), jnp.asarray(toks), jnp.asarray(labels),
+            )
+            if end in evals:
+                rec = self._round_record(
+                    end, np.asarray(losses)[-1], self._sched(end), t0
+                )
+                history.append(rec)
+                if on_round is not None:
+                    on_round(rec)
+                if verbose:
+                    print(
+                        f"step {end:4d}  loss {rec['loss']:.4f}  "
+                        f"lr {rec['lr']:.2e}  ({rec['wall_s']:.0f}s)"
+                    )
+            if end in cpts:
+                self.save(ckpt_path, step=end)
+        return history

@@ -1,0 +1,442 @@
+"""LLM cohorts through the fused scan (ISSUE 8).
+
+The contract under test: ``LMCohortTrainer.run_fused`` matches the
+per-round loop at 1e-6 (params + losses) across gossip cadences, static
+and ``@rewire`` schedules, faults and CHOCO compression — plus the
+satellites riding along: the PR 7 bit-exact dead-node freeze the old lm
+runner violated, full ``(params, opt, step)`` checkpoints with
+bit-identical resume, the truncated-zipf token distribution, the
+``compress="auto"`` threshold, and lm run_id hash-compat pins.
+"""
+
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.train import trainer as trainer_mod
+from repro.train.trainer import LMCohortTrainer
+
+N_NODES = 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    base = cfgbase.get("llama32_1b")
+    return dataclasses.replace(
+        base.reduced(),
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256,
+    )
+
+
+def make_trainer(cfg, topology="ring:n=4", **kw):
+    kw.setdefault("seed", 0)
+    return LMCohortTrainer(
+        topology, cfg, nodes=N_NODES, batch=2, seq=16, lr=1e-3, **kw
+    )
+
+
+def assert_trees_close(a, b, **kw):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestFusedEquivalence:
+    """run_fused == run at 1e-6 on a reduced transformer cohort."""
+
+    @pytest.mark.parametrize("gossip_every", [1, 3])
+    def test_static_ring(self, cfg, gossip_every):
+        t1 = make_trainer(cfg, gossip_every=gossip_every)
+        h1 = t1.run(7, eval_every=3)
+        t2 = make_trainer(cfg, gossip_every=gossip_every)
+        h2 = t2.run_fused(7, eval_every=3)
+        assert_trees_close(t1.params, t2.params, atol=1e-6)
+        assert [r["round"] for r in h1] == [r["round"] for r in h2]
+        for a, b in zip(h1, h2):
+            assert a["loss"] == pytest.approx(b["loss"], abs=1e-6)
+            assert a["lr"] == pytest.approx(b["lr"], abs=1e-9)
+
+    def test_rewire_schedule(self, cfg):
+        topo = "er:n=4,p=0.6@rewire=2"
+        t1 = make_trainer(cfg, topology=topo, seed=1)
+        t1.run(6, eval_every=3)
+        t2 = make_trainer(cfg, topology=topo, seed=1)
+        t2.run_fused(6, eval_every=3)
+        assert_trees_close(t1.params, t2.params, atol=1e-6)
+
+    @pytest.mark.parametrize("gossip_every,rounds", [(1, 6), (3, 7)])
+    def test_compress_equivalence(self, cfg, gossip_every, rounds):
+        # Short horizons on purpose: CHOCO's top-k mask is discontinuous, so
+        # a float-rounding difference between the scan and the loop can flip
+        # a selected coordinate and amplify chaotically once enough rounds
+        # accumulate. At these round counts both paths pick identical masks
+        # and agree to f32 rounding.
+        t1 = make_trainer(cfg, compress=0.25, gossip_every=gossip_every)
+        t1.run(rounds, eval_every=3)
+        t2 = make_trainer(cfg, compress=0.25, gossip_every=gossip_every)
+        t2.run_fused(rounds, eval_every=3)
+        assert_trees_close(t1.params, t2.params, atol=1e-6)
+
+    def test_faults_equivalence(self, cfg):
+        spec = "churn:p_leave=0.4,p_join=0.3"
+        t1 = make_trainer(cfg, faults=spec)
+        h1 = t1.run(6, eval_every=3)
+        t2 = make_trainer(cfg, faults=spec)
+        h2 = t2.run_fused(6, eval_every=3)
+        assert_trees_close(t1.params, t2.params, atol=1e-6)
+        assert h1[-1]["alive_count"] == h2[-1]["alive_count"]
+
+    def test_straggler_equivalence(self, cfg):
+        spec = "churn:p_leave=0.3,p_join=0.3;straggler:frac=0.3,delay=2"
+        t1 = make_trainer(cfg, faults=spec)
+        t1.run(6, eval_every=3)
+        t2 = make_trainer(cfg, faults=spec)
+        t2.run_fused(6, eval_every=3)
+        assert_trees_close(t1.params, t2.params, atol=1e-6)
+
+    def test_unsupported_backend_raises(self, cfg):
+        # "pallas" is a real single-host backend the MixingProgram lm scan
+        # does not stage; the runner must fall back to the loop.
+        t = make_trainer(cfg, backend="pallas")
+        assert not t.supports_fused
+        with pytest.raises(ValueError, match="run_fused supports"):
+            t.run_fused(2)
+
+
+class TestFaultFreeze:
+    """ISSUE 8 satellite: dead lm nodes stay bit-frozen — params AND
+    optimizer moments — across churn rounds, in both run paths."""
+
+    # Targeted kill of the top-degree half, no rejoin: nodes 0-1 die at
+    # round 0 and stay dead; nodes 2-3 stay alive for the whole run.
+    FAULTS = "churn:p_leave=1.0,p_join=0.0,frac=0.5@targeted=hubs"
+
+    def _dead_nodes(self, t, rounds):
+        trace = t.engine.fault_trace
+        trace.ensure(rounds)
+        alive = np.stack([np.asarray(trace.alive(r)) for r in range(rounds)])
+        dead = np.flatnonzero(~alive.any(axis=0))
+        assert dead.size, "fault spec killed nobody; fixture broken"
+        return dead
+
+    @pytest.mark.parametrize("path", ["run", "run_fused"])
+    def test_dead_nodes_bit_frozen(self, cfg, path):
+        t = make_trainer(cfg, faults=self.FAULTS)
+        dead = self._dead_nodes(t, 4)
+        before = jax.tree.map(lambda x: np.asarray(x).copy(), t.params)
+        opt_before = jax.tree.map(lambda x: np.asarray(x).copy(), t.opt_state)
+        getattr(t, path)(4, eval_every=4)
+        for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(t.params)):
+            for d in dead:
+                np.testing.assert_array_equal(np.asarray(a)[d], np.asarray(b)[d])
+        # Moments frozen too (node-stacked leaves only: AdamW's shared step
+        # count is global and advances).
+        n = t.num_nodes
+        for a, b in zip(jax.tree.leaves(opt_before), jax.tree.leaves(t.opt_state)):
+            a, b = np.asarray(a), np.asarray(b)
+            if a.ndim == 0 or a.shape[0] != n:
+                continue
+            for d in dead:
+                np.testing.assert_array_equal(a[d], b[d])
+
+    def test_alive_nodes_train(self, cfg):
+        t = make_trainer(cfg, faults=self.FAULTS)
+        trace = t.engine.fault_trace
+        trace.ensure(4)
+        alive = np.stack([np.asarray(trace.alive(r)) for r in range(4)])
+        live = np.flatnonzero(alive.all(axis=0))
+        assert live.size
+        before = jax.tree.map(lambda x: np.asarray(x).copy(), t.params)
+        t.run(4, eval_every=4)
+        changed = any(
+            not np.array_equal(np.asarray(a)[l], np.asarray(b)[l])
+            for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(t.params))
+            for l in live
+        )
+        assert changed
+
+    def test_where_alive_stacked_passes_scalars(self):
+        from repro.core import faults as F
+
+        alive = jnp.array([True, False])
+        new = {"mu": jnp.ones((2, 3)), "count": jnp.asarray(7)}
+        old = {"mu": jnp.zeros((2, 3)), "count": jnp.asarray(3)}
+        out = F.where_alive_stacked(alive, new, old)
+        np.testing.assert_array_equal(np.asarray(out["mu"][0]), 1.0)
+        np.testing.assert_array_equal(np.asarray(out["mu"][1]), 0.0)
+        assert int(out["count"]) == 7  # shared scalar passes through
+
+
+class TestCheckpointResume:
+    """ISSUE 8 satellite: (params, opt, step) checkpoints; resume continues
+    bit-identically; the final round is always checkpointed."""
+
+    def test_ckpt_rounds_include_final(self):
+        assert LMCohortTrainer._ckpt_rounds(10, 0) == set()
+        assert LMCohortTrainer._ckpt_rounds(10, 3) == {3, 6, 9}
+        # rounds % ckpt_every != 0: final round still saved (the pre-PR-8
+        # runner dropped it).
+        assert LMCohortTrainer._ckpt_rounds(10, 4) == {4, 8, 9}
+
+    def test_checkpoint_carries_opt_and_step(self, cfg, tmp_path):
+        path = str(tmp_path / "lm.ckpt")
+        t = make_trainer(cfg)
+        t.run(4, eval_every=4, ckpt_every=3, ckpt_path=path)
+        t2 = make_trainer(cfg)
+        start = t2.restore(path)
+        assert start == 4  # final round 3 saved
+        assert_trees_equal(t.params, t2.params)
+        assert_trees_equal(t.opt_state, t2.opt_state)
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_resume_past_end_still_reports_final(self, cfg, tmp_path, fused):
+        # Restoring the FINAL checkpoint leaves no rounds to train; the run
+        # must still emit one eval record at the restored state (the CLI's
+        # summary print reads loss/wall_s from it) and not touch params.
+        path = str(tmp_path / "lm.ckpt")
+        t = make_trainer(cfg)
+        t.run(4, eval_every=4, ckpt_every=2, ckpt_path=path)
+        t2 = make_trainer(cfg)
+        assert t2.restore(path) == 4
+        run = t2.run_fused if fused else t2.run
+        history = run(4, eval_every=4)
+        assert len(history) == 1
+        assert history[0]["round"] == 3
+        assert np.isfinite(history[0]["loss"])
+        assert "g2_token_spread" in history[0]
+        assert_trees_equal(t.params, t2.params)
+
+    def test_loop_resume_bit_identical(self, cfg, tmp_path):
+        path = str(tmp_path / "lm.ckpt")
+        grab = str(tmp_path / "lm_mid.ckpt")
+        ref = make_trainer(cfg)
+        ref.run(8, eval_every=4)
+
+        t1 = make_trainer(cfg)
+
+        def snatch(rec):
+            if rec["round"] == 4:  # ckpt at step 3 already on disk
+                shutil.copy(path + ".npz", grab + ".npz")
+
+        t1.run(8, eval_every=1, on_round=snatch, ckpt_every=3, ckpt_path=path)
+        t2 = make_trainer(cfg)
+        assert t2.restore(grab) == 4
+        t2.run(8, eval_every=4)
+        assert_trees_equal(ref.params, t2.params)
+        assert_trees_equal(ref.opt_state, t2.opt_state)
+
+    def test_fused_resume_bit_identical(self, cfg, tmp_path):
+        path = str(tmp_path / "lm.ckpt")
+        grab = str(tmp_path / "lm_mid.ckpt")
+        ref = make_trainer(cfg)
+        ref.run_fused(8, eval_every=4)
+
+        t1 = make_trainer(cfg)
+
+        def snatch(rec):
+            if rec["round"] == 6:  # ckpt at step 4 already on disk
+                shutil.copy(path + ".npz", grab + ".npz")
+
+        t1.run_fused(8, eval_every=2, on_round=snatch, ckpt_every=4,
+                     ckpt_path=path)
+        t2 = make_trainer(cfg)
+        assert t2.restore(grab) == 5
+        t2.run_fused(8, eval_every=4)
+        assert_trees_equal(ref.params, t2.params)
+
+    def test_straggler_resume_raises(self, cfg, tmp_path):
+        path = str(tmp_path / "lm.ckpt")
+        t = make_trainer(cfg, faults="straggler:frac=0.5,delay=2")
+        t.save(path, step=0)
+        t2 = make_trainer(cfg, faults="straggler:frac=0.5,delay=2")
+        with pytest.raises(ValueError, match="straggler"):
+            t2.restore(path)
+
+    def test_runner_resume_path(self, cfg, tmp_path):
+        """model={'resume': True} restores through the experiment runner."""
+        from repro.experiments.runner import run_spec
+        from repro.experiments.spec import ExperimentSpec
+        from repro.experiments.store import ResultsStore
+
+        path = str(tmp_path / "run.ckpt")
+        model = {
+            "kind": "lm", "nodes": 4, "batch": 2, "seq": 16,
+            "ckpt_every": 3, "ckpt_path": path,
+        }
+        base = dict(topology="ring:n=4", rounds=4, eval_every=4, lr=1e-3)
+        store = ResultsStore(str(tmp_path / "a.jsonl"))
+        r1 = run_spec(ExperimentSpec(**base, model=model), store)
+        assert r1["status"] == "completed"
+        # Resume from the final-round ckpt: nothing left to run, finishes
+        # with the same params-derived consensus.
+        store2 = ResultsStore(str(tmp_path / "b.jsonl"))
+        r2 = run_spec(
+            ExperimentSpec(**base, model={**model, "resume": True}), store2
+        )
+        assert r2["status"] == "completed"
+        assert r2["final"]["consensus_mean"] == pytest.approx(
+            r1["final"]["consensus_mean"], abs=1e-7
+        )
+
+
+class TestCompressDefault:
+    """compress='auto' thresholds on member pytree bytes."""
+
+    def test_small_member_stays_raw(self, cfg):
+        t = make_trainer(cfg)
+        assert t.member_bytes < trainer_mod._COMPRESS_AUTO_BYTES
+        assert t.compress is None
+        assert t.cstate is None
+
+    def test_large_member_compresses(self, cfg, monkeypatch):
+        monkeypatch.setattr(trainer_mod, "_COMPRESS_AUTO_BYTES", 1024)
+        t = make_trainer(cfg)
+        assert t.compress == trainer_mod._COMPRESS_AUTO_K
+        assert t.cstate is not None
+
+    def test_auto_resolves_off_under_faults(self, cfg, monkeypatch):
+        monkeypatch.setattr(trainer_mod, "_COMPRESS_AUTO_BYTES", 1024)
+        t = make_trainer(cfg, faults="churn:p_leave=0.2,p_join=0.5")
+        assert t.compress is None
+
+    def test_explicit_compress_with_faults_raises(self, cfg):
+        with pytest.raises(ValueError, match="faults do not compose"):
+            make_trainer(cfg, compress=0.1, faults="churn:p_leave=0.2,p_join=0.5")
+
+    def test_bad_fraction_raises(self, cfg):
+        with pytest.raises(ValueError, match="top-k fraction"):
+            make_trainer(cfg, compress=1.5)
+
+
+class TestTokenDistribution:
+    """ISSUE 8 satellite: truncated zipf without modulo aliasing."""
+
+    def test_range_and_head_heavy(self):
+        from repro.data import tokens as tok
+
+        toks, labels = tok.round_token_batch(2, 0, 8, 255, 128, seed=0)
+        assert toks.min() >= 0 and toks.max() < 128
+        assert labels.min() >= 0 and labels.max() < 128
+        # Head-heavy background: with domain_frac=0 the first token must be
+        # the most frequent — a `% vocab` fold flattens this.
+        stream = tok.node_token_stream(0, 50_000, 128, seed=0, domain_frac=0.0)
+        counts = np.bincount(stream, minlength=128)
+        assert counts[0] == counts.max()
+        assert counts[0] > 2 * counts[64:].max()
+
+    def test_round_keyed_determinism(self):
+        from repro.data import tokens as tok
+
+        a = tok.round_token_batch(3, 5, 4, 16, 64, seed=7)
+        b = tok.round_token_batch(3, 5, 4, 16, 64, seed=7)
+        np.testing.assert_array_equal(a[0], b[0])
+        c = tok.round_token_batch(3, 6, 4, 16, 64, seed=7)
+        assert not np.array_equal(a[0], c[0])
+
+    def test_slab_matches_per_round(self):
+        from repro.data import tokens as tok
+
+        slab_t, slab_l = tok.round_token_slab(2, range(3, 6), 2, 8, 64, seed=1)
+        for i, r in enumerate(range(3, 6)):
+            t, l = tok.round_token_batch(2, r, 2, 8, 64, seed=1)
+            np.testing.assert_array_equal(slab_t[i], t)
+            np.testing.assert_array_equal(slab_l[i], l)
+
+
+class TestDomainEval:
+    """g2_token_spread metric: deterministic, foreign-domain only."""
+
+    def test_eval_batch_deterministic_and_foreign(self):
+        from repro.data import tokens as tok
+
+        t1, l1 = tok.domain_eval_batch(4, 2, 16, 64, seed=3)
+        t2, _ = tok.domain_eval_batch(4, 2, 16, 64, seed=3)
+        np.testing.assert_array_equal(t1, t2)
+        domains = [tok.node_domain(i, 64, seed=3) for i in range(4)]
+        for i in range(4):
+            foreign = np.concatenate([d for j, d in enumerate(domains) if j != i])
+            assert np.isin(t1[i], foreign).all()
+
+    def test_single_node_raises(self):
+        from repro.data import tokens as tok
+
+        with pytest.raises(ValueError, match=">= 2 nodes"):
+            tok.domain_eval_batch(1, 2, 8, 64)
+
+    def test_metric_deterministic(self, cfg):
+        t = make_trainer(cfg)
+        m1 = t.domain_metrics()
+        m2 = t.domain_metrics()
+        assert m1["g2_token_spread"] == m2["g2_token_spread"]
+        assert m1["domain_acc"] == m2["domain_acc"]
+        assert len(m1["domain_acc"]) == N_NODES
+
+    def test_metric_streams_through_records(self, cfg):
+        t = make_trainer(cfg)
+        h = t.run(2, eval_every=1)
+        assert all("g2_token_spread" in r and "domain_acc" in r for r in h)
+
+
+class TestRunIdCompat:
+    """New model keys must not shift pre-PR-8 lm run ids."""
+
+    def _cli_spec(self, **model_extra):
+        from repro.experiments.spec import ExperimentSpec
+
+        model = {
+            "kind": "lm", "arch": "llama3.2-1b", "nodes": 4, "batch": 4,
+            "seq": 128, "schedule": "cosine", "full_scale": False,
+            "ckpt_every": 0, "ckpt_path": "results/train_ckpt.npz",
+            **model_extra,
+        }
+        return ExperimentSpec(
+            topology="ring", rounds=100, eval_every=20, lr=3e-4,
+            model=model, tag="launch.train",
+        )
+
+    def test_cli_default_pin(self):
+        # Pinned before PR 8's model-dict growth; launch/train.py defaults.
+        assert self._cli_spec().run_id == "ring-iid-s0-37889d7a"
+
+    def test_bare_lm_pin(self):
+        from repro.experiments.spec import ExperimentSpec
+
+        s = ExperimentSpec(topology="ring:n=4", model={"kind": "lm"})
+        assert s.run_id == "ring-iid-s0-af2615d7"
+
+    def test_default_model_keys_do_not_shift_hash(self):
+        base = self._cli_spec()
+        withdefaults = self._cli_spec(compress="auto", fused=True, resume=True)
+        assert withdefaults.run_id == base.run_id
+
+    def test_nondefault_model_keys_do_shift_hash(self):
+        base = self._cli_spec()
+        assert self._cli_spec(compress=0.25).run_id != base.run_id
+        assert self._cli_spec(fused=False).run_id != base.run_id
+
+    def test_build_spec_defaults_match_pin(self):
+        import argparse
+
+        from repro.launch.train import build_spec
+
+        ns = argparse.Namespace(
+            arch="llama3.2-1b", steps=100, nodes=4, topology="ring",
+            mix_backend="auto", batch=4, seq=128, lr=3e-4, schedule="cosine",
+            gossip_every=1, compress="auto", fused=True, faults=None,
+            ckpt_every=0, ckpt_path="results/train_ckpt.npz",
+            full_scale=False, resume=False, seed=0,
+        )
+        assert build_spec(ns).run_id == "ring-iid-s0-37889d7a"
