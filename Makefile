@@ -3,10 +3,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test coverage bench-mixing bench-wire bench-rounds bench-lm-rounds bench quickstart install sweep-smoke sweep-paper sweep-churn-smoke sweep-lm-smoke
+.PHONY: verify test coverage lint bench-mixing bench-wire bench-rounds bench-lm-rounds bench quickstart install sweep-smoke sweep-paper sweep-churn-smoke sweep-lm-smoke
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
+
+lint:  ## ruff baseline (when installed) + repro.lint repo rules
+	@if $(PY) -c "import ruff" >/dev/null 2>&1; then \
+	    $(PY) -m ruff check .; \
+	else \
+	    echo "ruff not installed; skipping the ruff baseline"; \
+	fi
+	$(PY) -m repro.lint src
 
 coverage:  ## tier-1 with line coverage gated on the mixing core + kernels
 	$(PY) -m pytest -q --cov=repro.core --cov=repro.kernels \

@@ -874,31 +874,82 @@ class MixingProgram:
 
 _MATRIX_KINDS = ("decavg", "uniform", "mh")
 
-# Backend -> (requirement summary, large-N cost of one round, fused, faults).
-# Source of truth for GossipEngine.capabilities() and the README matrix.
+# Backend -> {requires, cost, wire, fused, faults, notes}.
+# Source of truth for GossipEngine.capabilities() and the README matrix —
+# the matrix is generated from this table (`python -m repro.lint
+# --write-capmatrix`) and lint rule C001 fails CI when they drift.
 # ``fused`` means program() can stage every schedule period for this backend,
 # so DecentralizedTrainer.run_fused covers it (its _FUSED_BACKENDS mirrors
-# this flag, pinned by test). ``faults`` means the backend supports the
-# core/faults.py renormalized-mixing semantics (per-round alive / edge-drop
-# masks + straggler snapshots): the Pallas kernels bake W values into tiles
-# and the dense-sharded / permute paths precompute their collective
-# coefficients, so per-round renormalization is dense/sparse/sparse_sharded
-# territory.
+# this flag, pinned by test and by C001). ``faults`` means the backend
+# supports the core/faults.py renormalized-mixing semantics (per-round alive
+# / edge-drop masks + straggler snapshots): the Pallas kernels bake W values
+# into tiles and the dense-sharded / permute paths precompute their
+# collective coefficients, so per-round renormalization is
+# dense/sparse/sparse_sharded territory.
 _BACKEND_INFO = {
-    "dense": ("any backend; W materialized (N,N)", "O(N^2 * P)", True, True),
-    "pallas": ("TPU (interpret elsewhere); W materialized (N,N)", "O(N^2 * P), zero W tiles skipped", False, False),
-    "sparse": ("any backend; W stored CSR, O(E) memory", "O(E * P)", True, True),
-    "sparse_pallas": ("TPU (interpret elsewhere); W stored blocked ELL", "O(E * P)", True, False),
-    "sharded": ("mesh with node axis; N divisible by shards", "O(N^2 * P / S) per device", False, False),
-    "sparse_sharded": (
-        "mesh with node axis (default: all local devices); N divisible by "
-        "shards; W stored per-shard CSR with halo columns; halo_schedule "
-        "allgather|ring|auto",
-        "O(E * P / S) work per device; wire O(N * P) allgather / O(H * P) ring",
-        True,
-        True,
-    ),
-    "permute": ("mesh with node axis; N == |axis|; recolors per schedule period", "O(degree * P) wire per device", False, False),
+    "dense": {
+        "requires": "any backend; W materialized (N,N)",
+        "cost": "O(N^2 * P)",
+        "wire": "—",
+        "fused": True,
+        "faults": True,
+        "notes": "XLA einsum per leaf; reference path",
+    },
+    "pallas": {
+        "requires": "TPU (interpret elsewhere); W materialized (N,N)",
+        "cost": "O(N^2 * P), zero W tiles skipped",
+        "wire": "—",
+        "fused": False,
+        "faults": False,
+        "notes": "MXU-tiled blocked matmul",
+    },
+    "sparse": {
+        "requires": "any backend; W stored CSR, O(E) memory",
+        "cost": "O(E * P)",
+        "wire": "—",
+        "fused": True,
+        "faults": True,
+        "notes": "CSR gather + segment-sum; default at N >= 512",
+    },
+    "sparse_pallas": {
+        "requires": "TPU (interpret elsewhere); W stored blocked ELL",
+        "cost": "O(E * P)",
+        "wire": "—",
+        "fused": True,
+        "faults": False,
+        "notes": "8-row-blocked ELL kernel (sublane-packed block DMAs); "
+                 "scalar row-gather fallback under interpret",
+    },
+    "sharded": {
+        "requires": "mesh with node axis; N divisible by shards",
+        "cost": "O(N^2 * P / S) per device",
+        "wire": "always O(N * P) allgather",
+        "fused": False,
+        "faults": False,
+        "notes": "shard_map allgather / reduce-scatter",
+    },
+    "sparse_sharded": {
+        "requires": "mesh with node axis (default: all local devices); N "
+                    "divisible by shards; W stored per-shard CSR with halo "
+                    "columns; halo_schedule allgather|ring|auto",
+        "cost": "O(E * P / S) work per device",
+        "wire": "allgather O(N * P) / ring O(H * P); auto picks ring when "
+                "it undercuts",
+        "fused": True,
+        "faults": True,
+        "notes": "per-shard CSR row ranges + halo buffers; default at "
+                 "N >= 512 with a mesh",
+    },
+    "permute": {
+        "requires": "mesh with node axis; N == |axis|; recolors per "
+                    "schedule period",
+        "cost": "O(degree * P) compute per device",
+        "wire": "O(degree * P) per device",
+        "fused": False,
+        "faults": False,
+        "notes": "edge-colored ppermute schedule; recolors per period for "
+                 "time-varying schedules",
+    },
 }
 
 
@@ -1035,11 +1086,9 @@ class GossipEngine:
 
     @classmethod
     def capabilities(cls) -> dict[str, dict[str, str | bool]]:
-        """Backend -> {requires, cost, fused, faults} (the README matrix)."""
-        return {
-            b: {"requires": req, "cost": cost, "fused": fused, "faults": flt}
-            for b, (req, cost, fused, flt) in _BACKEND_INFO.items()
-        }
+        """Backend -> {requires, cost, wire, fused, faults, notes} — the
+        README matrix rows (repro.lint C001 keeps the two in lockstep)."""
+        return {b: dict(info) for b, info in _BACKEND_INFO.items()}
 
     def _resolve_backend(self, backend: str) -> str:
         if backend != "auto":
@@ -1082,8 +1131,10 @@ class GossipEngine:
                     f"backend {backend!r}: num_nodes {self.num_nodes} not divisible "
                     f"by node shards {shards}"
                 )
-        if self.faults is not None and not _BACKEND_INFO[backend][3]:
-            capable = tuple(b for b, info in _BACKEND_INFO.items() if info[3])
+        if self.faults is not None and not _BACKEND_INFO[backend]["faults"]:
+            capable = tuple(
+                b for b, info in _BACKEND_INFO.items() if info["faults"]
+            )
             raise ValueError(
                 f"backend {backend!r} does not support faults; "
                 f"fault-capable backends: {capable}"

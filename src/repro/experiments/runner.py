@@ -450,7 +450,7 @@ def _salvage_shards(
     salvaged = 0
     for shard in sorted(glob.glob(os.path.join(shard_dir, "*.jsonl"))):
         try:
-            if min_age_s and time.time() - os.path.getmtime(shard) < min_age_s:
+            if min_age_s and time.time() - os.path.getmtime(shard) < min_age_s:  # lint: allow[D002] — shard age vs file mtime needs the wall clock
                 continue  # likely still being written by a live sweep
             _merge_shard(store, shard)
             salvaged += 1

@@ -108,6 +108,9 @@ class ExperimentSpec:
     # hash while they hold their default, so every pre-existing JSONL store's
     # run ids — and their skip-completed semantics — survive the schema
     # growing. A non-default value (an actual fault spec) still hashes.
+    # Lint rule H001 (repro.lint.contracts) enforces the discipline: every
+    # post-baseline field with a default MUST be registered here with that
+    # default, and the golden ring:n=8 run id must not move.
     _HASH_OPTIONAL = {"faults": None}
 
     # Same treatment for keys added to the ``model`` dict after the fact

@@ -50,14 +50,14 @@ class ResultsStore:
 
     def run_start(self, run_id: str, spec: dict[str, Any]) -> None:
         self.append({"kind": "run_start", "run_id": run_id, "spec": spec,
-                     "time": time.time()})
+                     "time": time.time()})  # lint: allow[D002] — provenance timestamp in the store record, not part of any result
 
     def round(self, run_id: str, record: dict[str, Any]) -> None:
         self.append({"kind": "round", "run_id": run_id, **record})
 
     def run_end(self, run_id: str, status: str, **extra: Any) -> None:
         self.append({"kind": "run_end", "run_id": run_id, "status": status,
-                     "time": time.time(), **extra})
+                     "time": time.time(), **extra})  # lint: allow[D002] — provenance timestamp in the store record, not part of any result
 
     # -- reading ------------------------------------------------------------
 

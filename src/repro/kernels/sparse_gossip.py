@@ -120,7 +120,7 @@ def sparse_gossip_blocked_pallas(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((BLOCK_ROWS, BLOCK_ROWS), lambda b, j, k, idx_ref: (b, k)),
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_ROWS), lambda b, j, k, idx_ref: (b, k)),  # lint: allow[P001] — 8x8 weight tile is the ELL block itself; VPU-only, never fed to the MXU
             pl.BlockSpec((BLOCK_ROWS, bd), lambda b, j, k, idx_ref: (idx_ref[b, k], j)),
         ],
         out_specs=pl.BlockSpec((BLOCK_ROWS, bd), lambda b, j, k, idx_ref: (b, j)),
@@ -187,10 +187,10 @@ def sparse_gossip_pallas(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, kmax), lambda i, j, k, idx_ref: (i, 0)),
-            pl.BlockSpec((1, bd), lambda i, j, k, idx_ref: (idx_ref[i, k], j)),
+            pl.BlockSpec((1, kmax), lambda i, j, k, idx_ref: (i, 0)),  # lint: allow[P001] — scalar row-gather fallback: interpret-only, no TPU tiling
+            pl.BlockSpec((1, bd), lambda i, j, k, idx_ref: (idx_ref[i, k], j)),  # lint: allow[P001] — scalar row-gather fallback: interpret-only, no TPU tiling
         ],
-        out_specs=pl.BlockSpec((1, bd), lambda i, j, k, idx_ref: (i, j)),
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, k, idx_ref: (i, j)),  # lint: allow[P001] — scalar row-gather fallback: interpret-only, no TPU tiling
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
     )
     return pl.pallas_call(

@@ -189,7 +189,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, layout: str = "tp", 
     chips = 512 if multi_pod else 256
     num_nodes = cfg.num_nodes_multi_pod if multi_pod else cfg.num_nodes_single_pod
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     mb = 1
     window = None
     cache_len = 0
@@ -217,10 +217,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, layout: str = "tp", 
         fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
     )
     lowered = jitted.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     cost_raw = compiled.cost_analysis()
     cost = cost_raw[0] if isinstance(cost_raw, (list, tuple)) else cost_raw

@@ -52,13 +52,13 @@ def main() -> None:
         f"arch={cfg.arch_id} batch={args.batch} cache_len={cache_len} "
         f"({'sliding-window' if args.long_context else 'full'})"
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     toks = SD.generate(
         params, cfg, prompt, cache,
         steps=args.gen, key=jax.random.PRNGKey(args.seed + 2),
         temperature=args.temperature, **kw,
     )
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"generated {toks.shape} in {dt:.1f}s = {args.batch * args.gen / dt:.1f} tok/s")
     print("first sequence:", toks[0, :16].tolist(), "...")
 

@@ -1,0 +1,104 @@
+"""repro.lint — repo-specific static analysis for the contracts tests can't see.
+
+``python -m repro.lint src`` parses every ``.py`` file under the given paths
+and runs the AST rules (``repro.lint.astrules``), then the runtime
+cross-checks (``repro.lint.contracts``: hash-compat introspection of
+``ExperimentSpec`` and the README capability-matrix diff). Exit status 1 on
+any finding; each finding prints ``path:line: RULE message`` plus a one-line
+fix hint.
+
+Suppress an intentional site with ``# lint: allow[RULE] — reason`` on the
+flagged line or the line above; the reason is mandatory (see
+``repro.lint.pragmas``).
+
+The rule set (each locked by fixture tests under ``tests/fixtures/lint/``):
+
+=====  ====================================================================
+J001   jax.jit constructed inside a loop body (re-traces every iteration)
+J002   donate_argnums arg reachable in the return through a no-op view
+D001   unseeded RNG: bare default_rng(), np.random globals, stdlib random
+D002   wall clock (time.time/datetime.now) in a run path
+P001   Pallas BlockSpec block dims off the (8, 128) sublane/lane grid
+H001   ExperimentSpec field with a default missing from _HASH_OPTIONAL
+C001   README backend matrix drifted from GossipEngine.capabilities()
+L001   allow[...] pragma without a reason
+E001   file does not parse
+=====  ====================================================================
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.lint.findings import Finding
+
+__all__ = ["Finding", "RULES", "lint_source", "lint_paths", "run"]
+
+RULES = {
+    "J001": "jit-in-loop: jax.jit constructed inside a loop body",
+    "J002": "donation-alias: donated arg reaches an output via a no-op view",
+    "D001": "unseeded-rng: RNG draw not derived from the spec seed",
+    "D002": "wallclock-in-run-path: time.time()/datetime.now() in src",
+    "P001": "pallas-tile-shape: BlockSpec dims off the (8, 128) grid",
+    "H001": "hash-compat: spec field default missing from _HASH_OPTIONAL",
+    "C001": "capability-drift: README matrix vs GossipEngine.capabilities()",
+    "L001": "bare-pragma: allow[...] without a trailing reason",
+    "E001": "parse-error: file does not parse",
+}
+
+
+def lint_source(src: str, path: str) -> list[Finding]:
+    """AST rules + pragma handling over one file's source text."""
+    import ast
+
+    from repro.lint import pragmas
+    from repro.lint.astrules import AST_RULES
+
+    lines = src.splitlines()
+    allow, findings = pragmas.collect_pragmas(lines, path)
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return findings + [Finding(
+            rule="E001", path=path, line=e.lineno or 1,
+            message=f"file does not parse: {e.msg}", hint="fix the syntax",
+        )]
+    raw: list[Finding] = []
+    for rule in AST_RULES:
+        raw.extend(rule(tree, path, lines))
+    return findings + pragmas.suppress(raw, allow)
+
+
+def _py_files(paths: list[str]) -> list[str]:
+    files: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+            files.extend(os.path.join(dirpath, f)
+                         for f in sorted(filenames) if f.endswith(".py"))
+    return files
+
+
+def lint_paths(paths: list[str]) -> tuple[int, list[Finding]]:
+    """AST-lint every ``.py`` under ``paths`` -> (file count, findings)."""
+    findings: list[Finding] = []
+    files = _py_files(paths)
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            findings.extend(lint_source(fh.read(), f))
+    return len(files), findings
+
+
+def run(paths: list[str], *, root: str = ".", runtime: bool = True) -> tuple[int, list[Finding]]:
+    """The full pass the CLI and the tier-1 test both run."""
+    nfiles, findings = lint_paths(paths)
+    if runtime:
+        from repro.lint import contracts
+
+        findings.extend(contracts.check_hash_compat())
+        findings.extend(contracts.check_capability_matrix(
+            readme_path=os.path.join(root, "README.md")))
+    return nfiles, sorted(findings)

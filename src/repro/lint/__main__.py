@@ -1,0 +1,54 @@
+"""CLI: ``python -m repro.lint [paths...]`` (default: src)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import repro.lint as lint
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="repo-specific static analysis (see repro.lint.RULES)",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the runtime checks (README.md)")
+    ap.add_argument("--no-runtime", action="store_true",
+                    help="AST rules only; skip H001/C001 (no jax import)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--write-capmatrix", action="store_true",
+                    help="regenerate the README capability matrix and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(lint.RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    if args.write_capmatrix:
+        import os
+
+        from repro.lint import contracts
+
+        readme = os.path.join(args.root, "README.md")
+        changed = contracts.write_capmatrix(readme)
+        print(f"{readme}: {'regenerated' if changed else 'already current'}")
+        return 0
+
+    paths = args.paths or ["src"]
+    nfiles, findings = lint.run(paths, root=args.root,
+                                runtime=not args.no_runtime)
+    for f in findings:
+        print(f.format())
+    nrules = len(lint.RULES) - (2 if args.no_runtime else 0)
+    print(f"repro.lint: {nfiles} files, {len(findings)} findings "
+          f"({nrules} rules)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

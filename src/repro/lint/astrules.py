@@ -1,0 +1,482 @@
+"""AST rules: pure-syntax checks over one parsed module.
+
+Each rule is a function ``check(tree, path, lines) -> list[Finding]`` and is
+registered in ``AST_RULES``. Rules here never import jax/numpy — they must be
+cheap enough to run over the whole tree on every CI push. The runtime
+cross-checks (H001/C001) live in ``repro.lint.contracts``.
+
+Rule ids and the bug class each one pins:
+
+- **J001 jit-in-loop** — ``jax.jit`` constructed inside a ``for``/``while``
+  body. Every loop iteration builds a fresh jit wrapper with an empty compile
+  cache, so the function re-traces per iteration (the PR 5 loop-path
+  re-jit-per-period bug). Hoist the jit, or cache wrappers in a bounded dict.
+- **J002 donation-alias** — an argument listed in ``donate_argnums`` is
+  reachable in the function's return value without ever being rebound,
+  including through no-op views (``astype`` to the same dtype, ``reshape``,
+  ``.T``, ``jnp.asarray``). Donation hands the input buffer to XLA for reuse;
+  returning a view of it aliases an output to freed storage (the PR 5
+  compress-init bug).
+- **D001 unseeded-rng** — ``np.random.default_rng()`` with no seed, global
+  ``np.random.*`` state, or stdlib ``random``. Content-hash run ids promise
+  that a spec determines its results; any unseeded draw in ``src/`` breaks
+  resume/skip-completed semantics silently.
+- **D002 wallclock-in-run-path** — ``time.time()`` / ``datetime.now()``
+  outside the allowlisted timing sites. Wall clock in a compute path is
+  either nondeterminism (if it feeds results) or a benchmark that belongs
+  behind ``time.perf_counter()``.
+- **P001 pallas-tile-shape** — a ``pl.BlockSpec`` block shape whose trailing
+  (lane) dim is not a multiple of 128 or whose second-to-last (sublane) dim
+  is not a multiple of 8, where both dims are statically known. Misaligned
+  tiles force relayouts on TPU; intentionally-unaligned interpret-only
+  kernels suppress with a pragma.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.lint.findings import Finding
+
+__all__ = ["AST_RULES"]
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute chain as a string, or None if not a plain chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _jax_aliases(tree: ast.Module) -> tuple[set[str], set[str]]:
+    """(names that mean jax.jit, names that mean functools.partial)."""
+    jit = {"jax.jit"}
+    partial = {"functools.partial"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax" and a.asname:
+                    jit.add(f"{a.asname}.jit")
+                if a.name == "functools" and a.asname:
+                    partial.add(f"{a.asname}.partial")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "jit":
+                        jit.add(a.asname or "jit")
+            if node.module == "functools":
+                for a in node.names:
+                    if a.name == "partial":
+                        partial.add(a.asname or "partial")
+    return jit, partial
+
+
+# -- J001 -------------------------------------------------------------------
+
+def check_jit_in_loop(tree: ast.Module, path: str, lines: list[str]) -> list[Finding]:
+    jit_names, _ = _jax_aliases(tree)
+    out: list[Finding] = []
+
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.loop_depth = 0
+
+        def _loop(self, node):
+            self.loop_depth += 1
+            self.generic_visit(node)
+            self.loop_depth -= 1
+
+        visit_For = visit_While = visit_AsyncFor = _loop
+
+        def _scope(self, node):
+            # A def/lambda inside a loop body runs later, with its own cache
+            # discipline — reset the counter rather than flagging its body.
+            saved, self.loop_depth = self.loop_depth, 0
+            self.generic_visit(node)
+            self.loop_depth = saved
+
+        visit_FunctionDef = visit_AsyncFunctionDef = visit_Lambda = _scope
+
+        def visit_Call(self, node: ast.Call):
+            if self.loop_depth and _dotted(node.func) in jit_names:
+                out.append(Finding(
+                    rule="J001", path=path, line=node.lineno,
+                    message="jax.jit constructed inside a loop body: each "
+                            "iteration gets a fresh wrapper and re-traces",
+                    hint="hoist the jit out of the loop, or memoize wrappers "
+                         "in a bounded cache keyed on the loop variable",
+                ))
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return out
+
+
+# -- J002 -------------------------------------------------------------------
+
+# obj.method(...) calls that can return a view of obj (no copy guaranteed).
+_VIEW_CALL_METHODS = {
+    "astype", "reshape", "ravel", "view", "transpose", "swapaxes", "squeeze",
+}
+# obj.attr views.
+_VIEW_ATTRS = {"T", "mT", "real", "imag", "at"}
+# free functions f(x, ...) that can return x or a view of it.
+_VIEW_FUNCS = {
+    "jnp.asarray", "np.asarray", "numpy.asarray", "jax.numpy.asarray",
+    "jnp.reshape", "jnp.ravel", "jnp.transpose", "jnp.squeeze",
+}
+
+
+def _alias_reach(node: ast.AST) -> set[str]:
+    """Names whose buffer the expression's value may alias (no-copy paths)."""
+    if isinstance(node, ast.Name):
+        return {node.id}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: set[str] = set()
+        for e in node.elts:
+            out |= _alias_reach(e)
+        return out
+    if isinstance(node, ast.Dict):
+        out = set()
+        for e in list(node.keys) + list(node.values):
+            if e is not None:
+                out |= _alias_reach(e)
+        return out
+    if isinstance(node, ast.Starred):
+        return _alias_reach(node.value)
+    if isinstance(node, ast.IfExp):
+        return _alias_reach(node.body) | _alias_reach(node.orelse)
+    if isinstance(node, ast.Attribute) and node.attr in _VIEW_ATTRS:
+        return _alias_reach(node.value)
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in _VIEW_CALL_METHODS:
+            return _alias_reach(f.value)
+        if _dotted(f) in _VIEW_FUNCS and node.args:
+            return _alias_reach(node.args[0])
+    return set()
+
+
+def _own_body_walk(fn: ast.FunctionDef):
+    """Walk a function body without descending into nested defs/lambdas."""
+    stack: list[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _assigned_names(fn: ast.FunctionDef) -> set[str]:
+    names: set[str] = set()
+
+    def targets(t):
+        if isinstance(t, ast.Name):
+            names.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                targets(e)
+        elif isinstance(t, ast.Starred):
+            targets(t.value)
+
+    for node in _own_body_walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                targets(t)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign, ast.For,
+                               ast.AsyncFor)):
+            targets(node.target)
+        elif isinstance(node, ast.NamedExpr):
+            targets(node.target)
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if item.optional_vars is not None:
+                    targets(item.optional_vars)
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                targets(t)
+    return names
+
+
+def _positional_params(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in list(a.posonlyargs) + list(a.args)]
+
+
+def _donated_literal(kw_value: ast.AST) -> list[int] | None:
+    if isinstance(kw_value, ast.Constant) and isinstance(kw_value.value, int):
+        return [kw_value.value]
+    if isinstance(kw_value, (ast.Tuple, ast.List)):
+        out = []
+        for e in kw_value.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _is_staticmethod(fn: ast.FunctionDef) -> bool:
+    return any(isinstance(d, ast.Name) and d.id == "staticmethod"
+               for d in fn.decorator_list)
+
+
+def check_donation_alias(tree: ast.Module, path: str, lines: list[str]) -> list[Finding]:
+    jit_names, partial_names = _jax_aliases(tree)
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    def enclosing(node, kinds):
+        n = parents.get(node)
+        while n is not None and not isinstance(n, kinds):
+            n = parents.get(n)
+        return n
+
+    def resolve_name(call: ast.Call, name: str) -> ast.FunctionDef | None:
+        """Find ``def name`` in a scope lexically enclosing ``call``."""
+        scope = call
+        while scope is not None:
+            scope = enclosing(scope, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef, ast.Module))
+            if scope is None:
+                return None
+            for stmt in getattr(scope, "body", []):
+                if isinstance(stmt, ast.FunctionDef) and stmt.name == name:
+                    return stmt
+            if isinstance(scope, ast.Module):
+                return None
+
+    # (target def, donated indices, offset into def params, report line)
+    sites: list[tuple[ast.FunctionDef, list[int], int, int]] = []
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted(node.func) in jit_names:
+            donated = next((_donated_literal(kw.value) for kw in node.keywords
+                            if kw.arg == "donate_argnums"), None)
+            if not donated or not node.args:
+                continue
+            target = node.args[0]
+            if isinstance(target, ast.Name):
+                fn = resolve_name(node, target.id)
+                if fn is not None:
+                    sites.append((fn, donated, 0, node.lineno))
+            elif (isinstance(target, ast.Attribute)
+                  and isinstance(target.value, ast.Name)
+                  and target.value.id in ("self", "cls")):
+                cls = enclosing(node, ast.ClassDef)
+                if cls is not None:
+                    for stmt in cls.body:
+                        if (isinstance(stmt, ast.FunctionDef)
+                                and stmt.name == target.attr):
+                            # a bound method hides self, so jit argnum i is
+                            # def param i+1 — unless it's a staticmethod
+                            off = 0 if _is_staticmethod(stmt) else 1
+                            sites.append((stmt, donated, off, node.lineno))
+                            break
+        elif isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if (isinstance(dec, ast.Call)
+                        and _dotted(dec.func) in partial_names
+                        and dec.args and _dotted(dec.args[0]) in jit_names):
+                    donated = next((_donated_literal(kw.value)
+                                    for kw in dec.keywords
+                                    if kw.arg == "donate_argnums"), None)
+                    if donated:
+                        sites.append((node, donated, 0, node.lineno))
+
+    out: list[Finding] = []
+    seen: set[tuple[int, str]] = set()
+    for fn, donated, off, _site_line in sites:
+        params = _positional_params(fn)
+        assigned = _assigned_names(fn)
+        watch = {}
+        for i in donated:
+            j = i + off
+            if 0 <= j < len(params) and params[j] not in assigned:
+                watch[params[j]] = i
+        if not watch:
+            continue
+        for node in _own_body_walk(fn):
+            if isinstance(node, ast.Return) and node.value is not None:
+                for name in _alias_reach(node.value) & set(watch):
+                    key = (node.lineno, name)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    out.append(Finding(
+                        rule="J002", path=path, line=node.lineno,
+                        message=f"donated arg {name!r} (donate_argnums="
+                                f"{watch[name]}) reaches the return value "
+                                "without being rebound — a no-op view aliases "
+                                "the donated buffer into an output",
+                        hint="copy before returning (jnp.array(x, copy=True)) "
+                             "or rebind the name to the new value",
+                    ))
+    return out
+
+
+# -- D001 -------------------------------------------------------------------
+
+_GLOBAL_STATE_FNS = {
+    "seed", "rand", "randn", "randint", "random", "random_sample", "sample",
+    "ranf", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "binomial", "poisson", "beta", "gamma", "exponential",
+    "get_state", "set_state", "bytes",
+}
+
+
+def check_unseeded_rng(tree: ast.Module, path: str, lines: list[str]) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "random":
+                    out.append(Finding(
+                        rule="D001", path=path, line=node.lineno,
+                        message="stdlib random uses hidden process-global "
+                                "state; draws are unseeded per spec",
+                        hint="use np.random.default_rng(seed) streams derived "
+                             "from the spec seed",
+                    ))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "random":
+                out.append(Finding(
+                    rule="D001", path=path, line=node.lineno,
+                    message="stdlib random uses hidden process-global state",
+                    hint="use np.random.default_rng(seed) streams derived "
+                         "from the spec seed",
+                ))
+        elif isinstance(node, ast.Call):
+            chain = _dotted(node.func)
+            if chain is None:
+                continue
+            leaf = chain.rsplit(".", 1)[-1]
+            if leaf == "default_rng" and not node.args and not node.keywords:
+                out.append(Finding(
+                    rule="D001", path=path, line=node.lineno,
+                    message="default_rng() with no seed draws from OS "
+                            "entropy — results stop being a function of the "
+                            "spec",
+                    hint="pass a seed (or a (seed, stream) tuple) derived "
+                         "from the spec",
+                ))
+            elif (chain.startswith(("np.random.", "numpy.random."))
+                  and leaf in _GLOBAL_STATE_FNS):
+                out.append(Finding(
+                    rule="D001", path=path, line=node.lineno,
+                    message=f"np.random.{leaf} mutates/reads numpy's global "
+                            "RNG state — any import-order change reshuffles "
+                            "results",
+                    hint="use an explicit np.random.default_rng(seed) "
+                         "Generator instead",
+                ))
+    return out
+
+
+# -- D002 -------------------------------------------------------------------
+
+_WALLCLOCK = {
+    "time.time", "time.time_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today", "date.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+# Path fragments where wall clock is the product, not a hazard.
+_D002_ALLOW_PATHS = ("benchmarks/", "tests/", "examples/")
+
+
+def check_wallclock(tree: ast.Module, path: str, lines: list[str]) -> list[Finding]:
+    norm = path.replace("\\", "/")
+    if any(frag in norm for frag in _D002_ALLOW_PATHS):
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted(node.func) in _WALLCLOCK:
+            out.append(Finding(
+                rule="D002", path=path, line=node.lineno,
+                message=f"wall clock ({_dotted(node.func)}) in a run path: "
+                        "nondeterministic if it feeds results, wrong clock "
+                        "if it measures elapsed time",
+                hint="use time.perf_counter() for durations; for intentional "
+                     "timestamps add `# lint: allow[D002] — reason`",
+            ))
+    return out
+
+
+# -- P001 -------------------------------------------------------------------
+
+_SUBLANE, _LANE = 8, 128
+
+
+def _module_int_consts(tree: ast.Module) -> dict[str, int]:
+    consts: dict[str, int] = {}
+    for stmt in tree.body:
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and isinstance(stmt.value, ast.Constant)
+                and isinstance(stmt.value.value, int)):
+            consts[stmt.targets[0].id] = stmt.value.value
+    return consts
+
+
+def check_pallas_tile_shape(tree: ast.Module, path: str, lines: list[str]) -> list[Finding]:
+    consts = _module_int_consts(tree)
+
+    def dim(e: ast.AST) -> int | None:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            return e.value
+        if isinstance(e, ast.Name):
+            return consts.get(e.id)
+        return None
+
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _dotted(node.func)
+        if chain is None or chain.rsplit(".", 1)[-1] != "BlockSpec":
+            continue
+        if not node.args or not isinstance(node.args[0], ast.Tuple):
+            continue
+        dims = [dim(e) for e in node.args[0].elts]
+        if len(dims) < 2:
+            continue
+        shape = tuple("?" if d is None else d for d in dims)
+        last, sub = dims[-1], dims[-2]
+        if last is not None and last % _LANE:
+            out.append(Finding(
+                rule="P001", path=path, line=node.lineno,
+                message=f"BlockSpec block shape {shape}: lane (last) dim "
+                        f"{last} is not a multiple of {_LANE}",
+                hint=f"pad the trailing block dim to {_LANE}, or suppress for "
+                     "an interpret-only kernel",
+            ))
+        if sub is not None and sub % _SUBLANE:
+            out.append(Finding(
+                rule="P001", path=path, line=node.lineno,
+                message=f"BlockSpec block shape {shape}: sublane "
+                        f"(second-to-last) dim {sub} is not a multiple of "
+                        f"{_SUBLANE}",
+                hint=f"pad the sublane block dim to {_SUBLANE}, or suppress "
+                     "for an interpret-only kernel",
+            ))
+    return out
+
+
+AST_RULES = (
+    check_jit_in_loop,
+    check_donation_alias,
+    check_unseeded_rng,
+    check_wallclock,
+    check_pallas_tile_shape,
+)

@@ -1,0 +1,337 @@
+"""Runtime cross-checks: contracts the AST can't see.
+
+These rules import the live modules and introspect them, so they run once per
+lint invocation (not per file):
+
+- **H001 hash-compat** — ``ExperimentSpec.run_id`` is a content hash, and
+  every pre-existing JSONL store keys resume/skip-completed on it. A new
+  default-valued spec field (or ``model`` dict key) silently rewrites every
+  stored run id unless it is registered in ``_HASH_OPTIONAL`` /
+  ``_HASH_OPTIONAL_MODEL`` so ``canonical()`` drops it while it holds its
+  default. PRs 7 and 8 each re-discovered this by hand; H001 makes the
+  registration mechanical: any field outside the shipped baseline must have
+  a ``_HASH_OPTIONAL`` entry whose recorded default matches the dataclass
+  default, and the default ``ring:n=8`` spec must keep hashing to the pinned
+  golden id.
+- **C001 capability-drift** — ``decavg._BACKEND_INFO`` declares itself the
+  source of truth for ``GossipEngine.capabilities()`` and the README backend
+  matrix. C001 regenerates the matrix via ``capability_matrix_lines()`` and
+  diffs it against the marker-fenced block in README.md, and cross-checks
+  ``trainer._FUSED_BACKENDS`` / ``_LM_FUSED_BACKENDS`` against the
+  ``fused`` capability flags.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import inspect
+import os
+import textwrap
+
+from repro.lint.findings import Finding
+
+__all__ = [
+    "GOLDEN_RUN_ID", "check_hash_compat", "check_capability_matrix",
+    "capability_matrix_lines", "write_capmatrix", "CAP_BEGIN", "CAP_END",
+]
+
+# -- H001 -------------------------------------------------------------------
+
+# ExperimentSpec fields at the moment the store format shipped (PR 2). Their
+# values always hash; only fields added *after* this set may (must) be
+# registered in _HASH_OPTIONAL so old stores keep their run ids.
+_SPEC_BASELINE = frozenset({
+    "topology", "partitioner", "partitioner_params", "backend", "matrix",
+    "rounds", "eval_every", "lr", "momentum", "local_epochs", "batch_size",
+    "gossip_every", "same_init", "seed", "data", "model",
+})
+# Excluded from the hash by name, not by default-dropping.
+_SPEC_NONHASH = frozenset({"tag"})
+
+# ExperimentSpec(topology="ring:n=8").run_id as of PR 9. If this moves, the
+# canonicalization changed and every pre-existing store's resume semantics
+# broke with it.
+GOLDEN_RUN_ID = "ring-iid-s0-c20bcfda"
+
+_PROBE_TOPOLOGY = "ring:n=8"
+
+
+def _spec_anchor(spec_cls, field_name: str | None = None) -> tuple[str, int]:
+    """(path, line) of the class or of one annotated field, best effort."""
+    try:
+        path = inspect.getsourcefile(spec_cls) or "<spec>"
+        path = os.path.relpath(path)
+    except Exception:
+        path = "<spec>"
+    line = 1
+    try:
+        src_lines, start = inspect.getsourcelines(spec_cls)
+        line = start
+        if field_name is not None:
+            cls_node = ast.parse(textwrap.dedent("".join(src_lines))).body[0]
+            for stmt in cls_node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)
+                        and stmt.target.id == field_name):
+                    line = start + stmt.lineno - 1
+                    break
+    except Exception:
+        pass
+    return path, line
+
+
+def _field_default(f: dataclasses.Field):
+    if f.default is not dataclasses.MISSING:
+        return f.default
+    if f.default_factory is not dataclasses.MISSING:  # type: ignore[misc]
+        return f.default_factory()  # type: ignore[misc]
+    return dataclasses.MISSING
+
+
+def check_hash_compat(spec_cls=None, *, golden: str | None = GOLDEN_RUN_ID) -> list[Finding]:
+    """H001: every post-baseline default-valued field is hash-optional."""
+    if spec_cls is None:
+        from repro.experiments.spec import ExperimentSpec as spec_cls
+
+    out: list[Finding] = []
+    hash_optional = dict(getattr(spec_cls, "_HASH_OPTIONAL", {}))
+    hash_optional_model = dict(getattr(spec_cls, "_HASH_OPTIONAL_MODEL", {}))
+    fields = {f.name: f for f in dataclasses.fields(spec_cls)}
+
+    for name, f in sorted(fields.items()):
+        if name in _SPEC_BASELINE or name in _SPEC_NONHASH:
+            continue
+        if name not in hash_optional:
+            path, line = _spec_anchor(spec_cls, name)
+            out.append(Finding(
+                rule="H001", path=path, line=line,
+                message=f"spec field {name!r} has a default but no "
+                        "_HASH_OPTIONAL entry — adding it rewrites every "
+                        "pre-existing store's run ids",
+                hint=f"add {{{name!r}: <default>}} to "
+                     f"{spec_cls.__name__}._HASH_OPTIONAL",
+            ))
+            continue
+        default = _field_default(f)
+        if default is dataclasses.MISSING or default != hash_optional[name]:
+            path, line = _spec_anchor(spec_cls, name)
+            out.append(Finding(
+                rule="H001", path=path, line=line,
+                message=f"_HASH_OPTIONAL[{name!r}] == "
+                        f"{hash_optional[name]!r} but the dataclass default "
+                        f"is {default!r} — default-valued specs would stop "
+                        "dropping the field from the hash",
+                hint="keep the registered default in lockstep with the "
+                     "field default",
+            ))
+
+    for name in sorted(hash_optional):
+        if name not in fields:
+            path, line = _spec_anchor(spec_cls)
+            out.append(Finding(
+                rule="H001", path=path, line=line,
+                message=f"stale _HASH_OPTIONAL entry {name!r}: no such "
+                        "spec field",
+                hint="remove the entry (removing a *field* needs a store "
+                     "migration, not just this edit)",
+            ))
+        elif name in _SPEC_BASELINE:
+            path, line = _spec_anchor(spec_cls, name)
+            out.append(Finding(
+                rule="H001", path=path, line=line,
+                message=f"baseline field {name!r} listed in _HASH_OPTIONAL "
+                        "— default-valued runs of it would change their "
+                        "pre-existing run ids",
+                hint="only fields added after the store format shipped may "
+                     "be hash-optional",
+            ))
+
+    try:
+        probe = spec_cls(topology=_PROBE_TOPOLOGY)
+        path, line = _spec_anchor(spec_cls)
+        for key, default in sorted(hash_optional_model.items()):
+            with_key = spec_cls(topology=_PROBE_TOPOLOGY, model={key: default})
+            if with_key.run_id != probe.run_id:
+                out.append(Finding(
+                    rule="H001", path=path, line=line,
+                    message=f"model key {key!r} at its registered default "
+                            f"({default!r}) changes run_id — canonical() is "
+                            "not dropping it",
+                    hint="drop default-valued _HASH_OPTIONAL_MODEL keys in "
+                         "canonical() before hashing",
+                ))
+        if golden is not None and probe.run_id != golden:
+            out.append(Finding(
+                rule="H001", path=path, line=line,
+                message=f"run-id drift: {_PROBE_TOPOLOGY!r} default spec "
+                        f"hashes to {probe.run_id!r}, pinned "
+                        f"{golden!r} — every pre-existing store just lost "
+                        "resume/skip-completed",
+                hint="register new default-valued fields in _HASH_OPTIONAL "
+                     "instead of letting them into the hash",
+            ))
+    except Exception as e:  # pragma: no cover - fixture classes may not build
+        path, line = _spec_anchor(spec_cls)
+        out.append(Finding(
+            rule="H001", path=path, line=line,
+            message=f"could not construct a probe spec to verify run-id "
+                    f"stability: {e}",
+            hint="spec classes must be constructible from topology alone",
+        ))
+    return out
+
+
+# -- C001 + the capability-matrix emitter -----------------------------------
+
+CAP_BEGIN = ("<!-- capmatrix:begin — generated from "
+             "GossipEngine.capabilities(); edit decavg._BACKEND_INFO and run "
+             "`python -m repro.lint --write-capmatrix` -->")
+CAP_END = "<!-- capmatrix:end -->"
+
+
+def _md(cell: str) -> str:
+    return cell.replace("|", "\\|")
+
+
+def capability_matrix_lines() -> list[str]:
+    """The README backend matrix, generated from the live capability table."""
+    from repro.core.decavg import GossipEngine
+    from repro.train.trainer import _FUSED_BACKENDS, _LM_FUSED_BACKENDS
+
+    caps = GossipEngine.capabilities()
+    lines = [
+        "| backend | requires | per-round cost | wire (halo) | fused | "
+        "faults | notes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for b in GossipEngine.BACKENDS:
+        c = caps[b]
+        if b in _LM_FUSED_BACKENDS:
+            fused = "✓ mlp+lm"
+        elif b in _FUSED_BACKENDS:
+            fused = "✓ mlp"
+        else:
+            fused = "—"
+        lines.append(
+            f"| `{b}` | {_md(c['requires'])} | {_md(c['cost'])} | "
+            f"{_md(c.get('wire', '—'))} | {fused} | "
+            f"{'✓' if c['faults'] else '—'} | {_md(c.get('notes', ''))} |"
+        )
+    return lines
+
+
+def _code_anchor(obj, needle: str) -> tuple[str, int]:
+    try:
+        path = os.path.relpath(inspect.getsourcefile(obj))
+        src = inspect.getsource(inspect.getmodule(obj))
+        for i, line in enumerate(src.splitlines(), start=1):
+            if needle in line:
+                return path, i
+        return path, 1
+    except Exception:
+        return "<module>", 1
+
+
+def check_capability_matrix(readme_text: str | None = None, *,
+                            readme_path: str = "README.md",
+                            expected: list[str] | None = None) -> list[Finding]:
+    """C001: README matrix block == emitter output; fused tuples consistent."""
+    out: list[Finding] = []
+
+    from repro.core import decavg
+    from repro.train import trainer
+
+    caps = decavg.GossipEngine.capabilities()
+    fused_caps = {b for b, c in caps.items() if c["fused"]}
+    if set(trainer._FUSED_BACKENDS) != fused_caps:
+        path, line = _code_anchor(trainer, "_FUSED_BACKENDS =")
+        out.append(Finding(
+            rule="C001", path=path, line=line,
+            message=f"_FUSED_BACKENDS {sorted(trainer._FUSED_BACKENDS)} != "
+                    f"fused-capable backends {sorted(fused_caps)} from "
+                    "capabilities()",
+            hint="the fused flag in decavg._BACKEND_INFO is the source of "
+                 "truth; mirror it",
+        ))
+    if not set(trainer._LM_FUSED_BACKENDS) <= set(trainer._FUSED_BACKENDS):
+        path, line = _code_anchor(trainer, "_LM_FUSED_BACKENDS =")
+        out.append(Finding(
+            rule="C001", path=path, line=line,
+            message="_LM_FUSED_BACKENDS is not a subset of _FUSED_BACKENDS",
+            hint="lm fused staging rides the mlp program staging; keep the "
+                 "sets nested",
+        ))
+    if set(caps) != set(decavg.GossipEngine.BACKENDS):
+        path, line = _code_anchor(decavg, "_BACKEND_INFO =")
+        out.append(Finding(
+            rule="C001", path=path, line=line,
+            message="_BACKEND_INFO keys != GossipEngine.BACKENDS",
+            hint="every dispatchable backend needs a capability row",
+        ))
+
+    if readme_text is None:
+        try:
+            with open(readme_path, encoding="utf-8") as fh:
+                readme_text = fh.read()
+        except OSError as e:
+            return out + [Finding(
+                rule="C001", path=readme_path, line=1,
+                message=f"cannot read README for the capability matrix: {e}",
+                hint="run from the repo root or pass --root",
+            )]
+
+    lines = readme_text.splitlines()
+    begin = next((i for i, l in enumerate(lines)
+                  if l.strip().startswith("<!-- capmatrix:begin")), None)
+    end = next((i for i, l in enumerate(lines) if l.strip() == CAP_END), None)
+    if begin is None or end is None or end <= begin:
+        out.append(Finding(
+            rule="C001", path=readme_path, line=1,
+            message="capmatrix markers not found — the backend matrix is "
+                    "not under generation",
+            hint="fence the table with the capmatrix:begin/end comments and "
+                 "run `python -m repro.lint --write-capmatrix`",
+        ))
+        return out
+
+    block = [l.rstrip() for l in lines[begin + 1:end] if l.strip()]
+    want = expected if expected is not None else capability_matrix_lines()
+    for j, (got, exp) in enumerate(zip(block, want)):
+        if got != exp:
+            out.append(Finding(
+                rule="C001", path=readme_path, line=begin + 2 + j,
+                message="capability matrix drifted from "
+                        f"GossipEngine.capabilities(): expected {exp!r}",
+                hint="regenerate: python -m repro.lint --write-capmatrix",
+            ))
+            break
+    else:
+        if len(block) != len(want):
+            out.append(Finding(
+                rule="C001", path=readme_path, line=begin + 1,
+                message=f"capability matrix has {len(block)} rows, emitter "
+                        f"produces {len(want)}",
+                hint="regenerate: python -m repro.lint --write-capmatrix",
+            ))
+    return out
+
+
+def write_capmatrix(readme_path: str = "README.md") -> bool:
+    """Rewrite the fenced README matrix from the emitter. True if changed."""
+    with open(readme_path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    begin = next((i for i, l in enumerate(lines)
+                  if l.strip().startswith("<!-- capmatrix:begin")), None)
+    end = next((i for i, l in enumerate(lines) if l.strip() == CAP_END), None)
+    if begin is None or end is None or end <= begin:
+        raise SystemExit(
+            f"{readme_path}: capmatrix:begin/end markers not found; add them "
+            "around the backend matrix first"
+        )
+    new = lines[:begin] + [CAP_BEGIN] + capability_matrix_lines() + lines[end:]
+    if new == lines:
+        return False
+    with open(readme_path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(new) + "\n")
+    return True

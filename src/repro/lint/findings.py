@@ -1,0 +1,22 @@
+"""The Finding record every lint rule emits."""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Finding"]
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.path}:{self.line}: {self.rule} {self.message}"
+        if self.hint:
+            s += f"\n    fix: {self.hint}"
+        return s

@@ -1,0 +1,57 @@
+"""Suppression pragmas: ``# lint: allow[RULE] — reason``.
+
+A pragma suppresses findings for the listed rule ids on its own line and on
+the line directly below (so it can trail the flagged statement or sit on its
+own line above it). The trailing reason is mandatory — a pragma is a claim
+that a flagged site is intentional, and the claim has to say why; a bare
+``# lint: allow[D002]`` is itself a finding (**L001 bare-pragma**) and does
+not suppress anything.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.lint.findings import Finding
+
+__all__ = ["collect_pragmas", "suppress"]
+
+_PRAGMA_RE = re.compile(r"#\s*lint:\s*allow\[([A-Za-z0-9_,\s]+)\](.*)")
+# Separator punctuation between the closing bracket and the reason text.
+_SEP = " \t-—–:"
+
+
+def collect_pragmas(lines: list[str], path: str) -> tuple[dict[int, set[str]], list[Finding]]:
+    """-> ({line_no: allowed rule ids}, L001 findings for bare pragmas)."""
+    allow: dict[int, set[str]] = {}
+    findings: list[Finding] = []
+    for i, line in enumerate(lines, start=1):
+        m = _PRAGMA_RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip().upper() for r in m.group(1).split(",") if r.strip()}
+        reason = m.group(2).strip(_SEP)
+        if len(reason) < 3:
+            findings.append(Finding(
+                rule="L001", path=path, line=i,
+                message="allow[...] pragma without a reason — suppression "
+                        "must say why the site is intentional (and this "
+                        "pragma suppresses nothing until it does)",
+                hint="append ` — <why this site is exempt>` to the pragma",
+            ))
+            continue
+        allow[i] = rules
+    return allow, findings
+
+
+def suppress(findings: list[Finding], allow: dict[int, set[str]]) -> list[Finding]:
+    """Drop findings covered by a pragma on their line or the line above."""
+    if not allow:
+        return findings
+    out = []
+    for f in findings:
+        covered = (f.rule in allow.get(f.line, ()) or
+                   f.rule in allow.get(f.line - 1, ()))
+        if not covered:
+            out.append(f)
+    return out

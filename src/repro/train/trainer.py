@@ -83,6 +83,7 @@ _OPERAND_BACKENDS = ("dense", "pallas", "sparse")
 # MixingProgram (core/decavg.py) selectable by index inside a lax.scan —
 # dense W, padded CSR, blocked-ELL tiles, and per-shard ShardedCSR metadata
 # (whose ring/allgather halo exchange runs inside the scan under shard_map).
+# Must mirror the ``fused`` flags in decavg._BACKEND_INFO (lint rule C001).
 _FUSED_BACKENDS = ("dense", "sparse", "sparse_pallas", "sparse_sharded")
 
 # Per-round threefry dispatch inside a lax.scan costs ~0.5 ms on CPU — a
@@ -904,7 +905,8 @@ class DecentralizedTrainer:
 
 # Backends the fused lm scan supports: the program-stageable single-host
 # kinds. sparse_sharded's shard_map'd scan is mlp-specific today (the lm
-# runner falls back to the loop for it).
+# runner falls back to the loop for it). Must stay a subset of
+# _FUSED_BACKENDS (lint rule C001).
 _LM_FUSED_BACKENDS = ("dense", "sparse", "sparse_pallas")
 
 # compress="auto" threshold: members whose gossiped pytree exceeds this many

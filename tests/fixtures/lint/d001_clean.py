@@ -1,0 +1,9 @@
+"""D001 clean: every draw flows from an explicit spec-derived seed."""
+
+import numpy as np
+
+
+def sample_nodes(n, seed):
+    rng = np.random.default_rng((seed, 0x6E6F6465))
+    child = np.random.default_rng(np.random.SeedSequence(seed).spawn(1)[0])
+    return int(rng.integers(0, n)), int(child.integers(0, n))

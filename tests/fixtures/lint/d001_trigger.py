@@ -1,0 +1,12 @@
+"""D001 trigger: every flavor of unseeded randomness the repo bans —
+stdlib random, a bare default_rng(), and numpy's global RNG state."""
+
+import random
+
+import numpy as np
+
+
+def sample_nodes(n):
+    rng = np.random.default_rng()
+    np.random.seed(0)
+    return int(rng.integers(0, n)), random.random()

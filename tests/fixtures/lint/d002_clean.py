@@ -1,0 +1,9 @@
+"""D002 clean: durations come from the monotonic clock."""
+
+import time
+
+
+def measure(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

@@ -1,0 +1,11 @@
+"""D002 trigger: wall clock in a run path — nondeterministic if it feeds
+results, and the wrong clock (not monotonic) if it measures elapsed time."""
+
+import time
+from datetime import datetime
+
+
+def measure(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0, datetime.now()

@@ -1,0 +1,14 @@
+"""Clean counterpart to h001_trigger: the new field is registered in
+_HASH_OPTIONAL with its dataclass default, so default-valued specs keep
+their pre-existing run ids and only non-default values hash."""
+
+import dataclasses
+
+from repro.experiments.spec import ExperimentSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CompatSpec(ExperimentSpec):
+    fancy_new_knob: int = 3
+
+    _HASH_OPTIONAL = {**ExperimentSpec._HASH_OPTIONAL, "fancy_new_knob": 3}

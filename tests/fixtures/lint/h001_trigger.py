@@ -1,0 +1,14 @@
+"""Regression fixture (PR 7 and PR 8 bug class): a new default-valued spec
+field with no _HASH_OPTIONAL entry. ``canonical()`` then hashes the new
+field for every spec, silently rewriting every pre-existing store's run ids
+— resume and skip-completed stop matching. H001 flags the missing entry and
+the golden-run-id drift."""
+
+import dataclasses
+
+from repro.experiments.spec import ExperimentSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSpec(ExperimentSpec):
+    fancy_new_knob: int = 3

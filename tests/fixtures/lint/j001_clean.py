@@ -1,0 +1,26 @@
+"""Clean counterpart to j001_trigger: the jit is hoisted out of the loop
+(one trace), and the per-period variant keeps a bounded wrapper cache."""
+
+import jax
+
+
+def run_rounds(step_fn, params, periods):
+    step = jax.jit(step_fn, static_argnums=(1,))
+    for period in periods:
+        params = step(params, period)
+    return params
+
+
+def run_rounds_cached(make_step, params, periods, max_cache=64):
+    cache = {}
+    for period in periods:
+        if period not in cache:
+            if len(cache) >= max_cache:
+                cache.clear()
+            cache[period] = _jit_for_period(make_step, period)
+        params = cache[period](params)
+    return params
+
+
+def _jit_for_period(make_step, period):
+    return jax.jit(make_step(period))

@@ -1,0 +1,12 @@
+"""Regression fixture (PR 5 bug class): the loop run path re-built its
+jitted round step every schedule period, so every period re-traced and
+recompiled. J001 flags jit construction lexically inside a loop body."""
+
+import jax
+
+
+def run_rounds(step_fn, params, periods):
+    for period in periods:
+        step = jax.jit(step_fn, static_argnums=(1,))  # fresh cache every lap
+        params = step(params, period)
+    return params

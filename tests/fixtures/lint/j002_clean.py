@@ -1,0 +1,23 @@
+"""Clean counterpart to j002_trigger: donated buffers are either rebound to
+a genuinely new value before the return, or copied into a fresh buffer."""
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_refs(params, scale):
+    params = jnp.array(params, dtype=jnp.float32, copy=True)  # fresh buffer
+    return params, scale * 2.0
+
+
+init_refs = jax.jit(_init_refs, donate_argnums=(0,))
+
+
+class Mixer:
+    @staticmethod
+    def _apply(params, delta):
+        params = params + delta  # rebound: the donated buffer is consumed
+        return params
+
+    def make(self):
+        return jax.jit(self._apply, donate_argnums=(0,))

@@ -1,0 +1,25 @@
+"""Regression fixture (PR 5 bug class): CHOCO compress-state init returned
+``p.astype(float32)`` — a no-op view when p is already f32 — so the
+reference state aliased the params buffer, and the first jitted step that
+donated both invalidated one through the other. J002 flags donated args
+that reach a return value without being rebound."""
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_refs(params, scale):
+    # astype to the same dtype returns the SAME buffer, not a copy
+    return params.astype(jnp.float32), scale * 2.0
+
+
+init_refs = jax.jit(_init_refs, donate_argnums=(0,))
+
+
+class Mixer:
+    def _apply(self, params, delta):
+        return (params + delta).reshape(params.shape), params.ravel()
+
+    def make(self):
+        # bound method: donate_argnums=(0,) is ``params``, not ``self``
+        return jax.jit(self._apply, donate_argnums=(0,))

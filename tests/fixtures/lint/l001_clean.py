@@ -1,0 +1,8 @@
+"""L001 clean: the pragma carries its reason, so it suppresses the D002
+finding and raises nothing itself."""
+
+import time
+
+
+def stamp():
+    return time.time()  # lint: allow[D002] — wall-clock timestamp is the product here

@@ -1,0 +1,8 @@
+"""L001 trigger: a suppression pragma with no reason. It is a finding in
+itself AND suppresses nothing, so the D002 underneath still fires."""
+
+import time
+
+
+def stamp():
+    return time.time()  # lint: allow[D002]

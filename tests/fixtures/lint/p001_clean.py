@@ -1,0 +1,11 @@
+"""P001 clean: aligned tiles, plus symbolic dims the rule must not guess at."""
+
+BLOCK_ROWS = 8
+
+
+def specs(pl, bd):
+    return [
+        pl.BlockSpec((BLOCK_ROWS, 128), lambda i, j: (i, j)),
+        pl.BlockSpec((16, 256), lambda i, j: (i, j)),
+        pl.BlockSpec((BLOCK_ROWS, bd), lambda i, j: (i, j)),  # bd unknown
+    ]

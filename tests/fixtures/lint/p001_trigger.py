@@ -1,0 +1,11 @@
+"""P001 trigger: BlockSpec block shapes off the TPU (sublane=8, lane=128)
+tile grid — an 8x8 trailing tile and a 1-row sublane block."""
+
+BLOCK_ROWS = 8
+
+
+def specs(pl):
+    return [
+        pl.BlockSpec((BLOCK_ROWS, BLOCK_ROWS), lambda i, j: (i, j)),
+        pl.BlockSpec((1, 256), lambda i, j: (i, j)),
+    ]

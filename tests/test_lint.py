@@ -1,0 +1,140 @@
+"""repro.lint: every rule locked by a triggering + clean fixture, and the
+src tree (plus the runtime hash-compat / capability-matrix contracts) clean.
+
+The fixture files under tests/fixtures/lint/ are linted by *content* with a
+bare filename as the path — the D002 path allowlist would otherwise exempt
+anything under tests/.
+"""
+
+import importlib.util
+import pathlib
+
+import pytest
+
+import repro.lint as lint
+from repro.lint import contracts
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "lint"
+ROOT = pathlib.Path(__file__).parent.parent
+
+
+def lint_fixture(name: str):
+    path = FIXTURES / name
+    return lint.lint_source(path.read_text(), path.name)
+
+
+def load_fixture_module(name: str):
+    path = FIXTURES / name
+    spec = importlib.util.spec_from_file_location(path.stem, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestAstRuleFixtures:
+    @pytest.mark.parametrize("rule", ["J001", "J002", "D001", "D002", "P001",
+                                      "L001"])
+    def test_trigger_fires_and_clean_is_silent(self, rule):
+        stem = rule.lower()
+        trigger = lint_fixture(f"{stem}_trigger.py")
+        assert any(f.rule == rule for f in trigger), (
+            f"{stem}_trigger.py raised no {rule}: "
+            f"{[f.format() for f in trigger]}"
+        )
+        clean = lint_fixture(f"{stem}_clean.py")
+        assert clean == [], [f.format() for f in clean]
+
+    def test_d001_catches_all_three_flavors(self):
+        lines = {f.line for f in lint_fixture("d001_trigger.py")
+                 if f.rule == "D001"}
+        assert len(lines) >= 3  # import random, bare default_rng, np.random.seed
+
+    def test_j002_sees_through_views_and_bound_methods(self):
+        found = [f for f in lint_fixture("j002_trigger.py") if f.rule == "J002"]
+        # the astype view at module scope AND the bound-method reshape/ravel
+        assert len(found) >= 2
+
+    def test_l001_pragma_does_not_suppress(self):
+        rules = {f.rule for f in lint_fixture("l001_trigger.py")}
+        assert rules == {"L001", "D002"}
+
+    def test_findings_carry_location_and_hint(self):
+        f = next(f for f in lint_fixture("j001_trigger.py")
+                 if f.rule == "J001")
+        assert f.path == "j001_trigger.py" and f.line > 0 and f.hint
+        assert "j001_trigger.py:" in f.format() and "fix:" in f.format()
+
+
+class TestHashCompat:
+    def test_h001_fires_on_new_default_field_without_entry(self):
+        """The acceptance demo: adding a default-valued field to the spec
+        without a _HASH_OPTIONAL entry must fail the lint pass."""
+        mod = load_fixture_module("h001_trigger.py")
+        findings = contracts.check_hash_compat(mod.DriftSpec)
+        assert any(f.rule == "H001" and "fancy_new_knob" in f.message
+                   for f in findings)
+        # and the golden pin catches the run-id drift itself
+        assert any("drift" in f.message for f in findings)
+
+    def test_h001_clean_with_registered_entry(self):
+        mod = load_fixture_module("h001_clean.py")
+        assert contracts.check_hash_compat(mod.CompatSpec) == []
+
+    def test_h001_finds_stale_and_mismatched_entries(self):
+        import dataclasses
+
+        from repro.experiments.spec import ExperimentSpec
+
+        @dataclasses.dataclass(frozen=True)
+        class StaleSpec(ExperimentSpec):
+            _HASH_OPTIONAL = {"faults": None, "ghost_field": 1}
+
+        findings = contracts.check_hash_compat(StaleSpec)
+        assert any("stale" in f.message for f in findings)
+
+        @dataclasses.dataclass(frozen=True)
+        class MismatchSpec(ExperimentSpec):
+            knob: int = 3
+            _HASH_OPTIONAL = {"faults": None, "knob": 4}  # default is 3
+
+        findings = contracts.check_hash_compat(MismatchSpec, golden=None)
+        assert any(f.rule == "H001" and "knob" in f.message for f in findings)
+
+    def test_real_spec_is_clean(self):
+        assert contracts.check_hash_compat() == []
+
+
+class TestCapabilityMatrix:
+    def test_trigger_fixture_drifts(self):
+        text = (FIXTURES / "c001_trigger.md").read_text()
+        findings = contracts.check_capability_matrix(
+            text, readme_path="c001_trigger.md")
+        assert any(f.rule == "C001" and "drifted" in f.message
+                   for f in findings)
+
+    def test_clean_fixture_matches_emitter(self):
+        text = (FIXTURES / "c001_clean.md").read_text()
+        assert contracts.check_capability_matrix(
+            text, readme_path="c001_clean.md") == []
+
+    def test_missing_markers_is_a_finding(self):
+        findings = contracts.check_capability_matrix(
+            "# README with no matrix\n", readme_path="x.md")
+        assert any(f.rule == "C001" and "markers" in f.message
+                   for f in findings)
+
+    def test_emitter_row_per_backend(self):
+        from repro.core.decavg import GossipEngine
+
+        lines = contracts.capability_matrix_lines()
+        assert len(lines) == 2 + len(GossipEngine.BACKENDS)
+        for b in GossipEngine.BACKENDS:
+            assert any(f"| `{b}` |" in l for l in lines)
+
+
+class TestSrcTreeClean:
+    def test_full_lint_pass_over_src(self):
+        """What CI runs: AST rules over src/ plus H001/C001, zero findings."""
+        nfiles, findings = lint.run([str(ROOT / "src")], root=str(ROOT))
+        assert nfiles > 50
+        assert findings == [], "\n".join(f.format() for f in findings)
