@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test coverage lint bench-mixing bench-wire bench-rounds bench-lm-rounds bench quickstart install sweep-smoke sweep-paper sweep-churn-smoke sweep-lm-smoke
+.PHONY: verify test coverage lint bench-mixing bench-wire bench-rounds bench-lm-rounds bench-serve bench quickstart install sweep-smoke sweep-paper sweep-churn-smoke sweep-lm-smoke
 
 verify:  ## tier-1 test suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -59,6 +59,9 @@ bench-rounds:  ## fused (one lax.scan) vs Python-loop rounds/s -> BENCH_rounds.j
 
 bench-lm-rounds:  ## fused vs loop LM cohort rounds/s -> BENCH_lm_rounds.json
 	$(PY) benchmarks/bench_lm_rounds.py
+
+bench-serve:  ## chunked prefill + engine identity + routing delta -> BENCH_serve.json
+	$(PY) benchmarks/bench_serve.py
 
 bench:  ## quick paper-figure benchmark harness
 	$(PY) benchmarks/run.py

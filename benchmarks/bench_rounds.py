@@ -24,6 +24,13 @@ N=128 ring sparse_sharded row over 8 fake CPU devices in a subprocess):
 
 Emits BENCH_rounds.json at the repo root.
 
+Baselines are machine-relative: a 2026-08 same-machine bisect of an apparent
+sparse-row "regression" (2.1x -> 1.4x) found PR-era and current HEAD within
+noise of each other — the historical figure came from a different runner.
+When a row drifts, re-run the OLD commit on the CURRENT machine (git
+worktree) before treating the delta as a code regression; CI floors (2x
+dense/sharded, 1.2x sparse) are set below same-machine variance.
+
 Run:  PYTHONPATH=src python benchmarks/bench_rounds.py [--rounds 200]
 """
 

@@ -1,0 +1,200 @@
+"""Serving-stack benchmark: chunked prefill speed, continuous-batching
+token identity, and the topology-aware routing delta.
+
+Three sections, one JSON (BENCH_serve.json at the repo root):
+
+1. ``prefill`` rows — chunked full-sequence prefill
+   (``transformer.prefill_forward``: one forward writes the whole KV cache)
+   vs the token-at-a-time ``lax.scan`` reference (``prefill_sequential``),
+   both jitted, best-of-N wall clock after a compile warm-up. The chunked
+   path replaces S sequential attention dispatches with one batched forward,
+   so the gap grows with prompt length; CI guards >= 5x at seq >= 128.
+
+2. ``engine`` row — the continuous-batching ``Engine`` (staggered arrivals,
+   fewer slots than requests) must emit exactly the tokens the sequential
+   ``decode.generate`` emits for each prompt alone at temperature 0
+   (``token_identical``, CI-guarded). Also reports engine tokens/s.
+
+3. ``serve_eval`` row — ``experiments.serve_eval``: train a gossip cohort on
+   a star, reload through the params-only checkpoint path, and replay a
+   shuffled domain-query stream. CI guards serve_acc[best] >
+   serve_acc[round_robin] (the topology-aware router must beat the
+   topology-blind baseline).
+
+Run:  PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.models import transformer as TF
+from repro.serve import decode as SD
+from repro.serve.engine import Engine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+ARCH = "llama32_1b"
+BATCH = 2
+DECODE_STEPS = 8  # decode tail appended after each timed prefill
+
+
+def _best_of(fn, reps: int = 3) -> float:
+    """Best-of-``reps`` wall clock; ``fn`` must block on its outputs."""
+    fn()  # warm-up: pays the compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_prefill(cfg, params, seq: int) -> dict:
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (BATCH, seq), 0, cfg.vocab_size)
+    cache_len = seq + DECODE_STEPS
+
+    chunked = jax.jit(
+        lambda p, t, c: SD.prefill(p, cfg, t, c, flash=False), donate_argnums=(2,)
+    )
+    sequential = jax.jit(
+        lambda p, t, c: SD.prefill_sequential(p, cfg, t, c), donate_argnums=(2,)
+    )
+
+    def run(fn):
+        def go():
+            logits, _ = fn(params, prompt, TF.init_cache(cfg, BATCH, cache_len))
+            jax.block_until_ready(logits)
+
+        return go
+
+    chunk_s = _best_of(run(chunked))
+    seq_s = _best_of(run(sequential))
+    row = {
+        "seq": seq,
+        "batch": BATCH,
+        "chunked_ms": round(chunk_s * 1e3, 2),
+        "sequential_ms": round(seq_s * 1e3, 2),
+        "speedup": round(seq_s / chunk_s, 2),
+        "prompt_tokens_per_s": round(BATCH * seq / chunk_s, 1),
+    }
+    print(
+        f"prefill seq={seq:4d} chunked {row['chunked_ms']:8.2f} ms   "
+        f"sequential {row['sequential_ms']:8.2f} ms   speedup {row['speedup']:.2f}x"
+    )
+    return row
+
+
+def bench_engine(cfg, params) -> dict:
+    """Staggered arrivals through 2 slots vs per-prompt sequential generate."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 11, 3, 8, 6)]
+    max_new = [8, 6, 8, 5, 7]
+    cache_len = 64
+
+    def drive():
+        eng = Engine(params, cfg, slots=2, cache_len=cache_len, flash=False)
+        rids = [eng.submit(p, max_new=m) for p, m in zip(prompts[:3], max_new[:3])]
+        eng.step()  # late arrivals land mid-flight
+        rids += [eng.submit(p, max_new=m) for p, m in zip(prompts[3:], max_new[3:])]
+        return rids, eng.run()
+
+    rids, out = drive()  # warm-up run doubles as the correctness run
+    identical = True
+    for rid, p, m in zip(rids, prompts, max_new):
+        want = SD.generate(
+            params, cfg, jnp.asarray(p)[None], TF.init_cache(cfg, 1, cache_len),
+            steps=m, key=jax.random.PRNGKey(0),
+        )
+        identical &= bool(np.array_equal(out[rid], np.asarray(want)[0]))
+
+    total_toks = sum(max_new)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        drive()
+        best = min(best, time.perf_counter() - t0)
+    row = {
+        "slots": 2,
+        "requests": len(prompts),
+        "generated_tokens": total_toks,
+        "token_identical": identical,
+        "tokens_per_s": round(total_toks / best, 1),
+    }
+    print(
+        f"engine  {len(prompts)} reqs / 2 slots   identical={identical}   "
+        f"{row['tokens_per_s']:.1f} tok/s"
+    )
+    return row
+
+
+def bench_serve_eval(rounds: int) -> dict:
+    from repro.experiments.serve_eval import run_serve_eval
+
+    summary = run_serve_eval(rounds=rounds)
+    row = {
+        "topology": summary["topology"],
+        "rounds": summary["rounds"],
+        "serve_acc": summary["serve_acc"],
+        "hub_share_foreign": summary["hub_share_foreign"],
+        "router_beats_round_robin": summary["checks"]["router_beats_round_robin"],
+    }
+    print(
+        f"serve_eval best {row['serve_acc']['best']:.6f}   "
+        f"round_robin {row['serve_acc']['round_robin']:.6f}   "
+        f"beats_rr={row['router_beats_round_robin']}"
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument("--eval-rounds", type=int, default=200)
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="skip the seq=256 prefill row and shorten serve_eval",
+    )
+    args = ap.parse_args()
+
+    cfg = cfgbase.get(ARCH).reduced()
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+
+    seqs = [32, 128] if args.quick else [32, 128, 256]
+    prefill_rows = [bench_prefill(cfg, params, s) for s in seqs]
+    engine_row = bench_engine(cfg, params)
+    eval_row = bench_serve_eval(60 if args.quick else args.eval_rounds)
+
+    out = {
+        "bench": "serving stack: prefill / continuous batching / routing "
+                 "(benchmarks/bench_serve.py)",
+        "device": str(jax.devices()[0]),
+        "arch": cfg.arch_id,
+        "prefill": prefill_rows,
+        "engine": engine_row,
+        "serve_eval": eval_row,
+        "checks": {
+            "prefill_speedup_128": next(
+                r["speedup"] for r in prefill_rows if r["seq"] == 128
+            ),
+            "engine_token_identical": engine_row["token_identical"],
+            "router_beats_round_robin": eval_row["router_beats_round_robin"],
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

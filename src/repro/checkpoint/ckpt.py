@@ -60,3 +60,36 @@ def restore(path: str, like: PyTree) -> tuple[PyTree, int | None]:
             raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), meta.get("step")
+
+
+def restore_subtree(path: str, like: PyTree, *, prefix: str) -> tuple[PyTree, int | None]:
+    """Restore ONE top-level subtree (e.g. ``prefix="params"``) of a saved
+    tree into the structure of ``like``.
+
+    ``np.load`` on an npz is lazy — zip members decompress on access — so
+    this never materializes the other subtrees: serving loads params from a
+    trainer checkpoint without paying for the AdamW moments (which double
+    the resident size of the full ``restore``).
+    """
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat:
+        key = _SEP.join(
+            [prefix] + [str(getattr(p, "key", getattr(p, "idx", p))) for p in pth]
+        )
+        if key not in data.files:
+            raise KeyError(
+                f"{key!r} not in checkpoint {path} — available top-level "
+                f"prefixes: {sorted({f.split(_SEP)[0] for f in data.files if not f.startswith('__')})}"
+            )
+        arr = data[key]
+        if f"__bf16__{key}" in data.files:
+            arr = arr.view(jnp.bfloat16)
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta.get("step")

@@ -30,6 +30,7 @@ __all__ = [
     "round_token_batch",
     "round_token_slab",
     "domain_eval_batch",
+    "domain_query_batch",
 ]
 
 # Seed-sequence stream tags: np.random.default_rng hashes the full tuple, so
@@ -38,6 +39,7 @@ __all__ = [
 _STREAM_TRAIN = 0
 _STREAM_DOMAIN = 1
 _STREAM_EVAL = 2
+_STREAM_QUERY = 3
 
 
 def _zipf_tokens(
@@ -180,6 +182,32 @@ def domain_eval_batch(
         draw = foreign[rng.integers(0, foreign.size, size=batch * (seq + 1))]
         toks[i] = draw.reshape(batch, seq + 1)
     return toks[:, :, :-1], toks[:, :, 1:]
+
+
+def domain_query_batch(
+    domain_node: int,
+    batch: int,
+    seq: int,
+    vocab: int,
+    *,
+    seed: int = 0,
+    domain_size: int = 64,
+    query_round: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Serve-time queries "about" one node's domain: (B, S) (tokens, labels)
+    drawn uniformly from node ``domain_node``'s domain set.
+
+    The router-eval analogue of ``domain_eval_batch``: a query stream whose
+    token domain is known by construction, so serve accuracy can be compared
+    across routing policies (does routing to the hub that *covers* this
+    domain beat round-robin?). Dedicated stream tag + ``query_round`` keep
+    the draws disjoint from training/eval and from each other.
+    """
+    dom = node_domain(domain_node, vocab, seed=seed, domain_size=domain_size)
+    rng = np.random.default_rng((seed, domain_node, _STREAM_QUERY, query_round))
+    draw = dom[rng.integers(0, dom.size, size=batch * (seq + 1))]
+    toks = draw.reshape(batch, seq + 1).astype(np.int32)
+    return toks[:, :-1], toks[:, 1:]
 
 
 def token_batches(

@@ -162,6 +162,7 @@ def build_decode_pipeline(cfg, mesh, shape):
     for why the auto-partitioned variant (serve/pipeline.py) cannot be used
     at 256 devices."""
     from repro.serve import pipeline_manual as PM
+    from repro.serve.pipeline import build_pipeline_step
 
     clen = SH.decode_cache_len(cfg, shape)
     tp = mesh.shape["model"]
@@ -173,7 +174,7 @@ def build_decode_pipeline(cfg, mesh, shape):
     c_sh = PM.cache_shardings(mesh)
     token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     window = cfg.sliding_window if shape.name == "long_500k" else None
-    fn = PM.build_manual_pipeline_step(cfg, mesh, window=window)
+    fn = build_pipeline_step(cfg, mesh, manual=True, window=window)
     args = (params, token, cache)
     tok_sh = NamedSharding(mesh, P("pod") if "pod" in mesh.shape else P())
     shardings = (p_sh, tok_sh, c_sh)

@@ -21,6 +21,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -245,6 +246,9 @@ class AttnSpec:
     causal: bool = True
     window: int | None = None
     use_rope: bool = True
+    # Route full-sequence (prefill) attention through the Pallas
+    # flash-attention kernel instead of the pure-JAX reference path.
+    flash: bool = False
 
 
 def init_attention(key, d_model: int, spec: AttnSpec, dtype) -> PyTree:
@@ -305,14 +309,75 @@ def attention_layer(
         )
         return (out.reshape(b, s, h * hd) @ p["wo"]).astype(x.dtype), None
 
+    if s > 1:
+        # --- prefill: the whole prompt in one pass, KV written in one shot
+        # Contract: the cache is fresh (positions start at 0); the ring
+        # buffer keeps the last min(S, T) prompt tokens. The caller owns the
+        # true-length bookkeeping for right-padded prompts (padded positions
+        # land at ring slots >= the written index, which the decode-side
+        # kpos reconstruction marks unwritten / future — never attended).
+        t = cache["k"].shape[1]
+        pos = jnp.arange(s)
+        if spec.use_rope:
+            q = apply_rope(q, pos, spec.rope_theta)
+            k = apply_rope(k, pos, spec.rope_theta)
+        if spec.flash:
+            from repro.kernels import ops as _ops
+
+            out = _ops.flash_attention(
+                q, k, v, causal=spec.causal, window=spec.window
+            )
+        else:
+            out = attention(
+                q, k, v, pos, pos, causal=spec.causal, window=spec.window
+            )
+        m = min(s, t)
+        # Static ring slots of the surviving (last m) prompt positions.
+        slots = np.arange(s - m, s) % t
+        kw, vw = k[:, s - m :], v[:, s - m :]
+        quantized = cache["k"].dtype == jnp.int8
+        new_cache = {"index": cache["index"] + s}
+        if quantized:
+            kq, ks = _quant_kv(kw)
+            vq, vs = _quant_kv(vw)
+            new_cache.update(
+                k=cache["k"].at[:, slots].set(kq),
+                v=cache["v"].at[:, slots].set(vq),
+                k_scale=cache["k_scale"].at[:, slots].set(ks),
+                v_scale=cache["v_scale"].at[:, slots].set(vs),
+            )
+        else:
+            new_cache.update(
+                k=cache["k"].at[:, slots].set(kw.astype(cache["k"].dtype)),
+                v=cache["v"].at[:, slots].set(vw.astype(cache["v"].dtype)),
+            )
+        return (out.reshape(b, s, h * hd) @ p["wo"]).astype(x.dtype), new_cache
+
     # --- decode: single new token against a (possibly ring) cache ---------
-    assert s == 1, "decode mode expects a single query token"
-    index = cache["index"]  # scalar int32: absolute position of the new token
+    index = cache["index"]  # int32 absolute position of the new token:
+    # scalar = position shared by the whole batch (classic batched decode);
+    # (B,) = per-slot positions (the continuous-batching engine, where every
+    # slot is at a different point in its own sequence).
     t = cache["k"].shape[1]
+    per_slot = index.ndim == 1
+    qpos = index[:, None] if per_slot else index[None]
     if spec.use_rope:
-        q = apply_rope(q, index[None], spec.rope_theta)
-        k = apply_rope(k, index[None], spec.rope_theta)
+        q = apply_rope(q, qpos, spec.rope_theta)
+        k = apply_rope(k, qpos, spec.rope_theta)
     slot = jnp.mod(index, t)  # ring-buffer slot (t == window for SWA archs)
+    if per_slot:
+        sel = (jnp.arange(t)[None, :] == slot[:, None])[:, :, None, None]
+
+        def put(buf, val):  # masked per-row scatter at each slot's position
+            return jnp.where(sel, val.astype(buf.dtype), buf)
+
+    else:
+
+        def put(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), slot, axis=1
+            )
+
     quantized = cache["k"].dtype == jnp.int8
     new_cache = {"index": index + 1}
     if quantized:
@@ -321,25 +386,27 @@ def attention_layer(
         # H3). Error is bounded by 1/127 of the per-head absmax.
         kq, ks = _quant_kv(k)
         vq, vs = _quant_kv(v)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
-        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=1)
-        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=1)
+        ck, cv = put(cache["k"], kq), put(cache["v"], vq)
+        cks = put(cache["k_scale"], ks)
+        cvs = put(cache["v_scale"], vs)
         new_cache.update(k=ck, v=cv, k_scale=cks, v_scale=cvs)
         ck_f = ck.astype(jnp.float32) * cks
         cv_f = cv.astype(jnp.float32) * cvs
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        ck, cv = put(cache["k"], k), put(cache["v"], v)
         new_cache.update(k=ck, v=cv)
         ck_f, cv_f = ck, cv
     # Absolute positions of each ring slot, given `index` was just written.
     slots = jnp.arange(t)
-    kpos = index + slots - slot - jnp.where(slots > slot, t, 0)
+    if per_slot:
+        kpos = (
+            index[:, None] + slots[None, :] - slot[:, None]
+            - jnp.where(slots[None, :] > slot[:, None], t, 0)
+        )
+    else:
+        kpos = index + slots - slot - jnp.where(slots > slot, t, 0)
     kpos = jnp.where(kpos < 0, jnp.iinfo(jnp.int32).max, kpos)  # unwritten slots
-    out = attention(
-        q, ck_f, cv_f, index[None], kpos, causal=True, window=spec.window
-    )
+    out = attention(q, ck_f, cv_f, qpos, kpos, causal=True, window=spec.window)
     y = (out.reshape(b, 1, h * hd) @ p["wo"]).astype(x.dtype)
     return y, new_cache
 

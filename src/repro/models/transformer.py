@@ -36,7 +36,9 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 
-def _attn_spec(cfg: ArchConfig, *, window: int | None) -> L.AttnSpec:
+def _attn_spec(
+    cfg: ArchConfig, *, window: int | None, flash: bool = False
+) -> L.AttnSpec:
     return L.AttnSpec(
         num_heads=cfg.num_heads,
         num_kv_heads=cfg.num_kv_heads,
@@ -44,6 +46,7 @@ def _attn_spec(cfg: ArchConfig, *, window: int | None) -> L.AttnSpec:
         rope_theta=cfg.rope_theta,
         causal=True,
         window=window,
+        flash=flash,
     )
 
 
@@ -143,13 +146,14 @@ def _apply_layer(
     cross: PyTree | None,
     memory: jax.Array | None,
     positions: jax.Array | None,
+    flash: bool = False,
 ) -> tuple[jax.Array, PyTree | None, jax.Array]:
     """Pre-norm residual layer. Returns (x, new_cache, moe_aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.norm(x, p["norm1"], cfg.norm)
     new_cache: PyTree = {}
     if spec.mixer == "attn":
-        aspec = _attn_spec(cfg, window=window)
+        aspec = _attn_spec(cfg, window=window, flash=flash)
         y, c = L.attention_layer(
             p["attn"], h, aspec,
             positions=positions,
@@ -204,6 +208,7 @@ def _apply_group(
     cross: PyTree | None,
     memory: jax.Array | None,
     positions: jax.Array | None,
+    flash: bool = False,
 ) -> tuple[jax.Array, PyTree | None, jax.Array]:
     aux_total = jnp.zeros((), jnp.float32)
     new_cache: PyTree = {}
@@ -216,6 +221,7 @@ def _apply_group(
             cross=None if cross is None else cross[name],
             memory=memory,
             positions=positions,
+            flash=flash,
         )
         new_cache[name] = c
         aux_total = aux_total + aux
@@ -319,12 +325,22 @@ def encode(params: PyTree, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
 
 
 def init_cache(
-    cfg: ArchConfig, batch: int, cache_len: int, dtype=None, *, kv_quant: bool = False
+    cfg: ArchConfig,
+    batch: int,
+    cache_len: int,
+    dtype=None,
+    *,
+    kv_quant: bool = False,
+    per_slot: bool = False,
 ) -> PyTree:
     """Stacked per-group caches. For attention the cache is a ring buffer of
     ``cache_len`` (callers pass window size for sliding-window archs).
-    kv_quant=True stores int8 values + per-(token, head) f32 scales."""
+    kv_quant=True stores int8 values + per-(token, head) f32 scales.
+    per_slot=True gives every batch row its own position counter (``index``
+    is (batch,) instead of a shared scalar) — the continuous-batching engine's
+    layout, where each slot is at a different point in its own sequence."""
     dtype = dtype or cfg.dtype()
+    index = jnp.zeros((batch,) if per_slot else (), jnp.int32)
 
     def one_layer(spec: LayerSpec) -> PyTree:
         c: PyTree = {}
@@ -336,13 +352,13 @@ def init_cache(
                     "v": jnp.zeros(kv_shape, jnp.int8),
                     "k_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
                     "v_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
-                    "index": jnp.zeros((), jnp.int32),
+                    "index": index,
                 }
             else:
                 c["mixer"] = {
                     "k": jnp.zeros(kv_shape, dtype),
                     "v": jnp.zeros(kv_shape, dtype),
-                    "index": jnp.zeros((), jnp.int32),
+                    "index": index,
                 }
         elif spec.mixer == "mamba":
             c["mixer"] = Mb.init_mamba_cache(batch, cfg.d_model, cfg.mamba, dtype)
@@ -359,6 +375,87 @@ def init_cache(
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x, (cfg.num_groups,) + x.shape), one_group
     )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "window", "flash"))
+def prefill_forward(
+    params: PyTree,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    cache: PyTree,
+    *,
+    length: jax.Array | None = None,
+    memory: jax.Array | None = None,
+    window: int | None = None,
+    flash: bool = False,
+) -> tuple[jax.Array, PyTree]:
+    """Full-prompt prefill: ONE forward pass that writes the whole KV cache.
+
+    tokens: (B, S) int32, right-padded to a common S when lengths differ;
+    length: (B,) true prompt lengths (defaults to S). Returns the f32 logits
+    of each row's LAST REAL token, (B, V), plus the filled cache — the state
+    ``decode_step`` continues from.
+
+    The cache must be fresh (positions start at 0). Padded positions do get
+    K/V entries, but the written ``index`` = true length marks them future /
+    unwritten to the decode-side ring reconstruction, so they are never
+    attended (and are progressively overwritten as decoding advances).
+    Recurrent mixers (mamba/rwkv) consume the sequence through their chunked
+    scan paths, so padding is NOT safe for them — callers must pass exact
+    lengths (the serve engine restricts itself to attention-only patterns).
+    Per-row ``length`` needs a per-slot cache (``init_cache(per_slot=True)``);
+    a scalar-index cache cannot represent rows at different positions.
+
+    MoE FFNs use capacity-based per-group routing, so chunked prefill matches
+    ``forward``'s (training) numerics, while token-at-a-time decode routes
+    each step as its own tiny group — the two legitimately differ for MoE
+    patterns. Dense / rwkv-ffn patterns are step-exact either way.
+
+    flash=True routes every attention layer through the Pallas kernel
+    (kernels/flash_attention.py); False uses the pure-JAX reference path.
+    """
+    x = params["embed"][tokens]
+    window = window if window is not None else (cfg.sliding_window if cfg.always_window else None)
+    cross_stack = params.get("cross")
+
+    def body(x, scanned):
+        gp, gc = scanned["gp"], scanned["cache"]
+        cross = scanned.get("cross")
+        x, new_c, _ = _apply_group(
+            gp, x, cfg, window=window, cache=gc,
+            cross=cross, memory=memory, positions=None, flash=flash,
+        )
+        return x, new_c
+
+    scanned = {"gp": params["blocks"], "cache": cache}
+    if cross_stack is not None:
+        scanned["cross"] = cross_stack
+    x, new_cache = jax.lax.scan(body, x, scanned)
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    if length is None:
+        last = x[:, -1]
+    else:
+        length = jnp.asarray(length, jnp.int32)
+        lvec = jnp.broadcast_to(length, x.shape[:1])
+        last = jnp.take_along_axis(x, (lvec - 1)[:, None, None], axis=1)[:, 0]
+
+        def fix(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name != "index":
+                return leaf
+            if length.ndim == 1 and leaf.ndim == 1:
+                raise ValueError(
+                    "per-row prompt lengths need a per-slot cache "
+                    "(init_cache(..., per_slot=True)); this cache has a "
+                    "scalar index shared by the whole batch"
+                )
+            return jnp.broadcast_to(length.astype(leaf.dtype), leaf.shape)
+
+        new_cache = jax.tree_util.tree_map_with_path(fix, new_cache)
+    # Slice BEFORE the head matmul (cf. forward's last_only note): full-seq
+    # logits at serving scale are a multi-GB transient for nothing.
+    logits = (last @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "window"))

@@ -4,6 +4,16 @@ zoo's ``decode_step``, plus greedy/temperature sampling.
 ``serve_step`` (one token for the whole batch) is what the decode_32k /
 long_500k dry-run shapes lower; ``generate`` is the runnable CPU-scale loop
 used by examples and tests.
+
+Prefill has two implementations:
+
+- ``prefill`` — the fast path: ONE full-sequence forward
+  (``transformer.prefill_forward``) that writes the whole KV cache in a
+  single shot, optionally through the Pallas flash-attention kernel.
+- ``prefill_sequential`` — the reference path: token-at-a-time ``lax.scan``
+  over ``decode_step`` (L kernel dispatches per prompt). Kept as the
+  bit-for-bit definition of "what incremental decoding would have produced";
+  ``bench_serve.py`` guards the chunked path at >=5x this one at seq>=128.
 """
 
 from __future__ import annotations
@@ -27,7 +37,39 @@ def cache_len_for(cfg: ArchConfig, seq_len: int, *, long_context: bool) -> int:
     return seq_len
 
 
+def flash_ok(cfg: ArchConfig) -> bool:
+    """True when every mixer in the pattern can route prefill attention
+    through the flash kernel (attention-only; enc/dec cross-attn excluded)."""
+    return not cfg.enc_dec and all(s.mixer == "attn" for s in cfg.pattern)
+
+
 def prefill(
+    params: PyTree,
+    cfg: ArchConfig,
+    prompt: jax.Array,
+    cache: PyTree,
+    *,
+    length: jax.Array | None = None,
+    memory: jax.Array | None = None,
+    window: int | None = None,
+    flash: bool | str = "auto",
+) -> tuple[jax.Array, PyTree]:
+    """Chunked prefill: the whole prompt in one forward, cache in one shot.
+
+    ``flash="auto"`` uses the Pallas kernel on TPU (interpret mode is far
+    slower than the reference path on CPU) when the pattern supports it.
+    """
+    if flash == "auto":
+        from repro.kernels import ops as _ops
+
+        flash = bool(_ops.on_tpu()) and flash_ok(cfg)
+    return TF.prefill_forward(
+        params, cfg, prompt, cache,
+        length=length, memory=memory, window=window, flash=bool(flash),
+    )
+
+
+def prefill_sequential(
     params: PyTree,
     cfg: ArchConfig,
     prompt: jax.Array,
@@ -37,7 +79,8 @@ def prefill(
     window: int | None = None,
 ) -> tuple[jax.Array, PyTree]:
     """Feed the prompt token-by-token through decode_step (exactly matches
-    incremental decoding; examples use short prompts so this is fine on CPU)."""
+    incremental decoding; the chunked ``prefill`` is benchmarked against
+    this)."""
 
     def body(cache, tok):
         logits, cache = TF.decode_step(

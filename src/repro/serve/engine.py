@@ -1,0 +1,225 @@
+"""Continuous batching: a slot-based scheduler over a fixed-capacity KV cache.
+
+The engine holds a batched per-slot cache (``init_cache(per_slot=True)``) of
+``slots`` rows. Requests are admitted into free slots as they arrive (chunked
+prefill into a single-row cache, scattered into the slot), every active slot
+decodes one token per ``Engine.step`` through ONE jitted ``serve_step``, and
+finished sequences retire by simply freeing the slot — no recompilation at
+any point: the slot count is static, inactive slots decode garbage that the
+host-side scheduler ignores, and a retired slot's cache rows are fully
+overwritten on the next admission.
+
+Compiled programs, total: one ``serve_step`` (per (slots, cache_len)), one
+``_scatter_slot``, and one prefill per power-of-two prompt bucket — constant
+regardless of arrival order, prompt mix, or completion order.
+
+Restrictions: attention-only patterns (``engine_ok``). Recurrent mixers
+(mamba/rwkv) carry prompt state through their scan paths, where right-padded
+admission would corrupt the recurrent state; the ring-buffer attention cache
+is provably padding-safe (padded ring slots sit at positions >= the written
+``index`` and are never attended).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as TF
+from repro.serve import decode as SD
+
+PyTree = Any
+
+
+def engine_ok(cfg: ArchConfig) -> bool:
+    """True when cfg can serve through the continuous-batching engine:
+    attention-only mixers (padding-safe ring cache), no encoder."""
+    return not cfg.enc_dec and all(s.mixer == "attn" for s in cfg.pattern)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "temperature"))
+def serve_step(
+    params: PyTree,
+    cfg: ArchConfig,
+    tok: jax.Array,
+    cache: PyTree,
+    key: jax.Array,
+    *,
+    temperature: float = 0.0,
+) -> tuple[jax.Array, PyTree]:
+    """Decode ONE token for every slot at once. tok: (slots,) int32 last
+    tokens; cache: per-slot batched cache. Returns (next_tok (slots,), cache).
+
+    Inactive slots run through the same program (static shapes — this is what
+    makes continuous batching recompile-free); the scheduler discards their
+    output and overwrites their cache rows at the next admission.
+    """
+    logits, cache = TF.decode_step(params, cfg, tok, cache)
+    if temperature == 0.0:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        keys = jax.random.split(key, logits.shape[0])
+        nxt = jax.vmap(
+            lambda k, l: jax.random.categorical(k, l / temperature)
+        )(keys, logits).astype(jnp.int32)
+    return nxt, cache
+
+
+@jax.jit
+def _scatter_slot(cache: PyTree, row: PyTree, slot: jax.Array) -> PyTree:
+    """Write a single-row cache (batch=1) into batch position ``slot`` of the
+    batched cache. Leaves are (G, B, ...) / (G, B); row leaves (G, 1, ...)."""
+    return jax.tree.map(lambda b, r: b.at[:, slot].set(r[:, 0]), cache, row)
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Round a prompt length up to a power of two (caps prefill recompiles
+    at log2(max_prompt) programs)."""
+    return max(lo, 1 << (n - 1).bit_length())
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    remaining: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    """Continuous-batching serving engine over one model.
+
+    >>> eng = Engine(params, cfg, slots=4, cache_len=64)
+    >>> rid = eng.submit([1, 2, 3], max_new=16)
+    >>> for ev in iter(eng.step, []):  # or: out = eng.run()
+    ...     ...  # ev: {"rid", "token", "done"} per active slot, stream order
+
+    temperature=0 is greedy and token-identical to ``decode.generate`` on the
+    same prompt (CI-guarded); temperature>0 samples per-slot.
+    """
+
+    def __init__(
+        self,
+        params: PyTree,
+        cfg: ArchConfig,
+        *,
+        slots: int = 4,
+        cache_len: int = 64,
+        temperature: float = 0.0,
+        flash: bool | str = "auto",
+        seed: int = 0,
+    ):
+        if not engine_ok(cfg):
+            raise ValueError(
+                "continuous batching needs an attention-only pattern "
+                f"(got {[s.mixer for s in cfg.pattern]}, enc_dec={cfg.enc_dec}): "
+                "recurrent mixers cannot admit right-padded prompts"
+            )
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.temperature = temperature
+        self.flash = flash
+        self.cache = TF.init_cache(cfg, slots, cache_len, per_slot=True)
+        self.last_tok = np.zeros(slots, np.int32)
+        self._slots = [_Slot() for _ in range(slots)]
+        self._free = deque(range(slots))
+        self._pending: deque = deque()
+        self._finished: dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(seed)
+
+    # -- scheduling --------------------------------------------------------
+
+    def submit(self, prompt, *, max_new: int) -> int:
+        """Queue a prompt; returns the request id. Non-blocking — the request
+        is admitted into a slot by the next ``step`` with capacity."""
+        rid = self._next_rid
+        self._next_rid += 1
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        self._pending.append((rid, prompt, max_new))
+        return rid
+
+    def _admit(self) -> list[dict]:
+        events = []
+        while self._pending and self._free:
+            rid, prompt, max_new = self._pending.popleft()
+            slot = self._free.popleft()
+            n = int(prompt.size)
+            padded = np.zeros((1, _bucket(n)), np.int32)
+            padded[0, :n] = prompt
+            row = TF.init_cache(self.cfg, 1, self.cache_len, per_slot=True)
+            logits, row = SD.prefill(
+                self.params, self.cfg, jnp.asarray(padded), row,
+                length=jnp.array([n], jnp.int32), flash=self.flash,
+            )
+            tok = self._sample(logits)[0]
+            self.cache = _scatter_slot(self.cache, row, slot)
+            self.last_tok[slot] = tok
+            st = self._slots[slot]
+            st.rid, st.remaining, st.tokens = rid, max_new - 1, [int(tok)]
+            events.append({"rid": rid, "token": int(tok), "done": max_new == 1})
+            if max_new == 1:
+                self._retire(slot)
+        return events
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature == 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._key, k = jax.random.split(self._key)
+        return np.asarray(
+            jax.random.categorical(k, logits / self.temperature), np.int32
+        )
+
+    def _retire(self, slot: int) -> None:
+        st = self._slots[slot]
+        self._finished[st.rid] = np.asarray(st.tokens, np.int32)
+        self._slots[slot] = _Slot()
+        self._free.append(slot)
+
+    # -- decoding ----------------------------------------------------------
+
+    def step(self) -> list[dict]:
+        """Admit pending requests, decode one token on every active slot.
+        Returns the streamed events ({"rid", "token", "done"}); [] when idle
+        (nothing pending, nothing active) — so ``iter(eng.step, [])`` drains.
+        """
+        events = self._admit()
+        active = [i for i, s in enumerate(self._slots) if s.rid >= 0]
+        if not active:
+            return events
+        self._key, k = jax.random.split(self._key)
+        nxt, self.cache = serve_step(
+            self.params, self.cfg, jnp.asarray(self.last_tok), self.cache, k,
+            temperature=self.temperature,
+        )
+        self.last_tok = np.array(nxt, np.int32)  # copy: jax views are read-only
+        for i in active:
+            st = self._slots[i]
+            tok = int(self.last_tok[i])
+            st.tokens.append(tok)
+            st.remaining -= 1
+            done = st.remaining <= 0
+            events.append({"rid": st.rid, "token": tok, "done": done})
+            if done:
+                self._retire(i)
+        return events
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drive until every submitted request has finished; returns
+        {rid: generated tokens (max_new,)}."""
+        while self._pending or any(s.rid >= 0 for s in self._slots):
+            self.step()
+        out, self._finished = self._finished, {}
+        return out

@@ -1,0 +1,120 @@
+"""GPipe stage rotation shared by the pipeline-parallel decode variants.
+
+Both pipeline serving layouts (auto-partitioned ``serve/pipeline.py`` and
+fully-manual ``serve/pipeline_manual.py``) drive the same schedule: the batch
+splits into S microgroups, stage 0 injects microgroup t at tick t, finished
+microgroups leave from the last stage, activations hop stage->stage+1 via
+``ppermute``, and 2S-1 ticks drain the whole batch — at steady state every
+stage computes every tick. The two variants differ only in what ONE stage
+does to its activations and cache shard; this module owns everything else.
+
+Runs inside a ``shard_map``-manual region over the stage axis. Caller
+supplies three callbacks:
+
+- ``apply_fn(x, sub) -> (y, sub_new)``: this stage's layer groups on one
+  microgroup's activations + its cache slice.
+- ``slice_fn(cache, m) -> sub``: microgroup m's rows of the stage cache.
+- ``write_fn(cache, sub_new, m, active) -> cache``: write them back (no-op
+  rows when ``active`` is false — the warm-up/drain bubble).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def microbatch_slice(
+    tree: PyTree, m, mb: int, *, axis: int = 1, skip: Callable | None = None
+) -> PyTree:
+    """Rows [m*mb, (m+1)*mb) along ``axis`` of every leaf; leaves matching
+    ``skip(path)`` pass through whole (e.g. shared ``index`` counters)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: l
+        if (skip is not None and skip(p))
+        else jax.lax.dynamic_slice_in_dim(l, m * mb, mb, axis=axis),
+        tree,
+    )
+
+
+def microbatch_write(
+    tree: PyTree,
+    new: PyTree,
+    m,
+    mb: int,
+    active,
+    *,
+    axis: int = 1,
+    skip: Callable | None = None,
+) -> PyTree:
+    """Write a microgroup's updated rows back where ``active``; skipped
+    leaves (and the bubble's inactive ticks) keep their old values."""
+
+    def upd(p, full, sub_new):
+        if skip is not None and skip(p):
+            return full
+        old = jax.lax.dynamic_slice_in_dim(full, m * mb, mb, axis=axis)
+        val = jnp.where(active, sub_new, old)
+        return jax.lax.dynamic_update_slice_in_dim(full, val, m * mb, axis=axis)
+
+    return jax.tree_util.tree_map_with_path(upd, tree, new)
+
+
+def rotate(
+    x_groups: jax.Array,
+    cache: PyTree,
+    *,
+    stages: int,
+    apply_fn: Callable[[jax.Array, PyTree], tuple[jax.Array, PyTree]],
+    slice_fn: Callable[[PyTree, jax.Array], PyTree],
+    write_fn: Callable[[PyTree, PyTree, jax.Array, jax.Array], PyTree],
+    axis: str = "data",
+) -> tuple[jax.Array, PyTree]:
+    """Run the full 2S-1-tick GPipe rotation on one stage.
+
+    x_groups: (S, mb, 1, d) — stage 0's embedded microgroups (other stages
+    receive the same array but never inject from it). Returns
+    (xs (S*mb, d) — every microgroup's output, replicated over the stage
+    axis via psum — and the updated stage cache).
+    """
+    s_idx = jax.lax.axis_index(axis)
+
+    def tick(carry, t):
+        x_cur, cache = carry
+        # microgroup handled by this stage at tick t (GPipe rotation)
+        m = t - s_idx
+        active = jnp.logical_and(m >= 0, m < stages)
+        m_c = jnp.clip(m, 0, stages - 1)
+        # stage 0 injects microgroup t from the embedding at tick t
+        inject = jnp.logical_and(s_idx == 0, jnp.logical_and(t >= 0, t < stages))
+        x_in = jax.lax.dynamic_index_in_dim(
+            x_groups, jnp.clip(t, 0, stages - 1), axis=0, keepdims=False
+        )
+        x_cur = jnp.where(inject, x_in, x_cur)
+        sub = slice_fn(cache, m_c)
+        y, sub_new = apply_fn(x_cur, sub)
+        keep = active.astype(x_cur.dtype)
+        x_out = y * keep + x_cur * (1 - keep)
+        cache = write_fn(cache, sub_new, m_c, active)
+        # collect finished microgroups at the last stage BEFORE permuting
+        done = jnp.logical_and(s_idx == stages - 1, active)
+        emit = jnp.where(done, x_out, jnp.zeros_like(x_out))
+        x_next = jax.lax.ppermute(
+            x_out, axis, [(i, (i + 1) % stages) for i in range(stages)]
+        )
+        return (x_next, cache), emit
+
+    # carry becomes stage-varying after the first ppermute: mark it so
+    x0 = jax.lax.pcast(jnp.zeros_like(x_groups[0]), (axis,), to="varying")
+    (_, cache), emits = jax.lax.scan(tick, (x0, cache), jnp.arange(2 * stages - 1))
+    # emits: (2S-1, mb, 1, d); microgroup m finished at tick m + (S-1) on
+    # the last stage. Gather them into (S, mb, d) order.
+    idx = jnp.arange(stages) + stages - 1
+    xs = emits[idx, :, 0, :]  # (S, mb, d)
+    # only the last stage emitted nonzero values: psum replicates them.
+    xs = jax.lax.psum(xs, axis)
+    return xs.reshape(stages * x_groups.shape[1], -1), cache

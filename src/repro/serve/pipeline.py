@@ -1,4 +1,4 @@
-"""Pipeline-parallel decode (EXPERIMENTS §Perf H3).
+"""Pipeline-parallel decode (EXPERIMENTS §Perf H3) — THE entry point.
 
 The baseline serving layout shards weights over BOTH mesh axes (they must
 coexist with the 32k KV cache), so every decoded token re-gathers the full
@@ -8,12 +8,23 @@ This module removes that traffic entirely: the `data` axis becomes a
 PIPELINE axis. Stage s owns layer groups [s*G/S, (s+1)*G/S) — weights and
 cache shards STAY PUT — and activations rotate through stages via
 ``jax.lax.ppermute`` (a few hundred KB per hop). The batch is split into S
-microgroups rotated GPipe-style, so at steady state every stage computes
-every tick; one call advances every sequence in the batch by one token.
+microgroups rotated GPipe-style (the schedule lives in ``serve/gpipe.py``),
+so at steady state every stage computes every tick; one call advances every
+sequence in the batch by one token.
+
+Two variants share that rotation; ``build_pipeline_step(cfg, mesh,
+manual=...)`` is the one documented entry point:
+
+- ``manual=False`` (this module's ``build_pipeline_serve_step``): stage axis
+  manual, tensor parallelism inside a stage left to the auto-partitioner.
+  Simplest, works for any uniform pattern the model zoo lowers.
+- ``manual=True`` (``pipeline_manual.build_manual_pipeline_step``):
+  hand-written megatron TP + per-rank int8 KV-head cache inside a fully
+  manual shard_map — required at 256 devices, where partial-manual GSPMD
+  CHECK-crashes (see pipeline_manual.py).
 
 Constraints: uniform layer pattern (period tiles the stack), num_groups %
 stages == 0, decoder-only (no cross-attention), batch % stages == 0.
-Weights within a stage stay tensor-parallel over `model`.
 """
 
 from __future__ import annotations
@@ -27,8 +38,25 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as TF
+from repro.serve import gpipe
 
 PyTree = Any
+
+
+def build_pipeline_step(cfg: ArchConfig, mesh, *, manual: bool = False, **kw):
+    """One documented entry point for both pipeline-decode variants.
+
+    Returns serve_step(params, token (B,), cache) -> (next_token, cache).
+    ``manual=False`` needs the shardings from ``stage_shardings``;
+    ``manual=True`` needs ``pipeline_manual.init_kv_cache`` /
+    ``param_shardings`` (int8 per-rank KV layout). See module docstring for
+    when each applies.
+    """
+    if manual:
+        from repro.serve import pipeline_manual as PM
+
+        return PM.build_manual_pipeline_step(cfg, mesh, **kw)
+    return build_pipeline_serve_step(cfg, mesh, **kw)
 
 
 def stage_shardings(cfg: ArchConfig, mesh, *, batch: int, kv_quant: bool):
@@ -68,6 +96,11 @@ def stage_shardings(cfg: ArchConfig, mesh, *, batch: int, kv_quant: bool):
     return params, p_sh, c_sh
 
 
+def _is_index(path) -> bool:
+    last = path[-1]
+    return str(getattr(last, "key", last)) == "index"
+
+
 def build_pipeline_serve_step(
     cfg: ArchConfig,
     mesh,
@@ -75,7 +108,7 @@ def build_pipeline_serve_step(
     stages: int | None = None,
     window: int | None = None,
 ):
-    """Returns serve_step(params, token (B,), cache) -> (next_token, cache).
+    """Auto-partitioned-TP variant; prefer ``build_pipeline_step``.
 
     Must be jit'ed with the shardings from ``stage_shardings`` so the
     shard_map receives stage-local blocks.
@@ -85,49 +118,16 @@ def build_pipeline_serve_step(
         raise ValueError(f"{cfg.arch_id}: {cfg.num_groups} groups % {stages} stages != 0")
     if cfg.enc_dec:
         raise ValueError("pipeline decode supports decoder-only models")
-    local_groups = cfg.num_groups // stages
-    other_axes = tuple(a for a in mesh.axis_names if a != "data")
-
-    def _is_index(path) -> bool:
-        last = path[-1]
-        return str(getattr(last, "key", last)) == "index"
 
     def stage_fn(blocks, cache, embed, token):
         """Runs on one stage. blocks/cache: stage-local (G/S, ...) shards;
         embed/final_norm/lm_head replicated over `data` (TP over model
         handled automatically); token: full (B,)."""
-        s_idx = jax.lax.axis_index("data")
         b = token.shape[0]
         mb = b // stages
 
         # Stage 0 embeds its rotation of microgroups; others start with zeros.
         x_groups = embed[token].reshape(stages, mb, 1, -1)  # (S, mb, 1, d)
-
-        tmap = jax.tree_util.tree_map_with_path
-
-        def slice_mb(cache, m):
-            """Batch rows [m*mb, (m+1)*mb) of every (G/S, B, ...) leaf;
-            index leaves pass through (shared across microgroups)."""
-            return tmap(
-                lambda p, l: l
-                if _is_index(p)
-                else jax.lax.dynamic_slice_in_dim(l, m * mb, mb, axis=1),
-                cache,
-            )
-
-        def write_mb(cache, sub_new, m, active):
-            """Write the microgroup's updated KV rows back (only if active);
-            index leaves are NOT advanced here — every microgroup decodes the
-            same position, so the shared index bumps once after all ticks."""
-
-            def upd(p, full, new):
-                if _is_index(p):
-                    return full
-                old = jax.lax.dynamic_slice_in_dim(full, m * mb, mb, axis=1)
-                val = jnp.where(active, new, old)
-                return jax.lax.dynamic_update_slice_in_dim(full, val, m * mb, axis=1)
-
-            return tmap(upd, cache, sub_new)
 
         def apply_local(x, sub):
             def body(x, scanned):
@@ -139,48 +139,23 @@ def build_pipeline_serve_step(
 
             return jax.lax.scan(body, x, {"gp": blocks, "cache": sub})
 
-        def tick(carry, t):
-            x_cur, cache = carry
-            # microgroup handled by this stage at tick t (GPipe rotation)
-            m = t - s_idx
-            active = jnp.logical_and(m >= 0, m < stages)
-            m_c = jnp.clip(m, 0, stages - 1)
-            # stage 0 injects microgroup t from the embedding at tick t
-            inject = jnp.logical_and(s_idx == 0, jnp.logical_and(t >= 0, t < stages))
-            x_in = jax.lax.dynamic_index_in_dim(
-                x_groups, jnp.clip(t, 0, stages - 1), axis=0, keepdims=False
-            )
-            x_cur = jnp.where(inject, x_in, x_cur)
-            sub = slice_mb(cache, m_c)
-            y, sub_new = apply_local(x_cur, sub)
-            keep = active.astype(x_cur.dtype)
-            x_out = y * keep + x_cur * (1 - keep)
-            cache = write_mb(cache, sub_new, m_c, active)
-            # collect finished microgroups at the last stage BEFORE permuting
-            done = jnp.logical_and(s_idx == stages - 1, active)
-            emit = jnp.where(done, x_out, jnp.zeros_like(x_out))
-            x_next = jax.lax.ppermute(
-                x_out, "data", [(i, (i + 1) % stages) for i in range(stages)]
-            )
-            return (x_next, cache), emit
-
-        # carry becomes stage-varying after the first ppermute: mark it so
-        x0 = jax.lax.pcast(jnp.zeros_like(x_groups[0]), ("data",), to="varying")
-        (_, cache), emits = jax.lax.scan(
-            tick, (x0, cache), jnp.arange(2 * stages - 1)
+        # index leaves are shared across microgroups: sliced/written whole-
+        # batch is wrong, so they pass through and bump once per serve_step.
+        xs, cache = gpipe.rotate(
+            x_groups, cache, stages=stages,
+            apply_fn=apply_local,
+            slice_fn=lambda c, m: gpipe.microbatch_slice(c, m, mb, skip=_is_index),
+            write_fn=lambda c, new, m, act: gpipe.microbatch_write(
+                c, new, m, mb, act, skip=_is_index
+            ),
         )
-        # shared position advances once per serve_step
-        cache = tmap(lambda p, l: l + 1 if _is_index(p) else l, cache)
-        # emits: (2S-1, mb, 1, d); microgroup m finished at tick m + (S-1) on
-        # the last stage. Gather them into (S, mb, d) order.
-        idx = jnp.arange(stages) + stages - 1
-        xs = emits[idx, :, 0, :]  # (S, mb, d)
-        # only the last stage emitted nonzero values: psum replicates them.
+        cache = jax.tree_util.tree_map_with_path(
+            lambda p, l: l + 1 if _is_index(p) else l, cache
+        )
         # (final norm + head run OUTSIDE the manual region: a model-sharded
         # matmul inside a partially-manual shard_map trips an XLA partitioner
         # CHECK at 256 devices.)
-        xs = jax.lax.psum(xs, "data")
-        return xs.reshape(b, -1), cache
+        return xs, cache
 
     def serve_step(params, token, cache):
         in_specs = (

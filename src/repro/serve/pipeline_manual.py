@@ -34,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import transformer as TF
+from repro.serve import gpipe
 
 PyTree = Any
 
@@ -167,7 +168,6 @@ def build_manual_pipeline_step(
     def stage_fn(blocks, cache, embed_local, token):
         """Fully manual: blocks/cache local shards, embed_local (V, d/tp),
         token full (B_pod,)."""
-        s_idx = jax.lax.axis_index("data")
         b = token.shape[0]
         mb = b // stages
         pos = cache["index"][0]  # shared absolute position
@@ -188,46 +188,19 @@ def build_manual_pipeline_step(
 
             return jax.lax.scan(body, x, {"lp": blocks, "kv": kv_stage})
 
-        tmap = jax.tree_util.tree_map
-
-        def tick(carry, t):
-            x_cur, kvc = carry  # kvc: local cache {k,v,scales}: (G/S,B,T,hd)
-            m = t - s_idx
-            active = jnp.logical_and(m >= 0, m < stages)
-            m_c = jnp.clip(m, 0, stages - 1)
-            inject = jnp.logical_and(s_idx == 0, t < stages)
-            x_in = jax.lax.dynamic_index_in_dim(x_groups, jnp.clip(t, 0, stages - 1), 0, keepdims=False)
-            x_cur = jnp.where(inject, x_in, x_cur)
-            sub = tmap(lambda l: jax.lax.dynamic_slice_in_dim(l, m_c * mb, mb, axis=1), kvc)
-            y, sub_new = apply_stage(x_cur, sub)
-            keep = active.astype(x_cur.dtype)
-            x_out = y * keep + x_cur * (1 - keep)
-
-            def wb(full, new):
-                old = jax.lax.dynamic_slice_in_dim(full, m_c * mb, mb, axis=1)
-                val = jnp.where(active, new, old)
-                return jax.lax.dynamic_update_slice_in_dim(full, val, m_c * mb, axis=1)
-
-            kvc = tmap(wb, kvc, sub_new)
-            done = jnp.logical_and(s_idx == stages - 1, active)
-            emit = jnp.where(done, x_out, jnp.zeros_like(x_out))
-            x_next = jax.lax.ppermute(
-                x_out, "data", [(i, (i + 1) % stages) for i in range(stages)]
-            )
-            return (x_next, kvc), emit
-
         kv_local = {
             k: cache[k][:, :, :, 0] for k in ("k", "v", "k_scale", "v_scale")
         }
-        x0 = jax.lax.pcast(
-            jnp.zeros_like(x_groups[0]), ("data",), to="varying"
+        # kv_local has no index leaf (shared position bumps below), so the
+        # microbatch slice/write run on every leaf — no skip predicate.
+        xs, kv_local = gpipe.rotate(
+            x_groups, kv_local, stages=stages,
+            apply_fn=apply_stage,
+            slice_fn=lambda c, m: gpipe.microbatch_slice(c, m, mb),
+            write_fn=lambda c, new, m, act: gpipe.microbatch_write(
+                c, new, m, mb, act
+            ),
         )
-        (_, kv_local), emits = jax.lax.scan(
-            tick, (x0, kv_local), jnp.arange(2 * stages - 1)
-        )
-        idx = jnp.arange(stages) + stages - 1
-        xs = emits[idx, :, 0, :]  # (S, mb, d)
-        xs = jax.lax.psum(xs, "data").reshape(b, -1)
         new_cache = {k: kv_local[k][:, :, :, None] for k in kv_local}
         new_cache["index"] = cache["index"] + 1
         return xs, new_cache

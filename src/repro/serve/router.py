@@ -1,0 +1,163 @@
+"""Topology-aware routing: send each query to the cohort node that knows.
+
+The paper's core result is that topology shapes WHERE knowledge ends up —
+hubs absorb G2 (foreign-domain) patterns that leaves never see. At serving
+time that asymmetry is actionable: a query about domain d should go to the
+node whose model best covers d, which after gossip on a star/scale-free
+graph is typically a hub, not the node that owns d's training stream.
+
+``CohortRouter`` loads a trained cohort from the LM trainer's checkpoint
+format (params-only — AdamW moments stay on disk, see
+``ckpt.restore_subtree``), builds a (nodes × domains) coverage table by
+scoring every node's model on every domain's held-out query stream (the
+trainer's ``domain_acc`` quantity: mean true-next-token probability), and
+routes each query to ``argmax_node coverage[node, domain(query)]``. The
+query's domain is classified by token overlap with the per-node domain sets
+(``data/tokens.node_domain`` — pure functions of the data seed, no side
+channel from training).
+
+Routing policies (the ``route=`` knob): ``"best"`` (coverage-table argmax),
+``"round_robin"`` (topology-blind baseline), or an int node id (pinned).
+The serve-eval smoke guards that "best" measurably beats round-robin on
+foreign-domain queries.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import tokens as tok
+from repro.models import transformer as TF
+
+PyTree = Any
+
+
+def stacked_params_like(cfg: ArchConfig, nodes: int) -> PyTree:
+    """ShapeDtypeStruct tree of a node-stacked ((N, ...) leaves) param tree —
+    the ``like`` for a params-only checkpoint restore, built without running
+    a single init FLOP."""
+    per = jax.eval_shape(lambda k: TF.init_params(k, cfg), jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((nodes,) + l.shape, l.dtype), per
+    )
+
+
+def load_cohort(path: str, cfg: ArchConfig, *, nodes: int) -> tuple[PyTree, int | None]:
+    """Load node-stacked params from an ``LMCohortTrainer.save`` checkpoint
+    without materializing the optimizer moments. Returns (params, step)."""
+    from repro.checkpoint import ckpt
+
+    return ckpt.restore_subtree(path, stacked_params_like(cfg, nodes), prefix="params")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _coverage(params: PyTree, cfg: ArchConfig, toks: jax.Array, labels: jax.Array):
+    """(N-stacked params) × (D, B, S) queries -> (N, D) mean true-token
+    probability of node i's model on domain j's query stream."""
+
+    def one(p, tk, lb):
+        logits, _ = TF.forward(p, cfg, tk)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+        return jnp.exp(ll).mean()
+
+    per_node = jax.vmap(lambda p: jax.vmap(functools.partial(one, p))(toks, labels))
+    return per_node(params)
+
+
+class CohortRouter:
+    """Routes queries over a trained cohort's node-stacked params.
+
+    >>> router = CohortRouter.from_checkpoint(path, cfg, nodes=8, seed=0)
+    >>> node = router.route(query_tokens)            # coverage argmax
+    >>> node = router.route(query_tokens, route="round_robin")
+    >>> params_i = router.node_params(node)          # feed Engine / generate
+    """
+
+    def __init__(
+        self,
+        params: PyTree,
+        cfg: ArchConfig,
+        *,
+        seed: int = 0,
+        domain_size: int = 64,
+        coverage_batch: int = 4,
+        coverage_seq: int = 16,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.nodes = int(jax.tree.leaves(params)[0].shape[0])
+        self.seed = seed
+        self.domains = np.stack(
+            [
+                tok.node_domain(i, cfg.vocab_size, seed=seed, domain_size=domain_size)
+                for i in range(self.nodes)
+            ]
+        )  # (N, domain_size) — domain j IS node j's boosted token set
+        qt, ql = zip(
+            *(
+                tok.domain_query_batch(
+                    j, coverage_batch, coverage_seq, cfg.vocab_size,
+                    seed=seed, domain_size=domain_size,
+                )
+                for j in range(self.nodes)
+            )
+        )
+        self.coverage = np.asarray(
+            _coverage(params, cfg, jnp.asarray(np.stack(qt)), jnp.asarray(np.stack(ql)))
+        )  # (N nodes, D domains)
+        self._rr = 0
+
+    @classmethod
+    def from_checkpoint(
+        cls, path: str, cfg: ArchConfig, *, nodes: int, seed: int = 0, **kw
+    ) -> "CohortRouter":
+        params, _ = load_cohort(path, cfg, nodes=nodes)
+        return cls(params, cfg, seed=seed, **kw)
+
+    # -- routing -----------------------------------------------------------
+
+    def classify(self, query) -> int:
+        """Domain id of a query: the node-domain set with the largest token
+        overlap (ties break toward the lower id, deterministically)."""
+        q = np.asarray(query).reshape(-1)
+        hits = (self.domains[:, :, None] == q[None, None, :]).any(axis=1)
+        return int(hits.sum(axis=1).argmax())
+
+    def route(self, query, *, route: str | int = "best", exclude=()) -> int:
+        """Pick the serving node for one query under the given policy.
+
+        ``exclude``: node ids unavailable for this query (offline / busy) —
+        the case where topology-awareness earns its keep: with the domain's
+        owner excluded, "best" falls through to whichever node gossip pushed
+        that domain's knowledge to (on a star, the hub).
+        """
+        excluded = set(int(e) for e in exclude)
+        if len(excluded) >= self.nodes:
+            raise ValueError("every node excluded")
+        if isinstance(route, (int, np.integer)):
+            if not 0 <= route < self.nodes:
+                raise ValueError(f"node id {route} out of range [0, {self.nodes})")
+            return int(route)
+        if route == "round_robin":
+            while True:
+                n, self._rr = self._rr, (self._rr + 1) % self.nodes
+                if n not in excluded:
+                    return n
+        if route == "best":
+            cov = self.coverage[:, self.classify(query)].copy()
+            if excluded:
+                cov[list(excluded)] = -np.inf
+            return int(cov.argmax())
+        raise ValueError(f"route must be 'best', 'round_robin' or a node id, got {route!r}")
+
+    def node_params(self, node: int) -> PyTree:
+        """Single-node param tree (leading N axis sliced off) — what
+        ``Engine`` / ``decode.generate`` consume."""
+        return jax.tree.map(lambda l: l[node], self.params)

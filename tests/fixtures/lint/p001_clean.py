@@ -1,4 +1,6 @@
-"""P001 clean: aligned tiles, plus symbolic dims the rule must not guess at."""
+"""P001 clean: aligned tiles, symbolic dims the rule must not guess at, and
+the flash-prefill 3D (batch, block_q, head_dim) layout — a leading batch dim
+of 1 is NOT a sublane dim and must not fire."""
 
 BLOCK_ROWS = 8
 
@@ -8,4 +10,6 @@ def specs(pl, bd):
         pl.BlockSpec((BLOCK_ROWS, 128), lambda i, j: (i, j)),
         pl.BlockSpec((16, 256), lambda i, j: (i, j)),
         pl.BlockSpec((BLOCK_ROWS, bd), lambda i, j: (i, j)),  # bd unknown
+        pl.BlockSpec((1, 128, 128), lambda b, i: (b, i, 0)),
+        pl.BlockSpec((1, BLOCK_ROWS, 128), lambda b, i: (b, i, 0)),
     ]

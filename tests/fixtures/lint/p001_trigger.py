@@ -1,5 +1,8 @@
 """P001 trigger: BlockSpec block shapes off the TPU (sublane=8, lane=128)
-tile grid — an 8x8 trailing tile and a 1-row sublane block."""
+tile grid — an 8x8 trailing tile, a 1-row sublane block, and a 3D
+flash-prefill-style (batch, block_q, head_dim) tile with a misaligned
+block_q: only the trailing two dims sit on the sublane/lane grid, and the
+rule must still check them behind a leading batch dim."""
 
 BLOCK_ROWS = 8
 
@@ -8,4 +11,5 @@ def specs(pl):
     return [
         pl.BlockSpec((BLOCK_ROWS, BLOCK_ROWS), lambda i, j: (i, j)),
         pl.BlockSpec((1, 256), lambda i, j: (i, j)),
+        pl.BlockSpec((1, 12, 128), lambda b, i: (b, i, 0)),
     ]

@@ -122,3 +122,42 @@ def test_manual_pipeline_matches_decode_subprocess():
     r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, timeout=400)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
+
+
+def test_gpipe_microbatch_slice_and_write():
+    """The shared GPipe helpers are plain JAX — testable without shard_map."""
+    from repro.serve import gpipe
+
+    def is_index(path):
+        last = path[-1]
+        return str(getattr(last, "key", last)) == "index"
+
+    tree = {
+        "k": jnp.arange(24, dtype=jnp.float32).reshape(2, 4, 3),
+        "index": jnp.array([5, 5], jnp.int32),
+    }
+    sub = gpipe.microbatch_slice(tree, 1, 2, skip=is_index)
+    np.testing.assert_array_equal(np.asarray(sub["k"]), np.asarray(tree["k"][:, 2:4]))
+    np.testing.assert_array_equal(np.asarray(sub["index"]), [5, 5])  # passed whole
+
+    new = {"k": jnp.full((2, 2, 3), -1.0), "index": jnp.array([9, 9], jnp.int32)}
+    wrote = gpipe.microbatch_write(tree, new, 1, 2, jnp.asarray(True), skip=is_index)
+    np.testing.assert_array_equal(np.asarray(wrote["k"][:, 2:4]), np.asarray(new["k"]))
+    np.testing.assert_array_equal(np.asarray(wrote["k"][:, :2]), np.asarray(tree["k"][:, :2]))
+    np.testing.assert_array_equal(np.asarray(wrote["index"]), [5, 5])  # skip wins
+
+    # the warm-up/drain bubble: inactive ticks keep the old rows
+    kept = gpipe.microbatch_write(tree, new, 1, 2, jnp.asarray(False), skip=is_index)
+    np.testing.assert_array_equal(np.asarray(kept["k"]), np.asarray(tree["k"]))
+
+
+def test_pipeline_entry_point_dispatch():
+    """build_pipeline_step validates configs for both variants up front."""
+    from repro.serve import pipeline as PL
+
+    cfg = cfgbase.get("whisper_base").reduced()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="decoder-only"):
+        PL.build_pipeline_step(cfg, mesh)
+    with pytest.raises(ValueError, match="dense decoder-only"):
+        PL.build_pipeline_step(cfg, mesh, manual=True)
