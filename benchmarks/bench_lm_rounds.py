@@ -44,6 +44,7 @@ import jax
 import numpy as np
 
 from repro.configs import base as cfgbase
+from repro.core.machine import machine_fingerprint
 from repro.train.trainer import LMCohortTrainer
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_lm_rounds.json")
@@ -153,6 +154,7 @@ def main() -> None:
     out = {
         "bench": "fused vs loop LM cohort rounds/s (benchmarks/bench_lm_rounds.py)",
         "device": str(jax.devices()[0]),
+        "machine": machine_fingerprint(),
         "config": {
             "topology": f"ring:n={N_NODES}",
             "arch": "llama32_1b reduced micro (2L/64d, vocab 256)",

@@ -29,7 +29,10 @@ sparse-row "regression" (2.1x -> 1.4x) found PR-era and current HEAD within
 noise of each other — the historical figure came from a different runner.
 When a row drifts, re-run the OLD commit on the CURRENT machine (git
 worktree) before treating the delta as a code regression; CI floors (2x
-dense/sharded, 1.2x sparse) are set below same-machine variance.
+dense/sharded, 1.2x sparse) are set below same-machine variance. The output
+embeds a ``machine`` fingerprint (platform / CPU count / jax version) so a
+committed re-baseline records where its numbers came from — never hand-edit
+rows; regenerate the whole file with this script.
 
 Run:  PYTHONPATH=src python benchmarks/bench_rounds.py [--rounds 200]
 """
@@ -47,6 +50,7 @@ import jax
 import numpy as np
 
 from repro.core import partition as P
+from repro.core.machine import machine_fingerprint
 from repro.data.loader import NodeLoader
 from repro.data.synthetic import make_mnist_like
 from repro.models.mlp import init_mlp
@@ -190,23 +194,39 @@ def _sharded_worker() -> None:
 
 # The faulted fused row's fault spec: all three clause kinds active so the
 # row pays every mask (per-round renormalization, dead-node where, straggler
-# ring buffer) — the worst case the CI overhead guard (<= 1.3x fault-free)
+# ring buffer) — the worst case the CI overhead guard (<= 1.4x fault-free)
 # is meant to bound.
 FAULT_SPEC = "churn:p_leave=0.05,p_join=0.5;straggler:frac=0.2,delay=3;drop:p_edge=0.1"
 
 
-def bench_faulted(n: int, rounds: int, ds, baseline: dict) -> dict:
+def bench_faulted(n: int, rounds: int, ds) -> dict:
     """Fused dense row under a full fault schedule, vs its fault-free twin.
 
     ``fault_overhead`` = fault-free fused rounds/s over faulted fused
-    rounds/s (>= 1.0 means masking costs throughput; CI guards <= 1.3x).
+    rounds/s (>= 1.0 means masking costs throughput; CI guards <= 1.4x).
+    The two fused rates are measured INTERLEAVED (clean, faulted, clean,
+    ...) rather than reusing the dense row timed minutes earlier: shared
+    runners drift over a multi-minute bench run, and a rate ratio is only
+    meaningful between adjacent measurements (same estimator as the
+    sharded worker's fused/loop interleave).
     """
-    fused_s = _time_run(
-        make_trainer(n, "dense", ds, faults=FAULT_SPEC).run_fused, rounds
-    )
     loop_s = _time_run(
         make_trainer(n, "dense", ds, faults=FAULT_SPEC).run, rounds
     )
+    faulted = make_trainer(n, "dense", ds, faults=FAULT_SPEC)
+    clean = make_trainer(n, "dense", ds)
+    faulted.run_fused(rounds)  # warm-up: pays every compile in each path
+    clean.run_fused(rounds)
+    fused_s = clean_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        clean.run_fused(rounds)
+        jax.block_until_ready(jax.tree.leaves(clean.params))
+        clean_s = min(clean_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        faulted.run_fused(rounds)
+        jax.block_until_ready(jax.tree.leaves(faulted.params))
+        fused_s = min(fused_s, time.perf_counter() - t0)
     a = make_trainer(n, "dense", ds, faults=FAULT_SPEC)
     a.run(rounds)
     b = make_trainer(n, "dense", ds, faults=FAULT_SPEC)
@@ -223,9 +243,7 @@ def bench_faulted(n: int, rounds: int, ds, baseline: dict) -> dict:
         "loop_rounds_per_s": round(rounds / loop_s, 1),
         "fused_rounds_per_s": round(rounds / fused_s, 1),
         "speedup": round(loop_s / fused_s, 2),
-        "fault_overhead": round(
-            baseline["fused_rounds_per_s"] / (rounds / fused_s), 3
-        ),
+        "fault_overhead": round(fused_s / clean_s, 3),
         "max_abs_param_err": err,
     }
     print(
@@ -276,10 +294,9 @@ def main() -> None:
         return
 
     ds = make_mnist_like(train_per_class=200, test_per_class=50, dim=DIM, seed=0)
-    dense_row = bench_one(100, "dense", args.rounds, ds)
     rows = [
         # the acceptance row: N=100 dense at the full round count
-        dense_row,
+        bench_one(100, "dense", args.rounds, ds),
         # informational: the sparse program at larger N, fewer rounds
         bench_one(256, "sparse", max(args.rounds // 2, 10), ds),
         # the Pallas blocked-ELL program (interpret mode on CPU, so small
@@ -289,12 +306,13 @@ def main() -> None:
         # the sharded acceptance row: CI guards >= 2x and err == 0.0
         bench_sharded(),
         # full fault schedule on the dense acceptance config: CI guards
-        # fault_overhead <= 1.3x the fault-free fused rate
-        bench_faulted(100, args.rounds, ds, dense_row),
+        # fault_overhead <= 1.4x the fault-free fused rate
+        bench_faulted(100, args.rounds, ds),
     ]
     out = {
         "bench": "fused vs loop training rounds/s (benchmarks/bench_rounds.py)",
         "device": str(jax.devices()[0]),
+        "machine": machine_fingerprint(),
         "config": {
             "topology": "ba:m=2 (rows with a 'topology' key override it)",
             "dim": DIM, "hidden": list(HIDDEN),

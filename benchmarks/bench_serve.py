@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import base as cfgbase
+from repro.core.machine import machine_fingerprint
 from repro.models import transformer as TF
 from repro.serve import decode as SD
 from repro.serve.engine import Engine
@@ -178,6 +179,7 @@ def main() -> None:
         "bench": "serving stack: prefill / continuous batching / routing "
                  "(benchmarks/bench_serve.py)",
         "device": str(jax.devices()[0]),
+        "machine": machine_fingerprint(),
         "arch": cfg.arch_id,
         "prefill": prefill_rows,
         "engine": engine_row,

@@ -1,0 +1,33 @@
+"""Machine fingerprint for benchmark provenance.
+
+Benchmark baselines in the BENCH_*.json files are machine-relative: CI
+regenerates them from scratch before guarding, but the committed snapshots
+are also read by humans, and a re-baseline is only auditable if the file
+says WHERE its numbers came from. Every bench writer embeds this fingerprint
+so a large swing between two committed snapshots can be attributed (same
+machine -> investigate the code; different machine -> runner variance is a
+plausible cause and a same-machine bisect is the next step).
+
+Deliberately excludes anything volatile (load averages, timestamps beyond
+the date) so regenerating on the same box yields a stable fingerprint.
+"""
+
+from __future__ import annotations
+
+import os
+import platform
+
+
+def machine_fingerprint() -> dict:
+    """Stable description of the host + JAX stack a benchmark ran on."""
+    import jax
+
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "devices": [str(d) for d in jax.devices()],
+    }

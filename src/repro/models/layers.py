@@ -316,6 +316,10 @@ def attention_layer(
         # true-length bookkeeping for right-padded prompts (padded positions
         # land at ring slots >= the written index, which the decode-side
         # kpos reconstruction marks unwritten / future — never attended).
+        # That only holds for S <= T: with S > T padded slots wrap below the
+        # written index and WOULD be attended, so right-padded rows must
+        # never reach this branch with S > T (prefill_forward rejects the
+        # combination; full-length rows with S > T are fine — ring/window).
         t = cache["k"].shape[1]
         pos = jnp.arange(s)
         if spec.use_rope:

@@ -399,7 +399,12 @@ def prefill_forward(
     The cache must be fresh (positions start at 0). Padded positions do get
     K/V entries, but the written ``index`` = true length marks them future /
     unwritten to the decode-side ring reconstruction, so they are never
-    attended (and are progressively overwritten as decoding advances).
+    attended (and are progressively overwritten as decoding advances). That
+    argument needs S <= ring length: with S > ring, padded slots wrap BELOW
+    the written index and decode would attend them as real past tokens, so
+    ``length`` combined with a prompt wider than the attention cache ring
+    raises. (Full-length rows — length=None — may exceed the ring; the
+    prompt then degrades to documented sliding-window semantics.)
     Recurrent mixers (mamba/rwkv) consume the sequence through their chunked
     scan paths, so padding is NOT safe for them — callers must pass exact
     lengths (the serve engine restricts itself to attention-only patterns).
@@ -414,6 +419,23 @@ def prefill_forward(
     flash=True routes every attention layer through the Pallas kernel
     (kernels/flash_attention.py); False uses the pure-JAX reference path.
     """
+    if length is not None:
+        rings = []
+
+        def _ring_len(path, leaf):
+            if str(getattr(path[-1], "key", path[-1])) == "k":
+                rings.append(leaf.shape[-3])  # (..., B, T, Hkv, hd)
+            return leaf
+
+        jax.tree_util.tree_map_with_path(_ring_len, cache)
+        if rings and tokens.shape[1] > min(rings):
+            raise ValueError(
+                f"right-padded prefill (length given) needs padded width <= "
+                f"the attention cache ring ({tokens.shape[1]} > {min(rings)}): "
+                "with S > ring, padded K/V wraps below the written index and "
+                "decode attends it as real past context — shorten the pad "
+                "width or grow the cache"
+            )
     x = params["embed"][tokens]
     window = window if window is not None else (cfg.sliding_window if cfg.always_window else None)
     cross_stack = params.get("cross")

@@ -16,8 +16,11 @@ regardless of arrival order, prompt mix, or completion order.
 Restrictions: attention-only patterns (``engine_ok``). Recurrent mixers
 (mamba/rwkv) carry prompt state through their scan paths, where right-padded
 admission would corrupt the recurrent state; the ring-buffer attention cache
-is provably padding-safe (padded ring slots sit at positions >= the written
-``index`` and are never attended).
+is padding-safe as long as the padded width never exceeds the ring length
+(padded ring slots then sit at positions >= the written ``index`` and are
+never attended) — ``submit`` rejects prompts longer than ``cache_len`` and
+admission caps the pad bucket at ``cache_len``, so the safe regime is the
+only one the engine can enter.
 """
 
 from __future__ import annotations
@@ -140,12 +143,30 @@ class Engine:
 
     def submit(self, prompt, *, max_new: int) -> int:
         """Queue a prompt; returns the request id. Non-blocking — the request
-        is admitted into a slot by the next ``step`` with capacity."""
+        is admitted into a slot by the next ``step`` with capacity.
+
+        The prompt must fit the cache: admission pads it (never past
+        ``cache_len``) and prefills the padded row into the ring, which is
+        only padding-safe while padded width <= ring length — overflow would
+        wrap padded K/V below the written index, where decode attends it as
+        real context (silent corruption). Longer prompts need a bigger
+        ``cache_len``. Generation PAST ``cache_len`` (prompt + max_new >
+        cache_len) is safe but degrades to ring/window semantics: the oldest
+        tokens are overwritten and fall out of the attention span.
+        """
         rid = self._next_rid
         self._next_rid += 1
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
+        if prompt.size > self.cache_len:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens does not fit "
+                f"cache_len={self.cache_len}: padded prefill into the ring "
+                "would silently drop prompt tokens and attend padding as "
+                "real context — raise cache_len to at least the longest "
+                "prompt"
+            )
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
         self._pending.append((rid, prompt, max_new))
@@ -157,7 +178,11 @@ class Engine:
             rid, prompt, max_new = self._pending.popleft()
             slot = self._free.popleft()
             n = int(prompt.size)
-            padded = np.zeros((1, _bucket(n)), np.int32)
+            # Cap the pow2 bucket at cache_len: submit() guarantees
+            # n <= cache_len, but the bucket above n can overshoot a
+            # non-power-of-two cache_len, and padded width must never
+            # exceed the ring (prefill_forward rejects that combination).
+            padded = np.zeros((1, min(_bucket(n), self.cache_len)), np.int32)
             padded[0, :n] = prompt
             row = TF.init_cache(self.cfg, 1, self.cache_len, per_slot=True)
             logits, row = SD.prefill(

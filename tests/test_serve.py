@@ -144,6 +144,25 @@ def test_prefill_vector_length_requires_per_slot_cache():
         )
 
 
+def test_prefill_padded_overflow_raises():
+    """Right-padded rows + prompt wider than the ring is the one combination
+    the ring contract cannot survive (padded slots would wrap below the
+    written index and be attended as real context) — it must raise, not
+    silently corrupt. Padding alone and overflow alone are each covered
+    above (test_prefill_padded_lengths_per_slot,
+    test_prompt_longer_than_cache_window)."""
+    cfg = cfgbase.get("llama32_1b").reduced()
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    ring = 16
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab_size)
+    cache = TF.init_cache(cfg, 2, ring, per_slot=True)
+    with pytest.raises(ValueError, match="padded"):
+        SD.prefill(
+            params, cfg, prompt, cache,
+            length=jnp.array([20, 24], jnp.int32), flash=False,
+        )
+
+
 def test_cache_len_for_clamps_to_seq():
     cfg = cfgbase.get("llama32_1b")
     # window policy clamps BOTH ways: never longer than the window, never
@@ -256,6 +275,43 @@ def test_engine_rejects_recurrent_patterns():
     params = TF.init_params(jax.random.PRNGKey(0), cfg)
     with pytest.raises(ValueError, match="attention-only"):
         Engine(params, cfg, slots=2, cache_len=16)
+
+
+def test_engine_rejects_prompt_longer_than_cache():
+    """A prompt that cannot fit the slot cache must be refused at submit():
+    admitting it would pad past the ring and silently corrupt the output."""
+    from repro.serve.engine import Engine
+
+    cfg = cfgbase.get("llama32_1b").reduced()
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, slots=2, cache_len=16, flash=False)
+    with pytest.raises(ValueError, match="cache_len"):
+        eng.submit(list(range(1, 18)), max_new=2)
+    ok = eng.submit(list(range(1, 17)), max_new=2)  # exactly cache_len fits
+    assert eng.run()[ok].shape == (2,)
+
+
+def test_engine_non_pow2_cache_len_token_identical():
+    """cache_len=24 (not a power of two): the pow2 pad bucket above a
+    20-token prompt overshoots the ring, so admission must cap the pad at
+    cache_len — and still match sequential generate exactly."""
+    from repro.serve.engine import Engine
+
+    cfg = cfgbase.get("llama32_1b").reduced()
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    cache_len = 24
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(4), (20,), 0, cfg.vocab_size),
+        np.int32,
+    )
+    eng = Engine(params, cfg, slots=2, cache_len=cache_len, flash=False)
+    rid = eng.submit(prompt, max_new=4)
+    out = eng.run()
+    want = SD.generate(
+        params, cfg, jnp.asarray(prompt)[None],
+        TF.init_cache(cfg, 1, cache_len), steps=4, key=jax.random.PRNGKey(0),
+    )
+    np.testing.assert_array_equal(out[rid], np.asarray(want)[0])
 
 
 def test_engine_sampled_smoke():
